@@ -1,0 +1,69 @@
+"""Scheduler micro-benchmarks: decision latency (us/call) vs queue depth.
+
+The paper's constraint: action durations go down to ~1 ms, so the
+scheduling window is tiny; Table 1 attributes <3% overhead to the
+system.  This harness measures the Python control-plane directly.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from benchmarks.common import emit
+from repro.core.action import Action, AmdahlElasticity, ResourceRequest, fixed
+from repro.core.cluster import CpuNodeSpec
+from repro.core.managers.cpu import CpuManager
+from repro.core.scheduler import ElasticScheduler
+
+
+def _mk_waiting(n: int, scalable_frac: float = 0.3):
+    out = []
+    for i in range(n):
+        if i % max(1, int(1 / max(scalable_frac, 1e-9))) == 0:
+            out.append(
+                Action(
+                    name="reward",
+                    cost={"cpu": ResourceRequest("cpu", (1, 2, 4, 8, 16, 32))},
+                    key_resource="cpu",
+                    elasticity=AmdahlElasticity(0.05),
+                    base_duration=10.0 + i,
+                    trajectory_id=f"t{i}",
+                )
+            )
+        else:
+            out.append(
+                Action(name="tool", cost={"cpu": fixed("cpu", 1)},
+                       base_duration=1.0, trajectory_id=f"t{i}")
+            )
+    return out
+
+
+def run(scale: float = 1.0) -> List[Dict[str, object]]:
+    rows = []
+    for depth in (1, 2, 3):
+        for n in (8, 32, 128):
+            mgr = {"cpu": CpuManager([CpuNodeSpec("n0", cores=256)])}
+            sched = ElasticScheduler(depth=depth)
+            waiting = _mk_waiting(n)
+            iters = max(3, int(30 * scale))
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                sched.schedule(waiting, [], mgr, 0.0)
+            us = (time.perf_counter() - t0) / iters * 1e6
+            rows.append(
+                {
+                    "name": f"schedule_depth{depth}_queue{n}",
+                    "us_per_call": us,
+                    "derived": f"depth={depth};queue={n}",
+                }
+            )
+    return rows
+
+
+def main(scale: float = 1.0) -> None:
+    emit(run(scale), "scheduler decision latency")
+
+
+if __name__ == "__main__":
+    main()

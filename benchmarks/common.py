@@ -1,0 +1,37 @@
+"""Shared helpers for the paper-figure benchmark harnesses."""
+
+from __future__ import annotations
+
+import csv
+import io
+import sys
+import time
+from typing import Dict, Iterable, List
+
+
+def emit(rows: Iterable[Dict[str, object]], header: str) -> None:
+    """Print a CSV block (``name,us_per_call,derived`` style per brief)."""
+    print(f"# {header}")
+    rows = list(rows)
+    if not rows:
+        return
+    keys = list(rows[0].keys())
+    print(",".join(keys))
+    for r in rows:
+        print(",".join(_fmt(r[k]) for k in keys))
+    sys.stdout.flush()
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.perf_counter() - self.t0

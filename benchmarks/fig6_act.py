@@ -1,0 +1,66 @@
+"""Paper Fig. 6: average ACT over time windows + RL step durations,
+ARL-Tangram vs workload-specific baselines, for AI-Coding / DeepSearch /
+MOPD / MOPD+Search.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.common import emit
+from repro.core.cluster import paper_testbed
+from repro.rl.driver import run_baseline_step, run_tangram_step
+from repro.rl.tasks import (
+    make_coding_workload,
+    make_deepsearch_workload,
+    make_mopd_workload,
+)
+
+BATCHES = {"coding": 1280, "deepsearch": 512, "mopd": 512}
+
+
+def _workload(name: str, scale: float = 1.0):
+    if name == "coding":
+        return make_coding_workload(int(BATCHES["coding"] * scale), arrival_spread_s=60)
+    if name == "deepsearch":
+        return make_deepsearch_workload(int(BATCHES["deepsearch"] * scale), arrival_spread_s=30)
+    if name == "mopd":
+        return make_mopd_workload(int(BATCHES["mopd"] * scale), arrival_spread_s=20)
+    if name == "mopd+search":
+        return make_mopd_workload(
+            int(BATCHES["mopd"] * scale / 2), arrival_spread_s=20
+        ) + make_deepsearch_workload(int(BATCHES["deepsearch"] * scale / 2), arrival_spread_s=20)
+    raise KeyError(name)
+
+
+def run(scale: float = 1.0) -> List[Dict[str, object]]:
+    cluster = paper_testbed()
+    rows = []
+    for name in ("coding", "deepsearch", "mopd", "mopd+search"):
+        trajs = _workload(name, scale)
+        tg_stats, tg = run_tangram_step(trajs, cluster)
+        bl_stats, _ = run_baseline_step(trajs, cluster)
+        timeline = tg.telemetry.act_timeline(window=max(1.0, tg_stats.step_duration / 8))
+        rows.append(
+            {
+                "workload": name,
+                "tangram_mean_act_s": tg_stats.mean_act,
+                "baseline_mean_act_s": bl_stats.mean_act,
+                "act_improvement_x": bl_stats.mean_act / tg_stats.mean_act,
+                "tangram_step_s": tg_stats.step_duration,
+                "baseline_step_s": bl_stats.step_duration,
+                "step_speedup_x": bl_stats.step_duration / tg_stats.step_duration,
+                "tangram_fail": tg_stats.failure_rate,
+                "baseline_fail": bl_stats.failure_rate,
+                "act_windows": len(timeline),
+            }
+        )
+    return rows
+
+
+def main(scale: float = 1.0) -> None:
+    emit(run(scale), "fig6: ACT + step duration, Tangram vs baselines")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Paper Fig. 7: per-stage trajectory-duration breakdown (generation /
+tool invocation / reward), normalized to ARL-Tangram's total.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.common import emit
+from repro.core.cluster import paper_testbed
+from repro.rl.driver import run_baseline_step, run_tangram_step
+from repro.rl.tasks import make_coding_workload, make_deepsearch_workload, make_mopd_workload
+
+
+def run(scale: float = 1.0) -> List[Dict[str, object]]:
+    cluster = paper_testbed()
+    rows = []
+    for name, make, n in (
+        ("coding", make_coding_workload, 640),
+        ("deepsearch", make_deepsearch_workload, 256),
+        ("mopd", make_mopd_workload, 256),
+    ):
+        trajs = make(int(n * scale), arrival_spread_s=30)
+        tg_stats, _ = run_tangram_step(trajs, cluster)
+        bl_stats, _ = run_baseline_step(trajs, cluster)
+        total_tg = sum(tg_stats.stage_durations.values()) or 1.0
+        for system, st in (("tangram", tg_stats), ("baseline", bl_stats)):
+            rows.append(
+                {
+                    "workload": name,
+                    "system": system,
+                    "gen_norm": st.stage_durations["gen"] / total_tg,
+                    "tool_norm": st.stage_durations["tool"] / total_tg,
+                    "reward_norm": st.stage_durations["reward"] / total_tg,
+                    "tool_speedup_x": (
+                        bl_stats.stage_durations["tool"]
+                        / max(1e-9, tg_stats.stage_durations["tool"])
+                    ),
+                    "reward_speedup_x": (
+                        bl_stats.stage_durations["reward"]
+                        / max(1e-9, tg_stats.stage_durations["reward"])
+                    ),
+                }
+            )
+    return rows
+
+
+def main(scale: float = 1.0) -> None:
+    emit(run(scale), "fig7: stage breakdown (normalized to Tangram total)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Paper Fig. 9: elastic scheduling ablation — dynamic DoP (Alg. 1) vs
+fixed DoP=4 / DoP=16 on the coding reward trace.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+from benchmarks.common import emit
+from repro.core.action import ResourceRequest
+from repro.core.cluster import paper_testbed
+from repro.rl.driver import run_tangram_step
+from repro.rl.tasks import make_coding_workload
+
+
+def _fix_dop(trajs, dop: int):
+    """Clamp every scalable action to a single fixed DoP."""
+    out = []
+    for spec in trajs:
+        new_reward = []
+        for tmpl in spec.reward:
+            orig_build = tmpl.build
+
+            def build(task_id, traj_id, _orig=orig_build, _dop=dop):
+                a = _orig(task_id, traj_id)
+                if a.key_resource == "cpu":
+                    a.cost["cpu"] = ResourceRequest("cpu", (_dop,))
+                return a
+
+            new_reward.append(dataclasses.replace(tmpl, build=build))
+        out.append(dataclasses.replace(spec, reward=new_reward))
+    return out
+
+
+def run(scale: float = 1.0) -> List[Dict[str, object]]:
+    rows = []
+    for batch, cores_per_node in ((256, 256), (1280, 256), (1280, 128)):
+        cluster = paper_testbed(cpu_nodes=5, cores_per_node=cores_per_node, gpu_nodes=1)
+        trajs = make_coding_workload(int(batch * scale), arrival_spread_s=30)
+        elastic, _ = run_tangram_step(trajs, cluster)
+        fixed4, _ = run_tangram_step(_fix_dop(trajs, 4), cluster)
+        fixed16, _ = run_tangram_step(_fix_dop(trajs, 16), cluster)
+        rows.append(
+            {
+                "batch": batch,
+                "cores": cores_per_node * 5,
+                "elastic_act_s": elastic.mean_act,
+                "dop4_act_s": fixed4.mean_act,
+                "dop16_act_s": fixed16.mean_act,
+                "vs_dop4_x": fixed4.mean_act / elastic.mean_act,
+                "vs_dop16_x": fixed16.mean_act / elastic.mean_act,
+            }
+        )
+    return rows
+
+
+def main(scale: float = 1.0) -> None:
+    emit(run(scale), "fig9: elastic vs fixed DoP (coding reward trace)")
+
+
+if __name__ == "__main__":
+    main()

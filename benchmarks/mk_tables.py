@@ -1,0 +1,72 @@
+"""Emit the EXPERIMENTS.md markdown tables from results/dryrun artifacts.
+
+Usage: PYTHONPATH=src python -m benchmarks.mk_tables [tag]
+"""
+
+import glob
+import json
+import os
+import sys
+
+DIR = "results/dryrun"
+
+
+def rows(mesh_suffix):
+    out = []
+    for path in sorted(glob.glob(os.path.join(DIR, f"*_{mesh_suffix}.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def fmt_s(x):
+    return f"{x:.4f}" if x < 10 else f"{x:.1f}"
+
+
+def roofline_table(mesh_suffix):
+    print("| arch | shape | compute s | memory s | collective s | dominant |"
+          " 6ND/HLO | state GB/dev |")
+    print("|---|---|---:|---:|---:|---|---:|---:|")
+    for r in rows(mesh_suffix):
+        if not r.get("ok"):
+            print(f"| {r['arch']} | {r['shape']} | - | - | - | ERROR | - | - |")
+            continue
+        rf = r["roofline"]
+        mfr = rf.get("model_flops_ratio")
+        mfr_s = f"{mfr:.3f}" if mfr is not None else "n/a"
+        print(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(rf['compute_s'])} |"
+            f" {fmt_s(rf['memory_s'])} | {fmt_s(rf['collective_s'])} |"
+            f" {rf['dominant']} | {mfr_s} |"
+            f" {r.get('state_bytes_per_dev', 0)/1e9:.2f} |"
+        )
+
+
+def dryrun_table(mesh_suffix):
+    print("| arch | shape | mesh | fsdp | lower s | compile s | "
+          "arg GB/dev | temp GB/dev | collectives |")
+    print("|---|---|---|---|---:|---:|---:|---:|---:|")
+    for r in rows(mesh_suffix):
+        if not r.get("ok"):
+            print(f"| {r['arch']} | {r['shape']} | {r.get('mesh','?')} |"
+                  f" - | - | - | - | - | ERROR: {r.get('error','')[:60]} |")
+            continue
+        ma = r.get("memory_analysis", {})
+        col = r.get("collectives", {})
+        ncol = int(col.get("count", 0))
+        print(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['fsdp']} |"
+            f" {r['lower_s']:.1f} | {r['compile_s']:.1f} |"
+            f" {ma.get('argument_size_in_bytes', 0)/1e9:.2f} |"
+            f" {ma.get('temp_size_in_bytes', 0)/1e9:.2f} |"
+            f" {ncol} |"
+        )
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "single"
+    mode = sys.argv[2] if len(sys.argv) > 2 else "roofline"
+    if mode == "roofline":
+        roofline_table(which)
+    else:
+        dryrun_table(which)

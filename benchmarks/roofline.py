@@ -1,0 +1,77 @@
+"""§Roofline: collate the dry-run JSONs into the per-(arch x shape)
+roofline table (terms in seconds, dominant bottleneck, 6ND ratio).
+
+Reads results/dryrun/*.json produced by ``repro.launch.dryrun``; does NOT
+itself touch jax (so it can run inside benchmarks with 1 device).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from benchmarks.common import emit
+
+RESULTS_DIR = os.environ.get("DRYRUN_DIR", "results/dryrun")
+
+
+def load_records(mesh: str = "single") -> List[Dict[str, object]]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, f"*_{mesh}.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if not rec.get("ok"):
+            rows.append(
+                {
+                    "arch": rec.get("arch"),
+                    "shape": rec.get("shape"),
+                    "ok": False,
+                    "compute_ms": float("nan"),
+                    "memory_ms": float("nan"),
+                    "collective_ms": float("nan"),
+                    "dominant": "ERROR",
+                    "model_flops_ratio": float("nan"),
+                    "state_gb_per_dev": float("nan"),
+                }
+            )
+            continue
+        r = rec["roofline"]
+        rows.append(
+            {
+                "arch": rec["arch"],
+                "shape": rec["shape"],
+                "ok": True,
+                "compute_ms": 1e3 * r["compute_s"],
+                "memory_ms": 1e3 * r["memory_s"],
+                "collective_ms": 1e3 * r["collective_s"],
+                "dominant": r["dominant"],
+                "model_flops_ratio": r.get("model_flops_ratio") or float("nan"),
+                "state_gb_per_dev": rec.get("state_bytes_per_dev", 0) / 1e9,
+            }
+        )
+    return rows
+
+
+def main(scale: float = 1.0) -> None:
+    rows = load_records("single")
+    if rows:
+        emit(rows, "roofline: per (arch x shape) on 16x16 (from dry-run artifacts)")
+    else:
+        print("# roofline: no dry-run artifacts found (run repro.launch.dryrun --all)")
+    multi = load_records("multi")
+    if multi:
+        ok = sum(1 for r in multi if r["ok"])
+        print(f"# multi-pod (2x16x16): {ok}/{len(multi)} combinations compile OK")
+    opt = load_records("single_opt")
+    if opt:
+        emit(opt, "roofline (post-hillclimb, tag=opt): per (arch x shape) on 16x16")
+        mopt = load_records("multi_opt")
+        if mopt:
+            ok = sum(1 for r in mopt if r["ok"])
+            print(f"# multi-pod post-hillclimb: {ok}/{len(mopt)} combinations compile OK")
+
+
+if __name__ == "__main__":
+    main()

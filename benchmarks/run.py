@@ -1,0 +1,53 @@
+"""Benchmark entry point: one harness per paper table/figure.
+
+``python -m benchmarks.run [--scale 0.25] [--only fig6,...]``
+
+Prints CSV blocks per harness; the roofline block reads the dry-run
+artifacts under results/dryrun (produce them with
+``python -m repro.launch.dryrun --all --mesh both``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=1.0,
+                    help="workload scale factor (CI smoke: 0.1)")
+    ap.add_argument("--only", default=None, help="comma list of harness names")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        bench_scheduler,
+        fig6_act,
+        fig7_breakdown,
+        fig8_scalability,
+        fig9_elastic,
+        roofline,
+        table1_overhead,
+    )
+
+    harnesses = {
+        "fig6": fig6_act.main,
+        "fig7": fig7_breakdown.main,
+        "fig8": fig8_scalability.main,
+        "fig9": fig9_elastic.main,
+        "table1": table1_overhead.main,
+        "scheduler": bench_scheduler.main,
+        "roofline": roofline.main,
+    }
+    only = set(args.only.split(",")) if args.only else None
+    for name, fn in harnesses.items():
+        if only and name not in only:
+            continue
+        t0 = time.perf_counter()
+        fn(args.scale)
+        print(f"# [{name}] done in {time.perf_counter()-t0:.1f}s\n", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Paper Table 1: ACT breakdown — execution / queueing / system overhead
+for Coding (CPU-intensive) and MOPD (GPU-intensive) at two batch sizes.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.common import emit
+from repro.core.cluster import paper_testbed
+from repro.rl.driver import run_tangram_step
+from repro.rl.tasks import make_coding_workload, make_mopd_workload
+
+
+def run(scale: float = 1.0) -> List[Dict[str, object]]:
+    rows = []
+    for name, make, batches in (
+        ("coding", make_coding_workload, (1280, 1536)),
+        ("mopd", make_mopd_workload, (512, 1024)),
+    ):
+        for batch in batches:
+            cluster = paper_testbed()
+            trajs = make(int(batch * scale), arrival_spread_s=30)
+            stats, tg = run_tangram_step(trajs, cluster)
+            b = stats.breakdown
+            rows.append(
+                {
+                    "workload": name,
+                    "batch": batch,
+                    "exec_s": b["exec"],
+                    "queue_s": b["queue"],
+                    "sys_overhead_s": b["overhead"],
+                    "overhead_pct_of_exec": 100.0 * b["overhead"] / max(1e-9, b["exec"]),
+                    "sched_us_per_invocation": 1e6
+                    * tg.telemetry.sched_wall_s
+                    / max(1, tg.telemetry.sched_invocations),
+                }
+            )
+    return rows
+
+
+def main(scale: float = 1.0) -> None:
+    emit(run(scale), "table1: ACT breakdown (exec / queue / sys overhead)")
+
+
+if __name__ == "__main__":
+    main()

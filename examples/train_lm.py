@@ -1,0 +1,78 @@
+"""End-to-end driver: pre-train a ~100M-class llama-family model on the
+synthetic Markov stream for a few hundred steps (CPU-friendly sizes).
+
+The model is the smollm-360m architecture at width 512 (same family,
+~65M params with the tied 49k vocab) — the "~100M model, few hundred
+steps" end-to-end deliverable.  Loss must fall from ~ln(V) toward the
+stream's entropy floor ln(branching).
+
+Run: PYTHONPATH=src python examples/train_lm.py --steps 300
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.training import (
+    AdamWConfig,
+    DataConfig,
+    MarkovTextStream,
+    init_train_state,
+    make_train_step,
+    save_checkpoint,
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt", default="results/train_lm.npz")
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(
+        get_config("smollm-360m"),
+        num_layers=12,
+        d_model=512,
+        num_heads=8,
+        num_kv_heads=4,
+        head_dim=64,
+        d_ff=1536,
+        dtype="float32",
+        name="smollm-100m-class",
+    )
+    api = build_model(cfg)
+    print(f"model: {cfg.name}  params={api.param_count()/1e6:.1f}M")
+
+    state = init_train_state(api, jax.random.PRNGKey(0))
+    opt = AdamWConfig(lr=6e-4, warmup_steps=20, total_steps=args.steps)
+    step = jax.jit(make_train_step(api, opt))
+    data = MarkovTextStream(
+        DataConfig(cfg.vocab_size, args.seq, args.batch, seed=0, branching=4,
+                   active_vocab=2048)
+    )
+    floor = data.entropy_floor()
+
+    t0 = time.time()
+    for i, batch in zip(range(args.steps), data):
+        state, m = step(state, {"tokens": jnp.asarray(batch["tokens"][:, : args.seq])})
+        if i % 10 == 0 or i == args.steps - 1:
+            print(
+                f"step {i:4d}  loss {float(m['loss']):.3f}  "
+                f"(floor {floor:.3f})  lr {float(m['lr']):.2e}  "
+                f"gnorm {float(m['grad_norm']):.2f}  "
+                f"{(time.time()-t0)/(i+1):.2f}s/step",
+                flush=True,
+            )
+    save_checkpoint(args.ckpt, state.params, step=args.steps)
+    print(f"saved {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+from repro.configs.base import (
+    INPUT_SHAPES,
+    InputShape,
+    ModelConfig,
+    all_configs,
+    get_config,
+    register,
+)
+
+__all__ = [
+    "INPUT_SHAPES",
+    "InputShape",
+    "ModelConfig",
+    "all_configs",
+    "get_config",
+    "register",
+]

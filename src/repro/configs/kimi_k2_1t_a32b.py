@@ -1,0 +1,27 @@
+"""kimi-k2-1t-a32b [arXiv:2501.kimi2] — trillion-param MoE (paper-table).
+
+61L d_model=7168 64H (GQA kv=8) per-expert d_ff=2048 vocab=163840,
+MoE 384 experts top-8.
+"""
+
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="kimi-k2-1t-a32b",
+        family="moe",
+        num_layers=61,
+        d_model=7168,
+        num_heads=64,
+        num_kv_heads=8,
+        d_ff=2048,
+        expert_d_ff=2048,
+        num_experts=384,
+        experts_per_token=8,
+        vocab_size=163840,
+        capacity_factor=1.0,  # trillion-scale: tight capacity keeps the
+        # dispatch buffer within HBM (EXPERIMENTS.md §Perf discusses this)
+        rope_theta=50_000.0,
+        source="arXiv:2501.kimi2",
+    )
+)

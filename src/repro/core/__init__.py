@@ -1,0 +1,70 @@
+"""ARL-Tangram core: action-level external-resource orchestration.
+
+The paper's contribution, as a composable library:
+
+* :mod:`repro.core.action`     — unified action formulation (§4.1)
+* :mod:`repro.core.scheduler`  — elastic scheduling, Algorithms 1-2 (§4.2)
+* :mod:`repro.core.dparrange`  — topology-agnostic DPArrange, Alg. 3-4 (App. B)
+* :mod:`repro.core.managers`   — Basic / CPU(AOE) / GPU(EOE) managers (§5)
+* :mod:`repro.core.tangram`    — the system facade (§3)
+* :mod:`repro.core.baselines`  — k8s / SGLang / ServerlessLLM baselines (§6.1)
+* :mod:`repro.core.simulator`  — discrete-event engine
+"""
+
+from repro.core.action import (
+    Action,
+    AmdahlElasticity,
+    DurationHistory,
+    Elasticity,
+    LinearElasticity,
+    ResourceRequest,
+    TableElasticity,
+    fixed,
+    powers_of_two,
+    ranged,
+)
+from repro.core.cluster import ClusterSpec, paper_testbed, tpu_reward_pool
+from repro.core.dparrange import (
+    BasicDPOperator,
+    DPTask,
+    GpuChunkDPOperator,
+    brute_force_arrange,
+    dp_arrange,
+)
+from repro.core.managers import BasicResourceManager, CpuManager, GpuManager
+from repro.core.managers.gpu import ChunkAllocator, ServiceSpec
+from repro.core.scheduler import ElasticScheduler
+from repro.core.simulator import EventLoop, SimClock
+from repro.core.tangram import Tangram
+from repro.core.telemetry import Telemetry
+
+__all__ = [
+    "Action",
+    "AmdahlElasticity",
+    "BasicDPOperator",
+    "BasicResourceManager",
+    "ChunkAllocator",
+    "ClusterSpec",
+    "CpuManager",
+    "DPTask",
+    "DurationHistory",
+    "Elasticity",
+    "ElasticScheduler",
+    "EventLoop",
+    "GpuChunkDPOperator",
+    "GpuManager",
+    "LinearElasticity",
+    "ResourceRequest",
+    "ServiceSpec",
+    "SimClock",
+    "Tangram",
+    "TableElasticity",
+    "Telemetry",
+    "brute_force_arrange",
+    "dp_arrange",
+    "fixed",
+    "paper_testbed",
+    "powers_of_two",
+    "ranged",
+    "tpu_reward_pool",
+]

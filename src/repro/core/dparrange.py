@@ -1,0 +1,352 @@
+"""Topology-agnostic DPArrange (paper Appendix B, Algorithms 3 & 4).
+
+Given a set of *scalable* candidate actions, their supported unit sets
+``S_i`` and per-allocation durations ``T_i(k)``, DPArrange finds the
+discrete allocation minimizing the total execution time subject to the
+resource's **topology**, abstracted behind a DP *operator* providing
+``Start / End / Prev / IsValid`` primitives:
+
+* :class:`BasicDPOperator` — fungible units (CPU cores within a node,
+  concurrency slots): state = units consumed so far.
+* :class:`GpuChunkDPOperator` — power-of-two chunk topology (paper
+  Algorithm 4): state = mixed-radix-encoded counts of consumed chunks of
+  sizes {1, 2, 4, 8}; ``Prev`` greedily decomposes an allocation into
+  chunks from largest to smallest.  Where the paper bounds states by
+  fixed maximum chunk counts ``(N1, N2, N4, N8)``, we additionally accept
+  an exact feasibility callback from the chunk allocator (buddy-splitting
+  aware) — the operator interface the paper prescribes, with a sharper
+  validity test.  The same operator serves the TPU-slice adaptation
+  (ICI-contiguous 1/2/4/8-chip slices), demonstrating topology-agnosticism.
+
+Deviation note: Algorithm 3 line 25 returns ``dp[m][n]`` (exactly-n
+consumption).  With discrete unit sets an exact-n composition may not
+exist (e.g. sets {1,4}x2, n=7), so we return the best *feasible* final
+state ``argmin_j dp[m][j]`` — identical when exact-n is feasible, and
+well-defined otherwise.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import lru_cache
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+INF = math.inf
+
+
+@dataclass(frozen=True)
+class DPTask:
+    """One scalable candidate: supported unit set + duration model."""
+
+    name: str
+    units: Tuple[int, ...]  # S_i, sorted ascending
+    durations: Tuple[float, ...]  # T_i(k) for each k in units
+
+
+class DPOperator:
+    """Paper's "Basic DP Operator" interface (Algorithm 3 requirements)."""
+
+    def start(self, unit_sets: Sequence[Tuple[int, ...]]) -> int:
+        raise NotImplementedError
+
+    def end(self, unit_sets: Sequence[Tuple[int, ...]]) -> int:
+        """Largest state index worth visiting."""
+        raise NotImplementedError
+
+    def prev(self, j: int, k: int) -> Optional[int]:
+        """Predecessor state before allocating ``k`` units; None if invalid."""
+        raise NotImplementedError
+
+    def is_valid(self, j: int) -> bool:
+        raise NotImplementedError
+
+
+class BasicDPOperator(DPOperator):
+    """Fungible-unit topology: state ``j`` = units consumed so far."""
+
+    def __init__(self, total_units: int) -> None:
+        self.total_units = int(total_units)
+
+    def start(self, unit_sets: Sequence[Tuple[int, ...]]) -> int:
+        return sum(min(s) for s in unit_sets)
+
+    def end(self, unit_sets: Sequence[Tuple[int, ...]]) -> int:
+        return min(self.total_units, sum(max(s) for s in unit_sets))
+
+    def prev(self, j: int, k: int) -> Optional[int]:
+        p = j - k
+        return p if p >= 0 else None
+
+    def is_valid(self, j: int) -> bool:
+        return 0 <= j <= self.total_units
+
+
+class GpuChunkDPOperator(DPOperator):
+    """Paper Algorithm 4: chunk-count states over sizes {1, 2, 4, 8}.
+
+    State ``(a, b, c, d)`` counts *consumed* chunks of sizes 1/2/4/8,
+    linearized with mixed-radix encoding (collision-free, finite).
+    ``feasible`` — supplied by the chunk allocator — answers whether the
+    current free-chunk configuration can yield that consumption multiset
+    (buddy splitting allowed).
+    """
+
+    SIZES = (1, 2, 4, 8)
+
+    def __init__(
+        self,
+        max_counts: Tuple[int, int, int, int],
+        feasible: Optional[Callable[[Tuple[int, int, int, int]], bool]] = None,
+        total_devices: Optional[int] = None,
+    ) -> None:
+        self.max_counts = tuple(int(n) for n in max_counts)
+        self._radix = tuple(n + 1 for n in self.max_counts)
+        self.total_devices = total_devices
+        self._feasible = feasible
+        # memoize feasibility — the DP revisits states heavily
+        if feasible is not None:
+            self._feasible = lru_cache(maxsize=None)(feasible)
+
+    # -- mixed-radix encoding (Algorithm 4 Encode/Decode) -----------------
+    def encode(self, counts: Tuple[int, int, int, int]) -> int:
+        a, b, c, d = counts
+        r1, r2, r4, _ = self._radix
+        return a + r1 * (b + r2 * (c + r4 * d))
+
+    def decode(self, j: int) -> Tuple[int, int, int, int]:
+        r1, r2, r4, _ = self._radix
+        a = j % r1
+        j //= r1
+        b = j % r2
+        j //= r2
+        c = j % r4
+        j //= r4
+        return (a, b, c, j)
+
+    @staticmethod
+    def greedy_decompose(k: int) -> Optional[Tuple[int, int, int, int]]:
+        """Decompose ``k`` devices into chunk counts, largest first."""
+        if k <= 0:
+            return None
+        counts = [0, 0, 0, 0]
+        need = k
+        for idx in (3, 2, 1, 0):
+            size = GpuChunkDPOperator.SIZES[idx]
+            counts[idx] = need // size
+            need -= counts[idx] * size
+        if need:
+            return None
+        return tuple(counts)  # type: ignore[return-value]
+
+    # -- operator primitives ----------------------------------------------
+    def start(self, unit_sets: Sequence[Tuple[int, ...]]) -> int:
+        counts = [0, 0, 0, 0]
+        for s in unit_sets:
+            dec = self.greedy_decompose(min(s))
+            if dec is None:
+                return 0
+            counts = [x + y for x, y in zip(counts, dec)]
+        counts = [min(x, n) for x, n in zip(counts, self.max_counts)]
+        return self.encode(tuple(counts))  # type: ignore[arg-type]
+
+    def end(self, unit_sets: Sequence[Tuple[int, ...]]) -> int:
+        r1, r2, r4, r8 = self._radix
+        return r1 * r2 * r4 * r8 - 1
+
+    def prev(self, j: int, k: int) -> Optional[int]:
+        a, b, c, d = self.decode(j)
+        need = k
+        use_d = min(d, need // 8)
+        need -= 8 * use_d
+        use_c = min(c, need // 4)
+        need -= 4 * use_c
+        use_b = min(b, need // 2)
+        need -= 2 * use_b
+        use_a = min(a, need)
+        need -= use_a
+        if need > 0:
+            return None  # not enough chunks in-state to satisfy k
+        return self.encode((a - use_a, b - use_b, c - use_c, d - use_d))
+
+    def is_valid(self, j: int) -> bool:
+        counts = self.decode(j)
+        if any(x < 0 or x > n for x, n in zip(counts, self.max_counts)):
+            return False
+        if self.total_devices is not None:
+            used = sum(c * s for c, s in zip(counts, self.SIZES))
+            if used > self.total_devices:
+                return False
+        if self._feasible is not None and not self._feasible(counts):
+            return False
+        return True
+
+
+@dataclass
+class DPResult:
+    total_duration: float
+    allocation: Dict[str, int]  # task name -> units
+    durations: Dict[str, float]  # task name -> T_i(k_i)
+
+
+def dp_arrange(tasks: Sequence[DPTask], operator: DPOperator) -> Optional[DPResult]:
+    """Algorithm 3.  Returns None when even minimal allocation is infeasible."""
+    m = len(tasks)
+    if m == 0:
+        return DPResult(0.0, {}, {})
+    unit_sets = [t.units for t in tasks]
+    n = operator.end(unit_sets)
+    if n < 0:
+        return None
+
+    # dp maps state -> best total duration for the first i tasks; we keep
+    # two rolling rows plus a choice table for backtracking.
+    prev_row: Dict[int, float] = {}
+    start0 = 0
+    if operator.is_valid(start0):
+        prev_row[start0] = 0.0
+    if not prev_row:
+        return None
+    choice: List[Dict[int, Tuple[int, int]]] = []  # [i] state -> (k, prev_state)
+
+    for i, task in enumerate(tasks):
+        cur_row: Dict[int, float] = {}
+        cur_choice: Dict[int, Tuple[int, int]] = {}
+        for jp, base in prev_row.items():
+            for k, dur in zip(task.units, task.durations):
+                # forward transition: state jp --(allocate k to task i)--> j
+                j = _forward(operator, jp, k)
+                if j is None or j > n or not operator.is_valid(j):
+                    continue
+                total = base + dur
+                if total < cur_row.get(j, INF):
+                    cur_row[j] = total
+                    cur_choice[j] = (k, jp)
+        if not cur_row:
+            return None
+        prev_row = cur_row
+        choice.append(cur_choice)
+
+    best_state = min(prev_row, key=lambda s: prev_row[s])
+    best = prev_row[best_state]
+
+    # backtrack
+    alloc: Dict[str, int] = {}
+    durs: Dict[str, float] = {}
+    state = best_state
+    for i in range(m - 1, -1, -1):
+        k, pstate = choice[i][state]
+        alloc[tasks[i].name] = k
+        kidx = tasks[i].units.index(k)
+        durs[tasks[i].name] = tasks[i].durations[kidx]
+        state = pstate
+    return DPResult(best, alloc, durs)
+
+
+def dp_arrange_prefixes(
+    tasks: Sequence[DPTask], operator: DPOperator
+) -> List[Optional[DPResult]]:
+    """DPResult for every prefix ``tasks[:i]`` (i = 0..m) in ONE DP pass.
+
+    Greedy eviction (Alg. 1) always evicts the LAST candidate, so the
+    objective of every kept-set it evaluates is a prefix of the same DP —
+    one pass over the rows serves the whole eviction loop (this is what
+    keeps the scheduler inside the paper's O(k n^2 m^2) bound).
+    """
+    m = len(tasks)
+    results: List[Optional[DPResult]] = [DPResult(0.0, {}, {})]
+    rows: List[Dict[int, float]] = [{0: 0.0} if operator.is_valid(0) else {}]
+    choices: List[Dict[int, Tuple[int, int]]] = []
+    unit_sets = [t.units for t in tasks]
+    n = operator.end(unit_sets)
+    for i, task in enumerate(tasks):
+        prev_row = rows[-1]
+        cur_row: Dict[int, float] = {}
+        cur_choice: Dict[int, Tuple[int, int]] = {}
+        for jp, base in prev_row.items():
+            for k, dur in zip(task.units, task.durations):
+                j = _forward(operator, jp, k)
+                if j is None or j > n or not operator.is_valid(j):
+                    continue
+                total = base + dur
+                if total < cur_row.get(j, INF):
+                    cur_row[j] = total
+                    cur_choice[j] = (k, jp)
+        rows.append(cur_row)
+        choices.append(cur_choice)
+        if not cur_row:
+            results.append(None)
+            continue
+        best_state = min(cur_row, key=lambda s: cur_row[s])
+        alloc: Dict[str, int] = {}
+        durs: Dict[str, float] = {}
+        state = best_state
+        feasible = True
+        for t in range(i, -1, -1):
+            if state not in choices[t]:
+                feasible = False
+                break
+            k, pstate = choices[t][state]
+            alloc[tasks[t].name] = k
+            durs[tasks[t].name] = tasks[t].durations[tasks[t].units.index(k)]
+            state = pstate
+        results.append(
+            DPResult(cur_row[best_state], alloc, durs) if feasible else None
+        )
+    return results
+
+
+def _forward(operator: DPOperator, jp: int, k: int) -> Optional[int]:
+    """Invert ``Prev``: the state reached from ``jp`` by allocating ``k``.
+
+    For the basic operator this is ``jp + k``; for the chunk operator we
+    add the greedy decomposition (the exact inverse of Algorithm 4's
+    ``Prev`` whenever the decomposition chunks are all present, which the
+    validity check enforces)."""
+    if isinstance(operator, BasicDPOperator):
+        return jp + k
+    if isinstance(operator, GpuChunkDPOperator):
+        dec = GpuChunkDPOperator.greedy_decompose(k)
+        if dec is None:
+            return None
+        counts = operator.decode(jp)
+        new_counts = tuple(x + y for x, y in zip(counts, dec))
+        # guard the mixed radix: digit overflow would alias another state
+        if any(x > n for x, n in zip(new_counts, operator.max_counts)):
+            return None
+        return operator.encode(new_counts)  # type: ignore[arg-type]
+    raise TypeError(f"unknown operator {type(operator)!r}")
+
+
+def brute_force_arrange(
+    tasks: Sequence[DPTask],
+    total_units: int,
+    feasible: Optional[Callable[[Sequence[int]], bool]] = None,
+) -> Optional[DPResult]:
+    """Exhaustive reference for property tests (small instances only)."""
+    best: Optional[DPResult] = None
+
+    def rec(i: int, used: int, alloc: List[int], total: float) -> None:
+        nonlocal best
+        if i == len(tasks):
+            if feasible is not None and not feasible(alloc):
+                return
+            if best is None or total < best.total_duration:
+                best = DPResult(
+                    total,
+                    {t.name: a for t, a in zip(tasks, alloc)},
+                    {
+                        t.name: t.durations[t.units.index(a)]
+                        for t, a in zip(tasks, alloc)
+                    },
+                )
+            return
+        for k, dur in zip(tasks[i].units, tasks[i].durations):
+            if used + k > total_units:
+                continue
+            alloc.append(k)
+            rec(i + 1, used + k, alloc, total + dur)
+            alloc.pop()
+
+    rec(0, 0, [], 0.0)
+    return best

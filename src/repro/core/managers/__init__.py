@@ -1,0 +1,12 @@
+from repro.core.managers.base import Allocation, ResourceManager
+from repro.core.managers.basic import BasicResourceManager
+from repro.core.managers.cpu import CpuManager
+from repro.core.managers.gpu import GpuManager
+
+__all__ = [
+    "Allocation",
+    "ResourceManager",
+    "BasicResourceManager",
+    "CpuManager",
+    "GpuManager",
+]

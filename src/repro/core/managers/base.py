@@ -1,0 +1,101 @@
+"""Unified resource-manager interface (paper §5).
+
+Heterogeneous resources "expose a standardized interface to the
+scheduler, maintaining transparency of heterogeneous resources to the
+scheduling algorithm".  The scheduler only ever calls:
+
+* ``can_accommodate(actions)``   — min-requirement + topology admission
+  test used to pick the FCFS candidate window (Alg. 1 line 2);
+* ``dp_operator(actions)``       — the topology abstraction DPArrange
+  runs over (Appendix B);
+* ``partition(actions)``         — optional sub-scheduling domains (the
+  CPU manager schedules per node, §5.2);
+* ``try_allocate / release``     — concrete placement (Breakdown), with
+  per-allocation system overhead (cgroup update, service restore, ...);
+* ``trajectory_start / trajectory_end`` — lifetime hooks (the CPU
+  manager pins trajectory memory while cores are action-scoped).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.action import Action
+from repro.core.dparrange import BasicDPOperator, DPOperator
+
+
+@dataclass
+class Allocation:
+    """Opaque placement handle returned by a manager."""
+
+    rtype: str
+    units: int
+    node: Optional[str] = None
+    detail: Dict[str, object] = field(default_factory=dict)
+    overhead: float = 0.0  # system-overhead seconds charged to the action
+
+
+class ResourceManager:
+    """Base class; also usable directly for simple fungible resources."""
+
+    def __init__(self, rtype: str, capacity: int) -> None:
+        self.rtype = rtype
+        self.capacity = int(capacity)
+        self._in_use = 0
+
+    # ------------------------------------------------------------------
+    # capacity / admission
+    # ------------------------------------------------------------------
+    @property
+    def available(self) -> int:
+        return self.capacity - self._in_use
+
+    def min_units(self, action: Action) -> int:
+        req = action.cost.get(self.rtype)
+        return req.min_units if req is not None else 0
+
+    def can_accommodate(self, actions: Sequence[Action]) -> bool:
+        """Admission test with every action at least-required units."""
+        return sum(self.min_units(a) for a in actions) <= self.available
+
+    # ------------------------------------------------------------------
+    # scheduling hooks
+    # ------------------------------------------------------------------
+    def dp_operator(self, actions: Sequence[Action], reserve: int = 0) -> DPOperator:
+        """``reserve`` units are already committed to co-scheduled actions
+        in the same round and must be excluded from elastic scaling."""
+        return BasicDPOperator(max(0, self.available - reserve))
+
+    def partition(self, actions: Sequence[Action]) -> Dict[str, List[Action]]:
+        """Sub-scheduling domains; default: one global domain."""
+        return {"*": list(actions)}
+
+    # ------------------------------------------------------------------
+    # placement
+    # ------------------------------------------------------------------
+    def try_allocate(self, action: Action, units: int) -> Optional[Allocation]:
+        if units > self.available:
+            return None
+        self._in_use += units
+        return Allocation(self.rtype, units)
+
+    def release(self, action: Action, allocation: Allocation) -> None:
+        self._in_use -= allocation.units
+        assert self._in_use >= 0, f"{self.rtype}: negative usage"
+
+    # ------------------------------------------------------------------
+    # lifetime hooks
+    # ------------------------------------------------------------------
+    def trajectory_start(self, trajectory_id: str, metadata: Dict[str, object]) -> bool:
+        return True
+
+    def trajectory_end(self, trajectory_id: str) -> None:
+        pass
+
+    # ------------------------------------------------------------------
+    def utilization(self) -> float:
+        return self._in_use / self.capacity if self.capacity else 0.0
+
+    def __repr__(self) -> str:
+        return f"{type(self).__name__}({self.rtype}: {self._in_use}/{self.capacity})"

@@ -1,0 +1,78 @@
+"""Basic resource manager (paper §5.1).
+
+For resources that cannot be scaled up — website quotas, request QPS
+limits — supporting two consumption patterns:
+
+* **concurrency-based**: bounds the maximum concurrent usage;
+* **quota-based**: bounds total usage within a rolling period (tokens
+  refilled every ``period_s`` of the governing clock).
+
+Both prevent the contention / rate-limit violations that cause the
+baseline's API failures and retries (§6.2, DeepSearch).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Sequence
+
+from repro.core.action import Action
+from repro.core.cluster import ApiResourceSpec
+from repro.core.managers.base import Allocation, ResourceManager
+from repro.core.simulator import Clock
+
+
+class BasicResourceManager(ResourceManager):
+    def __init__(self, spec: ApiResourceSpec, clock: Clock) -> None:
+        self.spec = spec
+        self.mode = spec.mode
+        self._clock = clock
+        if self.mode == "concurrency":
+            super().__init__(spec.name, spec.max_concurrency)
+        elif self.mode == "quota":
+            super().__init__(spec.name, spec.quota)
+            self._period_start = clock.now()
+            self._tokens = spec.quota
+        else:
+            raise ValueError(f"unknown mode {spec.mode!r}")
+
+    # -- quota refill -------------------------------------------------------
+    def _refill(self) -> None:
+        now = self._clock.now()
+        periods = math.floor((now - self._period_start) / self.spec.period_s)
+        if periods > 0:
+            self._period_start += periods * self.spec.period_s
+            self._tokens = self.spec.quota
+
+    @property
+    def available(self) -> int:
+        if self.mode == "quota":
+            self._refill()
+            # quota consumption is additionally bounded by concurrency of
+            # in-flight requests only through tokens, so availability is
+            # remaining tokens.
+            return self._tokens
+        return super().available
+
+    def can_accommodate(self, actions: Sequence[Action]) -> bool:
+        return sum(self.min_units(a) for a in actions) <= self.available
+
+    def try_allocate(self, action: Action, units: int) -> Optional[Allocation]:
+        if self.mode == "quota":
+            self._refill()
+            if units > self._tokens:
+                return None
+            self._tokens -= units
+            return Allocation(self.rtype, units, detail={"mode": "quota"})
+        return super().try_allocate(action, units)
+
+    def release(self, action: Action, allocation: Allocation) -> None:
+        if self.mode == "quota":
+            return  # tokens are consumed, not returned — refill restores them
+        super().release(action, allocation)
+
+    def time_to_next_refill(self) -> float:
+        if self.mode != "quota":
+            return math.inf
+        now = self._clock.now()
+        return self._period_start + self.spec.period_s - now

@@ -1,0 +1,199 @@
+"""CPU manager via AOE — allocate-on-execution (paper §5.2).
+
+**Breakdown**: instead of a pod holding cores for a trajectory's whole
+lifetime (k8s baseline), AOE updates the container's cgroup (cpuset /
+cpulimit) right before every ``docker.exec`` and reclaims the cores when
+the forked process exits.  Trajectory-lifetime state is preserved by
+pinning *memory only* (abundant in modern nodes).
+
+**Pool**: cores and memory are jointly managed.  Core selection is
+explicit (exclusive cpusets — no interference) and NUMA-aware: an
+elastic action's cores are preferentially taken from one NUMA domain.
+A trajectory's first action picks a node by a memory load-balancing
+policy among nodes that can hold the action's cores *and* the whole
+trajectory's memory; all later actions of that trajectory stay on that
+node (container residency), so the manager schedules **per node**.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.core.action import Action
+from repro.core.cluster import CpuNodeSpec
+from repro.core.dparrange import BasicDPOperator, DPOperator
+from repro.core.managers.base import Allocation, ResourceManager
+
+# AOE control-path cost: one docker-API cgroup update + fork (§5.2).
+CGROUP_UPDATE_S = 0.002
+FORK_EXEC_S = 0.004
+DEFAULT_TRAJ_MEM_GB = 4.0
+
+
+@dataclass
+class _NodeState:
+    spec: CpuNodeSpec
+    free_cores: List[Set[int]] = field(default_factory=list)  # per NUMA domain
+    free_mem_gb: float = 0.0
+    trajectories: Dict[str, float] = field(default_factory=dict)  # traj -> mem
+
+    def __post_init__(self) -> None:
+        per = self.spec.cores_per_numa
+        self.free_cores = [
+            set(range(d * per, (d + 1) * per)) for d in range(self.spec.numa_nodes)
+        ]
+        self.free_mem_gb = self.spec.memory_gb
+
+    @property
+    def free_core_count(self) -> int:
+        return sum(len(s) for s in self.free_cores)
+
+    def take_cores(self, m: int) -> Optional[Tuple[int, ...]]:
+        """Exclusive cores, preferring a single NUMA domain (§5.2)."""
+        # 1) smallest NUMA domain that fits entirely
+        fitting = [d for d in range(len(self.free_cores)) if len(self.free_cores[d]) >= m]
+        if fitting:
+            d = min(fitting, key=lambda i: len(self.free_cores[i]))
+            picked = tuple(sorted(self.free_cores[d]))[:m]
+            self.free_cores[d] -= set(picked)
+            return picked
+        # 2) spill across domains, largest-free first
+        if self.free_core_count < m:
+            return None
+        picked: List[int] = []
+        for d in sorted(range(len(self.free_cores)), key=lambda i: -len(self.free_cores[i])):
+            grab = tuple(sorted(self.free_cores[d]))[: m - len(picked)]
+            picked.extend(grab)
+            self.free_cores[d] -= set(grab)
+            if len(picked) == m:
+                break
+        return tuple(picked)
+
+    def return_cores(self, cores: Sequence[int]) -> None:
+        per = self.spec.cores_per_numa
+        for c in cores:
+            self.free_cores[c // per].add(c)
+
+
+class CpuManager(ResourceManager):
+    rtype_mem = "cpu_mem"
+
+    def __init__(self, nodes: Sequence[CpuNodeSpec]) -> None:
+        super().__init__("cpu", sum(n.cores for n in nodes))
+        self.nodes: Dict[str, _NodeState] = {n.name: _NodeState(n) for n in nodes}
+        self._binding: Dict[str, str] = {}  # trajectory -> node name
+
+    # ------------------------------------------------------------------
+    @property
+    def available(self) -> int:
+        return sum(n.free_core_count for n in self.nodes.values())
+
+    def node_of(self, trajectory_id: str) -> Optional[str]:
+        return self._binding.get(trajectory_id)
+
+    # ------------------------------------------------------------------
+    # trajectory lifetime: bind node + pin memory (Breakdown keeps state)
+    # ------------------------------------------------------------------
+    def _bind(self, action: Action) -> Optional[str]:
+        traj = action.trajectory_id
+        if traj in self._binding:
+            return self._binding[traj]
+        mem = float(action.metadata.get("traj_mem_gb", DEFAULT_TRAJ_MEM_GB))
+        need_cores = self.min_units(action)
+        # filter: enough cores for the action + memory for the trajectory;
+        # select by memory load balancing (most free memory).
+        feasible = [
+            n
+            for n in self.nodes.values()
+            if n.free_core_count >= need_cores and n.free_mem_gb >= mem
+        ]
+        if not feasible:
+            return None
+        node = max(feasible, key=lambda n: n.free_mem_gb)
+        node.free_mem_gb -= mem
+        node.trajectories[traj] = mem
+        self._binding[traj] = node.spec.name
+        return node.spec.name
+
+    def trajectory_end(self, trajectory_id: str) -> None:
+        name = self._binding.pop(trajectory_id, None)
+        if name is None:
+            return
+        node = self.nodes[name]
+        mem = node.trajectories.pop(trajectory_id, 0.0)
+        node.free_mem_gb += mem
+
+    # ------------------------------------------------------------------
+    # scheduling hooks: per-node domains (§5.2 last paragraph)
+    # ------------------------------------------------------------------
+    def partition(self, actions: Sequence[Action]) -> Dict[str, List[Action]]:
+        parts: Dict[str, List[Action]] = {}
+        for a in actions:
+            node = self._bind(a)
+            key = node if node is not None else "__unbound__"
+            parts.setdefault(key, []).append(a)
+        return parts
+
+    def dp_operator(self, actions: Sequence[Action], reserve: int = 0) -> DPOperator:
+        # called per partition; all actions share one node after _bind
+        nodes = {self._binding.get(a.trajectory_id) for a in actions}
+        nodes.discard(None)
+        if len(nodes) == 1:
+            free = self.nodes[next(iter(nodes))].free_core_count
+            return BasicDPOperator(max(0, free - reserve))
+        return BasicDPOperator(max(0, self.available - reserve))
+
+    def can_accommodate(self, actions: Sequence[Action]) -> bool:
+        """Admission: greedy placement of min requirements respecting bindings."""
+        free = {n: s.free_core_count for n, s in self.nodes.items()}
+        mem = {n: s.free_mem_gb for n, s in self.nodes.items()}
+        for a in actions:
+            need = self.min_units(a)
+            bound = self._binding.get(a.trajectory_id)
+            if bound is not None:
+                if free[bound] < need:
+                    return False
+                free[bound] -= need
+            else:
+                tmem = float(a.metadata.get("traj_mem_gb", DEFAULT_TRAJ_MEM_GB))
+                cands = [n for n in free if free[n] >= need and mem[n] >= tmem]
+                if not cands:
+                    return False
+                pick = max(cands, key=lambda n: mem[n])
+                free[pick] -= need
+                mem[pick] -= tmem
+        return True
+
+    # ------------------------------------------------------------------
+    # placement (AOE)
+    # ------------------------------------------------------------------
+    def try_allocate(self, action: Action, units: int) -> Optional[Allocation]:
+        name = self._bind(action)
+        if name is None:
+            return None
+        node = self.nodes[name]
+        cores = node.take_cores(units)
+        if cores is None:
+            return None
+        numa_domains = {c // node.spec.cores_per_numa for c in cores}
+        return Allocation(
+            "cpu",
+            units,
+            node=name,
+            detail={"cores": cores, "numa_domains": sorted(numa_domains)},
+            overhead=CGROUP_UPDATE_S + FORK_EXEC_S,
+        )
+
+    def release(self, action: Action, allocation: Allocation) -> None:
+        node = self.nodes[allocation.node]
+        node.return_cores(allocation.detail["cores"])  # type: ignore[arg-type]
+
+    def utilization(self) -> float:
+        total = self.capacity
+        return (total - self.available) / total if total else 0.0
+
+    def memory_utilization(self) -> float:
+        total = sum(n.spec.memory_gb for n in self.nodes.values())
+        free = sum(n.free_mem_gb for n in self.nodes.values())
+        return (total - free) / total if total else 0.0

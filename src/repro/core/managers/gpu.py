@@ -1,0 +1,349 @@
+"""GPU manager via EOE — evict-on-execution (paper §5.3).
+
+**Breakdown**: every required service is deployed once at init and its
+state snapshotted to host memory.  An action requesting service ``s``
+with ``m`` devices gets a device *chunk*; if ``s`` (at that DoP) is
+already resident on the chunk the action runs immediately (hit),
+otherwise the manager restores ``s`` from host memory (miss — restore
+latency = state bytes / restore bandwidth), evicting cached services as
+needed.  Because service device-state is invariant across invocations,
+eviction is *free*: just release device memory, the host copy stays
+valid.  Elastic DoP falls out naturally: each DoP configuration of a
+service is a distinct service key.
+
+**Pool**: a multi-level *chunk* structure mitigates fragmentation.
+A legal chunk is a contiguous device interval ``(start, start + 2^a)``
+with ``start % 2^a == 0`` (levels a in {0, 1, 2, 3}).  Allocation of
+``m`` devices takes the smallest free chunk of level >= ceil(log2 m),
+splitting as needed; when several same-level chunks are free, the one
+already caching the requested service is preferred, and otherwise the
+**LRU**-cached chunk is the eviction victim (reduces service dithering).
+
+The identical mechanics serve the TPU-slice adaptation (DESIGN.md §3):
+a "node" is a v5e tray and chunks are ICI-contiguous slices.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.core.action import Action
+from repro.core.cluster import GpuNodeSpec
+from repro.core.dparrange import DPOperator, GpuChunkDPOperator
+from repro.core.managers.base import Allocation, ResourceManager
+
+ServiceKey = Tuple[str, int]  # (service name, DoP)
+
+# control-path cost of a cache-hit dispatch (routing + IPC)
+DISPATCH_S = 0.001
+
+
+@dataclass(frozen=True)
+class ServiceSpec:
+    """A deployable external service (reward model, judge, teacher)."""
+
+    name: str
+    state_gb: float  # device-state size at DoP=1 (weights + static buffers)
+    dops: Tuple[int, ...] = (1, 2, 4, 8)
+
+    def state_gb_at(self, dop: int) -> float:
+        # TP shards weights across the chunk: per-device state shrinks,
+        # total restored bytes stay ~constant (plus small per-shard overhead).
+        return self.state_gb * (1.0 + 0.03 * (dop - 1))
+
+
+@dataclass
+class _Chunk:
+    start: int
+    level: int  # size = 2**level
+
+    @property
+    def size(self) -> int:
+        return 1 << self.level
+
+    def buddy_start(self) -> int:
+        return self.start ^ self.size
+
+
+class ChunkAllocator:
+    """Buddy allocator over one node's devices with service-cache tags."""
+
+    def __init__(self, devices: int) -> None:
+        if devices & (devices - 1):
+            raise ValueError("devices must be a power of two")
+        self.devices = devices
+        self.max_level = int(math.log2(devices))
+        # free chunks: level -> set of starts
+        self.free: Dict[int, Set[int]] = {l: set() for l in range(self.max_level + 1)}
+        self.free[self.max_level].add(0)
+        self.busy: Set[Tuple[int, int]] = set()  # (start, level)
+        # cache tags: (start, level) -> (service key, last-used time)
+        self.cache: Dict[Tuple[int, int], Tuple[ServiceKey, float]] = {}
+
+    # ------------------------------------------------------------------
+    @property
+    def free_capacity(self) -> int:
+        return sum(len(s) << l for l, s in self.free.items())
+
+    def free_level_counts(self) -> List[int]:
+        """Free chunk counts per level under maximal buddy merging."""
+        counts = [len(self.free[l]) for l in range(self.max_level + 1)]
+        # merging two level-l buddies yields a level-(l+1) chunk; emulate
+        # canonical merge on counts using actual adjacency.
+        frees = {l: set(s) for l, s in self.free.items()}
+        for l in range(self.max_level):
+            merged = True
+            while merged:
+                merged = False
+                for start in sorted(frees[l]):
+                    buddy = start ^ (1 << l)
+                    if buddy in frees[l] and start < buddy:
+                        frees[l] -= {start, buddy}
+                        frees[l + 1].add(min(start, buddy))
+                        merged = True
+                        break
+        return [len(frees[l]) for l in range(self.max_level + 1)]
+
+    # ------------------------------------------------------------------
+    def _evict(self, chunk_key: Tuple[int, int]) -> None:
+        """Drop a cache tag (free by §5.3 — host copy is invariant)."""
+        self.cache.pop(chunk_key, None)
+
+    def _split(self, start: int, level: int, target: int) -> int:
+        """Split a free chunk down to ``target`` level; returns start."""
+        self.free[level].discard(start)
+        self._evict((start, level))
+        while level > target:
+            level -= 1
+            self.free[level].add(start + (1 << level))
+            self.free[level].add(start)
+            self.free[level].discard(start)  # keep left half in hand
+        return start
+
+    def _try_merge_to(self, target: int) -> Optional[int]:
+        """Merge free buddies upward until a level->target chunk exists."""
+        for l in range(target):
+            for start in sorted(self.free[l]):
+                buddy = start ^ (1 << l)
+                if buddy in self.free[l]:
+                    lo = min(start, buddy)
+                    self.free[l] -= {start, buddy}
+                    self._evict((start, l))
+                    self._evict((buddy, l))
+                    self.free[l + 1].add(lo)
+        starts = self.free[target]
+        return min(starts) if starts else None
+
+    def allocate(
+        self, m: int, service: Optional[ServiceKey], now: float
+    ) -> Optional[Tuple[int, int, bool]]:
+        """Allocate >=m devices; returns (start, level, cache_hit)."""
+        if m <= 0 or m > self.devices:
+            return None
+        target = max(0, math.ceil(math.log2(m)))
+        # 1) exact-level free chunk, preferring a cache hit, then untagged,
+        #    then the LRU-tagged chunk (eviction victim).
+        pool = self.free[target]
+        if pool:
+            hit = [
+                s for s in pool if self.cache.get((s, target), (None, 0.0))[0] == service
+            ]
+            if hit and service is not None:
+                start = min(hit)
+                self.free[target].discard(start)
+                self.busy.add((start, target))
+                return start, target, True
+            untagged = [s for s in pool if (s, target) not in self.cache]
+            if untagged:
+                start = min(untagged)
+            else:
+                start = min(pool, key=lambda s: self.cache[(s, target)][1])  # LRU
+                self._evict((start, target))
+            self.free[target].discard(start)
+            self.busy.add((start, target))
+            return start, target, False
+        # 2) split a larger free chunk (smallest sufficient level first,
+        #    untagged preferred to avoid eviction).
+        for l in range(target + 1, self.max_level + 1):
+            if self.free[l]:
+                untagged = [s for s in self.free[l] if (s, l) not in self.cache]
+                cand = (
+                    min(untagged)
+                    if untagged
+                    else min(self.free[l], key=lambda s: self.cache[(s, l)][1])
+                )
+                start = self._split(cand, l, target)
+                self.busy.add((start, target))
+                return start, target, False
+        # 3) merge smaller free buddies upward
+        start = self._try_merge_to(target)
+        if start is not None:
+            self.free[target].discard(start)
+            self.busy.add((start, target))
+            return start, target, False
+        return None
+
+    def release(self, start: int, level: int, service: Optional[ServiceKey], now: float) -> None:
+        key = (start, level)
+        assert key in self.busy, f"releasing non-busy chunk {key}"
+        self.busy.discard(key)
+        self.free[level].add(start)
+        if service is not None:
+            self.cache[key] = (service, now)  # stays cached until evicted
+
+    def touch(self, start: int, level: int, now: float) -> None:
+        key = (start, level)
+        if key in self.cache:
+            svc, _ = self.cache[key]
+            self.cache[key] = (svc, now)
+
+    # -- invariants (property-tested) -----------------------------------
+    def check_invariants(self) -> None:
+        covered: Set[int] = set()
+        for l, starts in self.free.items():
+            for s in starts:
+                assert s % (1 << l) == 0, f"illegal chunk ({s},{l})"
+                rng = set(range(s, s + (1 << l)))
+                assert not (covered & rng), "overlapping free chunks"
+                covered |= rng
+        for s, l in self.busy:
+            assert s % (1 << l) == 0, f"illegal busy chunk ({s},{l})"
+            rng = set(range(s, s + (1 << l)))
+            assert not (covered & rng), "busy overlaps"
+            covered |= rng
+        assert covered == set(range(self.devices)), "devices lost or duplicated"
+
+
+class GpuManager(ResourceManager):
+    def __init__(self, nodes: Sequence[GpuNodeSpec], services: Sequence[ServiceSpec]) -> None:
+        super().__init__("gpu", sum(n.devices for n in nodes))
+        self.node_specs = {n.name: n for n in nodes}
+        self.allocators = {n.name: ChunkAllocator(n.devices) for n in nodes}
+        self.services = {s.name: s for s in services}
+        # EOE init: deploy each service once, snapshot to host memory.
+        host_need = sum(s.state_gb_at(max(s.dops)) for s in services)
+        host_have = sum(n.host_memory_gb for n in nodes)
+        if host_need > host_have:
+            raise ValueError(
+                f"host memory insufficient for snapshots: {host_need} > {host_have}"
+            )
+        self.stats = {"hits": 0, "misses": 0, "restore_s": 0.0}
+        self._now = 0.0  # advanced by the Tangram loop for LRU ordering
+
+    # ------------------------------------------------------------------
+    def set_time(self, now: float) -> None:
+        self._now = now
+
+    @property
+    def available(self) -> int:
+        return sum(a.free_capacity for a in self.allocators.values())
+
+    # ------------------------------------------------------------------
+    def can_accommodate(self, actions: Sequence[Action]) -> bool:
+        counts = [0, 0, 0, 0]
+        for a in actions:
+            need = self.min_units(a)
+            if need == 0:
+                continue
+            dec = GpuChunkDPOperator.greedy_decompose(
+                1 << max(0, math.ceil(math.log2(need)))
+            )
+            if dec is None:
+                return False
+            counts = [x + y for x, y in zip(counts, dec)]
+        return self.feasible_multiset(tuple(counts))
+
+    def feasible_multiset(self, counts: Tuple[int, int, int, int]) -> bool:
+        """Can the pooled free chunks satisfy this consumption multiset?"""
+        node_levels = {
+            name: alloc.free_level_counts() for name, alloc in self.allocators.items()
+        }
+        for size_idx in (3, 2, 1, 0):  # large chunks first
+            size_level = size_idx
+            for _ in range(counts[size_idx]):
+                placed = False
+                # smallest-sufficient-level fit across nodes
+                for lvl in range(size_level, 4):
+                    cands = [n for n, c in node_levels.items() if len(c) > lvl and c[lvl] > 0]
+                    if not cands:
+                        continue
+                    n = cands[0]
+                    node_levels[n][lvl] -= 1
+                    for l in range(size_level, lvl):  # split remainder
+                        node_levels[n][l] += 1
+                    placed = True
+                    break
+                if not placed:
+                    return False
+        return True
+
+    def dp_operator(self, actions: Sequence[Action], reserve: int = 0) -> DPOperator:
+        free = max(0, self.available - reserve)
+        max_counts = (free, free // 2, free // 4, free // 8)
+        return GpuChunkDPOperator(
+            max_counts, feasible=self.feasible_multiset, total_devices=free
+        )
+
+    # ------------------------------------------------------------------
+    def try_allocate(self, action: Action, units: int) -> Optional[Allocation]:
+        if action.service is not None and action.service not in self.services:
+            raise KeyError(f"service {action.service!r} never deployed (EOE inits all)")
+        key: Optional[ServiceKey] = (
+            (action.service, units) if action.service is not None else None
+        )
+        # prefer a node whose allocator holds a cache hit at the right level
+        target = max(0, math.ceil(math.log2(max(1, units))))
+        ordered = sorted(
+            self.allocators.items(),
+            key=lambda kv: 0 if self._has_hit(kv[1], target, key) else 1,
+        )
+        for name, alloc in ordered:
+            got = alloc.allocate(units, key, self._now)
+            if got is None:
+                continue
+            start, level, hit = got
+            overhead = DISPATCH_S
+            if key is not None and not hit:
+                spec = self.services[action.service]
+                node = self.node_specs[name]
+                restore = spec.state_gb_at(units) / node.restore_bw_gbps
+                overhead += restore
+                self.stats["misses"] += 1
+                self.stats["restore_s"] += restore
+            elif key is not None:
+                self.stats["hits"] += 1
+            return Allocation(
+                "gpu",
+                units,
+                node=name,
+                detail={"start": start, "level": level, "service": key, "hit": hit},
+                overhead=overhead,
+            )
+        return None
+
+    @staticmethod
+    def _has_hit(alloc: ChunkAllocator, level: int, key: Optional[ServiceKey]) -> bool:
+        if key is None or level > alloc.max_level:
+            return False
+        return any(
+            alloc.cache.get((s, level), (None, 0.0))[0] == key for s in alloc.free[level]
+        )
+
+    def release(self, action: Action, allocation: Allocation) -> None:
+        alloc = self.allocators[allocation.node]
+        alloc.release(
+            allocation.detail["start"],  # type: ignore[arg-type]
+            allocation.detail["level"],  # type: ignore[arg-type]
+            allocation.detail["service"],  # type: ignore[arg-type]
+            self._now,
+        )
+
+    def utilization(self) -> float:
+        total = self.capacity
+        return (total - self.available) / total if total else 0.0
+
+    def hit_rate(self) -> float:
+        h, m = self.stats["hits"], self.stats["misses"]
+        return h / (h + m) if h + m else 0.0

@@ -1,0 +1,100 @@
+"""ACT / utilization telemetry shared by ARL-Tangram and the baselines."""
+
+from __future__ import annotations
+
+import math
+import statistics
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclass
+class ActionRecord:
+    name: str
+    task_id: str
+    trajectory_id: str
+    submit: float
+    start: float
+    finish: float
+    sys_overhead: float
+    units: Dict[str, int]
+    failed: bool = False
+    retries: int = 0
+
+    @property
+    def queue_dur(self) -> float:
+        return self.start - self.submit
+
+    @property
+    def exec_dur(self) -> float:
+        return self.finish - self.start - self.sys_overhead
+
+    @property
+    def act(self) -> float:
+        return self.finish - self.submit
+
+
+@dataclass
+class Telemetry:
+    records: List[ActionRecord] = field(default_factory=list)
+    sched_invocations: int = 0
+    sched_wall_s: float = 0.0
+
+    def record(self, rec: ActionRecord) -> None:
+        self.records.append(rec)
+
+    # -- aggregates ---------------------------------------------------------
+    def mean_act(self) -> float:
+        ok = [r.act for r in self.records if not r.failed]
+        return statistics.fmean(ok) if ok else math.nan
+
+    def p(self, q: float) -> float:
+        ok = sorted(r.act for r in self.records if not r.failed)
+        if not ok:
+            return math.nan
+        idx = min(len(ok) - 1, int(q * len(ok)))
+        return ok[idx]
+
+    def breakdown(self) -> Dict[str, float]:
+        ok = [r for r in self.records if not r.failed]
+        if not ok:
+            return {"exec": math.nan, "queue": math.nan, "overhead": math.nan}
+        return {
+            "exec": statistics.fmean(r.exec_dur for r in ok),
+            "queue": statistics.fmean(r.queue_dur for r in ok),
+            "overhead": statistics.fmean(r.sys_overhead for r in ok),
+        }
+
+    def failure_rate(self) -> float:
+        if not self.records:
+            return 0.0
+        return sum(r.failed for r in self.records) / len(self.records)
+
+    def act_timeline(self, window: float) -> List[Tuple[float, float]]:
+        """Mean ACT per consecutive time window (paper Fig. 6)."""
+        ok = sorted((r for r in self.records if not r.failed), key=lambda r: r.finish)
+        out: List[Tuple[float, float]] = []
+        if not ok:
+            return out
+        lo = ok[0].finish
+        bucket: List[float] = []
+        for r in ok:
+            while r.finish >= lo + window:
+                if bucket:
+                    out.append((lo + window / 2, statistics.fmean(bucket)))
+                    bucket = []
+                lo += window
+            bucket.append(r.act)
+        if bucket:
+            out.append((lo + window / 2, statistics.fmean(bucket)))
+        return out
+
+    def by_stage(self, stage_key: str = "stage") -> Dict[str, float]:
+        """Mean ACT grouped by a metadata stage label (Fig. 7)."""
+        groups: Dict[str, List[float]] = {}
+        for r in self.records:
+            if r.failed:
+                continue
+            stage = r.name.split(":")[0]
+            groups.setdefault(stage, []).append(r.act)
+        return {k: statistics.fmean(v) for k, v in groups.items()}

@@ -1,0 +1,108 @@
+"""Flash attention Pallas TPU kernel (causal, GQA).
+
+TPU adaptation: query blocks ride the grid's minor dimension so the MXU
+sees [block_q, d] x [d, block_k] matmuls; K/V live in VMEM per
+(batch, kv-head) and the kernel walks k-blocks with an online-softmax
+running (max, sum, acc) held in VMEM scratch.  Block sizes default to
+MXU-aligned 128.
+
+Layout: q [B, H, S, d], k/v [B, KV, S, d] -> out [B, H, S, d].
+Grid: (B, H, S // block_q); GQA maps query head h to kv head h // g.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,  # [block_q, d]
+    k_ref,  # [S, d]  (whole K for this (b, kv-head))
+    v_ref,  # [S, d]
+    o_ref,  # [block_q, d]
+    *,
+    block_q: int,
+    block_k: int,
+    seq_len: int,
+    causal: bool,
+):
+    qb = pl.program_id(2)
+    q = q_ref[...].astype(jnp.float32)  # [bq, d]
+    d = q.shape[-1]
+    scale = 1.0 / math.sqrt(d)
+    q_pos = qb * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
+
+    nk = seq_len // block_k
+    # causal: k-blocks strictly after this q-block contribute nothing
+    nk_needed = (
+        jax.lax.div((qb + 1) * block_q + block_k - 1, block_k) if causal else nk
+    )
+
+    def body(kb, carry):
+        m_prev, l_prev, acc = carry
+        k = pl.load(k_ref, (pl.dslice(kb * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (pl.dslice(kb * block_k, block_k), slice(None)))
+        s = q @ k.astype(jnp.float32).T * scale  # [bq, bk]
+        if causal:
+            k_pos = kb * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (1, block_k), 1
+            )
+            s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur)
+        l_cur = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + p @ v.astype(jnp.float32)
+        return m_cur, l_cur, acc
+
+    m0 = jnp.full((block_q, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q, 1), jnp.float32)
+    acc0 = jnp.zeros((block_q, q.shape[-1]), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, nk_needed, body, (m0, l0, acc0))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,  # [B, H, S, d]
+    k: jax.Array,  # [B, KV, S, d]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, S, d = q.shape
+    KV = k.shape[1]
+    g = H // KV
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+
+    grid = (B, H, S // block_q)
+    kernel = functools.partial(
+        _flash_kernel,
+        block_q=block_q,
+        block_k=block_k,
+        seq_len=S,
+        causal=causal,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, None, block_q, d), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((None, None, S, d), lambda b, h, i: (b, h // g, 0, 0)),
+            pl.BlockSpec((None, None, S, d), lambda b, h, i: (b, h // g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, block_q, d), lambda b, h, i: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

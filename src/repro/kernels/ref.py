@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function mirrors its kernel's exact contract (same arguments, same
+output shapes/dtypes); kernel tests sweep shapes/dtypes and
+``assert_allclose`` against these.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(
+    q: jax.Array,  # [B, H, S, d]
+    k: jax.Array,  # [B, KV, S, d]
+    v: jax.Array,  # [B, KV, S, d]
+    causal: bool = True,
+) -> jax.Array:
+    B, H, S, d = q.shape
+    KV = k.shape[1]
+    g = H // KV
+    qg = q.reshape(B, KV, g, S, d)
+    scores = jnp.einsum(
+        "bngqd,bnkd->bngqk", qg, k, preferred_element_type=jnp.float32
+    ) / math.sqrt(d)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bngqk,bnkd->bngqd", w.astype(v.dtype), v)
+    return out.reshape(B, H, S, d)
+
+
+def ssd_chunk_ref(
+    x: jax.Array,  # [Q, hd]   (dt-weighted inputs for ONE (batch, chunk, head))
+    b: jax.Array,  # [Q, N]
+    c: jax.Array,  # [Q, N]
+    cum: jax.Array,  # [Q]     inclusive cumsum of dA within the chunk
+) -> Tuple[jax.Array, jax.Array]:
+    """Intra-chunk SSD: returns (y_intra [Q, hd], chunk_state [hd, N])."""
+    Q = x.shape[0]
+    diff = cum[:, None] - cum[None, :]  # [Q, Q]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(tri, jnp.exp(diff), 0.0)
+    cb = (c.astype(jnp.float32) @ b.astype(jnp.float32).T) * L  # [Q, Q]
+    y = (cb @ x.astype(jnp.float32)).astype(x.dtype)
+    decay_to_end = jnp.exp(cum[-1] - cum)  # [Q]
+    state = jnp.einsum(
+        "qd,qm,q->dm", x.astype(jnp.float32), b.astype(jnp.float32), decay_to_end
+    )
+    return y, state
+
+
+def moe_matmul_ref(
+    buf: jax.Array,  # [E, C, D]
+    w: jax.Array,  # [E, D, F]
+) -> jax.Array:
+    return jnp.einsum("ecd,edf->ecf", buf, w, preferred_element_type=jnp.float32).astype(
+        buf.dtype
+    )
+
+
+def rmsnorm_ref(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)).astype(x.dtype)) * weight

@@ -1,0 +1,40 @@
+"""Fused RMSNorm Pallas TPU kernel (row-blocked, single HBM round-trip)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)  # [block_rows, D]
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y.astype(o_ref.dtype)) * w_ref[...]
+
+
+def rmsnorm(
+    x: jax.Array,  # [T, D] (callers flatten leading dims)
+    weight: jax.Array,  # [D]
+    *,
+    eps: float = 1e-5,
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    T, D = x.shape
+    block_rows = min(block_rows, T)
+    assert T % block_rows == 0, (T, block_rows)
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(T // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, D), lambda i: (i, 0)),
+            pl.BlockSpec((D,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, D), x.dtype),
+        interpret=interpret,
+    )(x, weight)

@@ -1,0 +1,70 @@
+"""Mamba-2 SSD intra-chunk Pallas TPU kernel.
+
+Computes, for one (batch, chunk, head) grid cell, the quadratic
+intra-chunk output and the chunk's contribution to the inter-chunk
+state (the sequential inter-chunk recurrence stays a cheap lax.scan in
+:mod:`repro.models.ssm` — it is O(S/Q) steps over tiny states).
+
+VMEM tiling: the [Q, Q] decay mask is materialized per head in VMEM
+(Q = 256 -> 256 KB f32), never in HBM — on GPU the reference
+implementation tiles over the same quadratic form with shared memory;
+the TPU-native adaptation keeps one chunk resident and lets the MXU
+run the [Q,N]x[N,Q] and [Q,Q]x[Q,hd] contractions.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(x_ref, b_ref, c_ref, cum_ref, y_ref, state_ref):
+    x = x_ref[...].astype(jnp.float32)  # [Q, hd] (dt-weighted inputs)
+    b = b_ref[...].astype(jnp.float32)  # [Q, N]
+    c = c_ref[...].astype(jnp.float32)  # [Q, N]
+    cum = cum_ref[...].astype(jnp.float32)  # [Q]
+    Q = x.shape[0]
+    diff = cum[:, None] - cum[None, :]  # [Q, Q]
+    row = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(row >= col, jnp.exp(diff), 0.0)
+    cb = (c @ b.T) * L  # [Q, Q]
+    y_ref[...] = (cb @ x).astype(y_ref.dtype)
+    decay_to_end = jnp.exp(cum[-1] - cum)  # [Q]
+    state_ref[...] = ((x * decay_to_end[:, None]).T @ b).astype(state_ref.dtype)
+
+
+def ssd_intra_chunk(
+    x: jax.Array,  # [BNC, H, Q, hd]  dt-weighted inputs per chunk
+    b: jax.Array,  # [BNC, Q, N]
+    c: jax.Array,  # [BNC, Q, N]
+    cum: jax.Array,  # [BNC, H, Q]
+    *,
+    interpret: bool = False,
+):
+    """Returns (y_intra [BNC, H, Q, hd], states [BNC, H, hd, N])."""
+    BNC, H, Q, hd = x.shape
+    N = b.shape[-1]
+    grid = (BNC, H)
+    return pl.pallas_call(
+        _ssd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, None, Q, hd), lambda i, h: (i, h, 0, 0)),
+            pl.BlockSpec((None, Q, N), lambda i, h: (i, 0, 0)),
+            pl.BlockSpec((None, Q, N), lambda i, h: (i, 0, 0)),
+            pl.BlockSpec((None, None, Q), lambda i, h: (i, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, None, Q, hd), lambda i, h: (i, h, 0, 0)),
+            pl.BlockSpec((None, None, hd, N), lambda i, h: (i, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BNC, H, Q, hd), x.dtype),
+            jax.ShapeDtypeStruct((BNC, H, hd, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, b, c, cum)

@@ -1,0 +1,411 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh).
+
+The two lines above MUST stay the first statements in this module: jax
+locks the device count at first init, and the production meshes need 512
+placeholder host devices.  Nothing else in the repo sets this flag.
+
+For each combination this produces a JSON record containing:
+  * compile success + lower/compile wall time,
+  * ``compiled.memory_analysis()`` (fits-per-device evidence),
+  * ``compiled.cost_analysis()``  (per-device HLO FLOPs / bytes),
+  * collective-op bytes parsed from the partitioned HLO
+    (all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute), per op kind,
+  * analytic per-device bytes for params / optimizer / cache / batch,
+  * the three roofline terms (§Roofline) and the dominant one.
+
+Run:  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \
+          --shape train_4k --mesh single --out results/dryrun
+      PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import json
+import math
+import re
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, all_configs, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (
+    decode_shardings,
+    decode_specs,
+    input_shardings,
+    input_specs,
+    uses_sliding_window,
+)
+from repro.models.model import build_model
+from repro.sharding.rules import make_rules
+from repro.training.optimizer import AdamWConfig, abstract_adamw, adamw_state_specs
+from repro.training.train_step import TrainState, make_train_step
+
+# --- TPU v5e hardware constants (per chip) ---------------------------------
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def collective_bytes(hlo: str) -> Dict[str, float]:
+    """Sum result-operand bytes per collective kind from partitioned HLO."""
+    out = {k: 0.0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo.splitlines():
+        stripped = line.lstrip()
+        if "=" not in stripped:
+            continue
+        kind = None
+        for k in _COLLECTIVES:
+            if f" {k}(" in stripped or f" {k}-start(" in stripped:
+                kind = k
+                break
+        if kind is None:
+            continue
+        lhs = stripped.split("=", 1)[1]
+        op_idx = lhs.find(kind)
+        shapes_part = lhs[:op_idx]
+        nbytes = 0.0
+        for dt, dims in _SHAPE_RE.findall(shapes_part):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        out[kind] += nbytes
+        out["count"] += 1
+    return out
+
+
+def tree_bytes_per_device(abstract: Any, shardings: Any, mesh) -> float:
+    """Analytic per-device bytes for a (ShapeDtypeStruct, spec) tree."""
+    total = 0.0
+    mesh_sizes = dict(mesh.shape)
+    flat_a = jax.tree.leaves(abstract)
+    flat_s = jax.tree.leaves(shardings, is_leaf=lambda x: isinstance(x, (NamedSharding, P)))
+    assert len(flat_a) == len(flat_s), (len(flat_a), len(flat_s))
+    for aval, sh in zip(flat_a, flat_s):
+        if aval is None:
+            continue
+        n = math.prod(aval.shape) if aval.shape else 1
+        spec = sh.spec if isinstance(sh, NamedSharding) else sh
+        shards = 1
+        for entry in spec:
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            for a in axes:
+                shards *= mesh_sizes[a]
+        total += n * aval.dtype.itemsize / shards
+    return total
+
+
+def _named(tree: Any, mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
+        tree,
+        is_leaf=lambda x: isinstance(x, P) or x is None,
+    )
+
+
+def _lower(cfg, shape, mesh, rules, api) -> Tuple[Any, Dict[str, Any]]:
+    """Build + lower the right step fn for this shape; returns (lowered, extras)."""
+    n_dev = mesh.size
+    params_abs = api.abstract_params()
+    param_specs = api.param_specs(rules)
+    extras: Dict[str, Any] = {}
+    with mesh:
+        if shape.kind == "train":
+            opt_cfg = AdamWConfig()
+            state_abs = TrainState(params_abs, abstract_adamw(params_abs))
+            state_specs = TrainState(param_specs, adamw_state_specs(param_specs))
+            batch_abs = input_specs(cfg, shape)
+            batch_specs = input_shardings(cfg, shape, rules)
+            fn = make_train_step(api, opt_cfg, rules)
+            metric_names = (
+                ("loss", "lm_loss", "grad_norm", "lr")
+                if cfg.family == "audio"
+                else ("loss", "lm_loss", "load_balance", "router_z", "grad_norm", "lr")
+            )
+            metric_specs = {k: P() for k in metric_names}
+            jitted = jax.jit(
+                fn,
+                in_shardings=(_named(state_specs, mesh), _named(batch_specs, mesh)),
+                out_shardings=(_named(state_specs, mesh), _named(metric_specs, mesh)),
+            )
+            lowered = jitted.lower(state_abs, batch_abs)
+            extras["state_bytes_per_dev"] = tree_bytes_per_device(state_abs, state_specs, mesh)
+            extras["batch_bytes_per_dev"] = tree_bytes_per_device(batch_abs, batch_specs, mesh)
+            tokens = shape.global_batch * (
+                cfg.decoder_seq if cfg.family == "audio" else shape.seq_len
+            )
+            extras["model_flops"] = 6.0 * api.active_param_count() * tokens
+        elif shape.kind == "prefill":
+            batch_abs = input_specs(cfg, shape)
+            batch_specs = input_shardings(cfg, shape, rules)
+            fn = lambda p, b: api.prefill(p, b, rules)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(_named(param_specs, mesh), _named(batch_specs, mesh)),
+            )
+            lowered = jitted.lower(params_abs, batch_abs)
+            extras["state_bytes_per_dev"] = tree_bytes_per_device(params_abs, param_specs, mesh)
+            extras["batch_bytes_per_dev"] = tree_bytes_per_device(batch_abs, batch_specs, mesh)
+            extras["model_flops"] = (
+                2.0 * api.active_param_count() * shape.global_batch * shape.seq_len
+            )
+        else:  # decode
+            sw = cfg.sliding_window if uses_sliding_window(cfg, shape) else 0
+            extras["sliding_window"] = sw
+            state_abs, token_abs = decode_specs(api, shape)
+            state_specs, token_spec = decode_shardings(api, shape, rules)
+            fn = lambda p, s, t: api.decode_step(p, s, t, rules, sliding_window=sw)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(
+                    _named(param_specs, mesh),
+                    _named(state_specs, mesh),
+                    NamedSharding(mesh, token_spec),
+                ),
+                out_shardings=(None, _named(state_specs, mesh)),
+            )
+            lowered = jitted.lower(params_abs, state_abs, token_abs)
+            extras["state_bytes_per_dev"] = tree_bytes_per_device(
+                params_abs, param_specs, mesh
+            ) + tree_bytes_per_device(state_abs, state_specs, mesh)
+            extras["model_flops"] = 2.0 * api.active_param_count() * shape.global_batch
+    return lowered, extras
+
+
+def _compiled_metrics(compiled) -> Dict[str, float]:
+    out: Dict[str, float] = {}
+    try:
+        cost = compiled.cost_analysis()
+        out["flops"] = float(cost.get("flops", 0.0))
+        out["bytes"] = float(cost.get("bytes accessed", 0.0))
+    except Exception:
+        out["flops"] = out["bytes"] = 0.0
+    col = collective_bytes(compiled.as_text())
+    for k, v in col.items():
+        out[f"col_{k}"] = v
+    return out
+
+
+def calibrate_layer_cost(
+    cfg, shape, mesh, fsdp: bool
+) -> Optional[Dict[str, float]]:
+    """Per-layer in-scan cost via the U(2)-C(2) trick.
+
+    ``compiled.cost_analysis`` counts a ``while`` body ONCE regardless of
+    trip count (verified empirically), so scanned-layer cost is invisible.
+    We compile a 2-layer variant twice — scanned C(2) and fully unrolled
+    U(2) — and take ``body = U(2) - C(2)`` as the exact marginal cost of
+    one additional layer trip.  ``true(L) = C(L) + (L-1) * body``.
+    """
+    import dataclasses
+
+    repl = {"num_layers": 2, "scan_unroll": 1}
+    if cfg.encoder_layers:
+        repl["encoder_layers"] = 2
+    cfg2 = dataclasses.replace(cfg, **repl)
+    cfg2u = dataclasses.replace(cfg2, scan_unroll=2)
+    rules = make_rules(mesh, fsdp=fsdp)
+    try:
+        lo_c, _ = _lower(cfg2, shape, mesh, rules, build_model(cfg2))
+        m_c = _compiled_metrics(lo_c.compile())
+        lo_u, _ = _lower(cfg2u, shape, mesh, rules, build_model(cfg2u))
+        m_u = _compiled_metrics(lo_u.compile())
+    except Exception:
+        return None
+    return {k: max(0.0, m_u.get(k, 0.0) - m_c.get(k, 0.0)) for k in m_u}
+
+
+def run_one(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    fsdp: Optional[bool] = None,
+    remat: Optional[bool] = None,
+    save_hlo: Optional[str] = None,
+    calibrate: bool = True,
+) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    if remat is not None:
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, remat=remat)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    api = build_model(cfg)
+    if fsdp is None:
+        # FSDP when the replicated (model-sharded-only) train state would
+        # not leave headroom on a 16 GB v5e chip.
+        probe_rules = make_rules(mesh, fsdp=False)
+        params_abs0 = api.abstract_params()
+        state_bytes = tree_bytes_per_device(
+            TrainState(params_abs0, abstract_adamw(params_abs0)),
+            TrainState(api.param_specs(probe_rules),
+                       adamw_state_specs(api.param_specs(probe_rules))),
+            mesh,
+        )
+        fsdp = state_bytes > 11e9
+    rules = make_rules(mesh, fsdp=fsdp)
+    rec: Dict[str, Any] = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": n_dev,
+        "fsdp": fsdp,
+        "params": api.param_count(),
+        "active_params": api.active_param_count(),
+        "kind": shape.kind,
+    }
+    t0 = time.time()
+    lowered, extras = _lower(cfg, shape, mesh, rules, api)
+    rec.update(extras)
+    rec["lower_s"] = time.time() - t0
+    t1 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = time.time() - t1
+
+    try:
+        mem = compiled.memory_analysis()
+        rec["memory_analysis"] = {
+            k: getattr(mem, k)
+            for k in (
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "temp_size_in_bytes",
+                "generated_code_size_in_bytes",
+            )
+            if hasattr(mem, k)
+        }
+    except Exception as e:  # CPU backend may not support it
+        rec["memory_analysis"] = {"error": str(e)}
+
+    raw = _compiled_metrics(compiled)
+    rec["cost_analysis_raw"] = raw
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(compiled.as_text())
+
+    # ---- while-body trip-count correction (see calibrate_layer_cost) -----
+    L = cfg.num_layers
+    body = calibrate_layer_cost(cfg, shape, mesh, fsdp) if calibrate else None
+    rec["layer_body_cost"] = body
+    if body is not None:
+        corrected = {k: raw.get(k, 0.0) + (L - 1) * body.get(k, 0.0) for k in raw}
+    else:
+        corrected = dict(raw)
+    rec["cost_analysis"] = {
+        "flops": corrected.get("flops", 0.0),
+        "bytes_accessed": corrected.get("bytes", 0.0),
+    }
+    col = {
+        k.removeprefix("col_"): v for k, v in corrected.items() if k.startswith("col_")
+    }
+    rec["collectives"] = col
+
+    # ---- roofline terms (per-chip; §Roofline) ----------------------------
+    flops_dev = corrected.get("flops", 0.0)
+    bytes_dev = corrected.get("bytes", 0.0)
+    col_bytes_dev = sum(v for k, v in col.items() if k != "count")
+    compute_t = flops_dev / PEAK_FLOPS
+    memory_t = bytes_dev / HBM_BW
+    collective_t = col_bytes_dev / ICI_BW
+    rec["roofline"] = {
+        "compute_s": compute_t,
+        "memory_s": memory_t,
+        "collective_s": collective_t,
+        "dominant": max(
+            (("compute", compute_t), ("memory", memory_t), ("collective", collective_t)),
+            key=lambda kv: kv[1],
+        )[0],
+        "model_flops_ratio": (
+            rec.get("model_flops", 0.0) / (flops_dev * n_dev)
+            if flops_dev > 0
+            else None
+        ),
+    }
+    rec["ok"] = True
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=[*INPUT_SHAPES, None])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--fsdp", default=None, choices=[None, "on", "off"])
+    ap.add_argument("--remat", default=None, choices=[None, "on", "off"])
+    ap.add_argument("--save-hlo", default=None)
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = sorted(all_configs()) if (args.all or args.arch is None) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    fsdp = None if args.fsdp is None else args.fsdp == "on"
+    remat = None if args.remat is None else args.remat == "on"
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tagsuf = f"_{args.tag}" if args.tag else ""
+                name = f"{arch}_{shape}_{'multi' if mp else 'single'}{tagsuf}.json"
+                path = os.path.join(args.out, name)
+                if os.path.exists(path) and not args.tag:
+                    print(f"skip {name} (exists)")
+                    continue
+                print(f"=== {arch} x {shape} x {'2x16x16' if mp else '16x16'} ===", flush=True)
+                try:
+                    rec = run_one(arch, shape, mp, fsdp=fsdp, remat=remat,
+                                  save_hlo=args.save_hlo)
+                except Exception as e:
+                    import traceback
+
+                    rec = {
+                        "arch": arch, "shape": shape,
+                        "mesh": "2x16x16" if mp else "16x16",
+                        "ok": False, "error": f"{type(e).__name__}: {e}",
+                        "traceback": traceback.format_exc()[-2000:],
+                    }
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=2)
+                if rec.get("ok"):
+                    r = rec["roofline"]
+                    print(
+                        f"  ok lower={rec['lower_s']:.1f}s compile={rec['compile_s']:.1f}s "
+                        f"compute={r['compute_s']*1e3:.2f}ms memory={r['memory_s']*1e3:.2f}ms "
+                        f"collective={r['collective_s']*1e3:.2f}ms dominant={r['dominant']}",
+                        flush=True,
+                    )
+                else:
+                    print(f"  FAILED: {rec['error']}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

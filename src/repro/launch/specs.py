@@ -1,0 +1,87 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run, no alloc).
+
+``input_specs(cfg, shape)`` returns the abstract batch for train/prefill
+kinds; decode kinds use ``decode_specs``.  ``input_shardings`` returns
+the matching PartitionSpec tree.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models.model import ModelApi
+from repro.sharding.rules import Rules
+
+
+def _tok(b: int, s: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """Abstract train/prefill batch for an assigned input shape."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "audio":
+        # seq_len applies to the (stub) encoder frames; decoder gets the
+        # fixed text window (DESIGN.md §4).
+        return {
+            "frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.float32),
+            "tokens": _tok(B, cfg.decoder_seq),
+        }
+    if cfg.family == "vlm":
+        return {
+            "tokens": _tok(B, S - cfg.num_patches),
+            "patch_embeds": jax.ShapeDtypeStruct(
+                (B, cfg.num_patches, cfg.d_model), jnp.float32
+            ),
+        }
+    return {"tokens": _tok(B, S)}
+
+
+def input_shardings(cfg: ModelConfig, shape: InputShape, rules: Rules) -> Dict[str, Any]:
+    B = shape.global_batch
+    batch_dims = ("batch",) if B % rules.data_extent == 0 else (None,)
+    if cfg.family == "audio":
+        return {
+            "frames": rules.spec((B, shape.seq_len, cfg.d_model), (*batch_dims, None, None)),
+            "tokens": rules.spec((B, cfg.decoder_seq), (*batch_dims, None)),
+        }
+    if cfg.family == "vlm":
+        return {
+            "tokens": rules.spec((B, shape.seq_len - cfg.num_patches), (*batch_dims, None)),
+            "patch_embeds": rules.spec(
+                (B, cfg.num_patches, cfg.d_model), (*batch_dims, None, None)
+            ),
+        }
+    return {"tokens": rules.spec((B, shape.seq_len), (*batch_dims, None))}
+
+
+def decode_specs(
+    api: ModelApi, shape: InputShape
+) -> Tuple[Any, jax.ShapeDtypeStruct]:
+    """(abstract decode state, abstract one-token batch)."""
+    B, S = shape.global_batch, shape.seq_len
+    state = api.abstract_decode_state(B, S)
+    token = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    return state, token
+
+
+def decode_shardings(api: ModelApi, shape: InputShape, rules: Rules):
+    B, S = shape.global_batch, shape.seq_len
+    state_specs = api.decode_state_specs(rules, B, S)
+    tok_dims = ("batch", None) if B % rules.data_extent == 0 else (None, None)
+    token_spec = rules.spec((B, 1), tok_dims)
+    return state_specs, token_spec
+
+
+def uses_sliding_window(cfg: ModelConfig, shape: InputShape) -> bool:
+    """long_500k decode on attention-bearing archs runs the sliding-window
+    variant (sub-quadratic per brief); SSM archs decode natively."""
+    return (
+        shape.name == "long_500k"
+        and cfg.family in ("dense", "moe", "vlm", "hybrid", "audio")
+    )

@@ -1,0 +1,3 @@
+from repro.models.model import ModelApi, build_model
+
+__all__ = ["ModelApi", "build_model"]

@@ -1,0 +1,176 @@
+"""Mamba-2 SSD (state-space duality) mixer [arXiv:2405.21060].
+
+Training/prefill uses the **chunked SSD algorithm**: the sequence is cut
+into chunks of length ``Q``; within a chunk the recurrence is expanded
+into a (masked, decay-weighted) quadratic form that maps onto the MXU;
+across chunks a short ``lax.scan`` carries the [H, hd, N] state.  Decode
+is the O(1) recurrence — the reason SSM archs run ``long_500k`` natively.
+
+Shapes follow the Mamba-2 conventions:
+  d_inner = expand * d_model, H = d_inner / head_dim, N = ssm_state.
+Per head h: state S[hd, N];  y_t = C_t . S_t + D x_t,
+  S_t = exp(dt_t A_h) S_{t-1} + dt_t * (x_t outer B_t).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamDef, rms_norm
+from repro.sharding.rules import Rules
+
+
+def ssm_schema(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    di = cfg.d_inner
+    h = cfg.ssm_heads
+    n = cfg.ssm_state
+    return {
+        # fused input projection: [z (gate), x, B, C, dt]
+        "w_in_z": ParamDef((d, di), ("embed", "ssm_inner")),
+        "w_in_x": ParamDef((d, di), ("embed", "ssm_inner")),
+        "w_in_b": ParamDef((d, n), ("embed", None)),
+        "w_in_c": ParamDef((d, n), ("embed", None)),
+        "w_in_dt": ParamDef((d, h), ("embed", None)),
+        "a_log": ParamDef((h,), (None,), init="zeros"),
+        "dt_bias": ParamDef((h,), (None,), init="zeros"),
+        "d_skip": ParamDef((h,), (None,), init="ones"),
+        "out_norm": ParamDef((di,), (None,), init="ones"),
+        "w_out": ParamDef((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _project(params: dict, x: jax.Array, cfg: ModelConfig):
+    """x: [B,S,D] -> z,xs: [B,S,H,hd]; b,c: [B,S,N]; dt: [B,S,H]."""
+    B, S, _ = x.shape
+    H, hd, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z = (x @ params["w_in_z"]).reshape(B, S, H, hd)
+    xs = (x @ params["w_in_x"]).reshape(B, S, H, hd)
+    b = x @ params["w_in_b"]  # [B,S,N] (shared across heads, Mamba-2 default)
+    c = x @ params["w_in_c"]
+    dt = jax.nn.softplus(
+        (x @ params["w_in_dt"]).astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )  # [B,S,H]
+    return z, xs, b, c, dt
+
+
+def ssd_scan(
+    params: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    rules: Optional[Rules] = None,
+) -> jax.Array:
+    """Full-sequence SSD mixer: x [B,S,D] -> [B,S,D].  S % chunk == 0."""
+    y, _ = ssd_scan_with_state(params, x, cfg, rules)
+    return y
+
+
+def ssd_scan_with_state(
+    params: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    rules: Optional[Rules] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """SSD mixer returning (y, final_state [B,H,hd,N]) for prefill."""
+    B, S, D = x.shape
+    H, hd, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    Q = min(cfg.ssm_chunk, S)
+    assert S % Q == 0, f"seq {S} not divisible by chunk {Q}"
+    NC = S // Q
+
+    z, xs, b, c, dt = _project(params, x, cfg)
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))  # [H], negative
+    dA = dt * A  # [B,S,H] log-decay per step
+
+    # chunked views
+    xs_c = xs.reshape(B, NC, Q, H, hd)
+    b_c = b.reshape(B, NC, Q, N).astype(jnp.float32)
+    c_c = c.reshape(B, NC, Q, N).astype(jnp.float32)
+    dt_c = dt.reshape(B, NC, Q, H)
+    dA_c = dA.reshape(B, NC, Q, H)
+    cum = jnp.cumsum(dA_c, axis=2)  # [B,NC,Q,H] inclusive within-chunk
+
+    # ---- intra-chunk (quadratic, attention-like) ------------------------
+    # L[i,j] = exp(cum_i - cum_j) for i >= j else 0
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [B,NC,Q,Q,H]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    Lmask = jnp.where(tri, jnp.exp(diff), 0.0)  # [B,NC,Q,Q,H]
+    cb = jnp.einsum("bnim,bnjm->bnij", c_c, b_c)  # [B,NC,Q,Q]
+    w = cb[..., None] * Lmask  # [B,NC,Q,Q,H]
+    xdt = xs_c * dt_c[..., None].astype(xs.dtype)  # dt-weighted inputs
+    y_intra = jnp.einsum("bnijh,bnjhd->bnihd", w.astype(xs.dtype), xdt)
+
+    # ---- chunk states + inter-chunk scan --------------------------------
+    # state contribution of chunk: sum_j exp(cum_last - cum_j) * B_j ⊗ xdt_j
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # [B,NC,Q,H]
+    state_chunk = jnp.einsum(
+        "bnjm,bnjh,bnjhd->bnhdm",
+        b_c,
+        decay_to_end.astype(jnp.float32),
+        xdt.astype(jnp.float32),
+    )  # [B,NC,H,hd,N]
+    chunk_decay = jnp.exp(cum[:, :, -1, :]).astype(jnp.float32)  # [B,NC,H]
+
+    def step(carry, inputs):
+        s_prev = carry  # [B,H,hd,N]
+        s_new, g = inputs  # [B,H,hd,N], [B,H]
+        s = s_prev * g[:, :, None, None] + s_new
+        return s, s_prev  # emit the state *entering* the chunk
+
+    s0 = jnp.zeros((B, H, hd, N), jnp.float32)
+    final_state, entering = jax.lax.scan(
+        step,
+        s0,
+        (
+            jnp.moveaxis(state_chunk, 1, 0),  # [NC,B,H,hd,N]
+            jnp.moveaxis(chunk_decay, 1, 0),  # [NC,B,H]
+        ),
+    )
+    entering = jnp.moveaxis(entering, 0, 1)  # [B,NC,H,hd,N]
+
+    # inter-chunk output: C_i . (decay_from_start_i * S_entering)
+    decay_from_start = jnp.exp(cum).astype(jnp.float32)  # [B,NC,Q,H]
+    y_inter = jnp.einsum(
+        "bnim,bnhdm,bnih->bnihd", c_c, entering, decay_from_start
+    ).astype(xs.dtype)
+
+    y = (y_intra + y_inter).reshape(B, S, H, hd)
+    y = y + xs * params["d_skip"].astype(xs.dtype)[None, None, :, None]
+    # gated output norm + projection
+    y = y * jax.nn.silu(z)
+    y = y.reshape(B, S, H * hd)
+    y = rms_norm(y, params["out_norm"], cfg.norm_eps)
+    if rules is not None:
+        y = rules.constrain(y, ("batch", None, "ssm_inner"))
+    return y @ params["w_out"], final_state
+
+
+def ssm_decode_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> jax.Array:
+    return jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), dtype)
+
+
+def ssd_decode_step(
+    params: dict,
+    x: jax.Array,  # [B,1,D]
+    state: jax.Array,  # [B,H,hd,N] f32
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, jax.Array]:
+    """O(1) recurrent decode step.  Returns (y [B,1,D], new_state)."""
+    B = x.shape[0]
+    H, hd, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z, xs, b, c, dt = _project(params, x, cfg)
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))
+    g = jnp.exp(dt[:, 0] * A)  # [B,H]
+    xdt = (xs[:, 0] * dt[:, 0, :, None].astype(xs.dtype)).astype(jnp.float32)  # [B,H,hd]
+    outer = jnp.einsum("bhd,bm->bhdm", xdt, b[:, 0].astype(jnp.float32))
+    new_state = state * g[:, :, None, None] + outer
+    y = jnp.einsum("bhdm,bm->bhd", new_state, c[:, 0].astype(jnp.float32)).astype(xs.dtype)
+    y = y + xs[:, 0] * params["d_skip"].astype(xs.dtype)[None, :, None]
+    y = y * jax.nn.silu(z[:, 0])
+    y = y.reshape(B, 1, H * hd)
+    y = rms_norm(y, params["out_norm"], cfg.norm_eps)
+    return y @ params["w_out"], new_state

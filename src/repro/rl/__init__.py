@@ -1,0 +1,16 @@
+from repro.rl.rollout import RolloutRunner, StepStats
+from repro.rl.tasks import (
+    make_coding_workload,
+    make_deepsearch_workload,
+    make_mopd_workload,
+    workload_services,
+)
+
+__all__ = [
+    "RolloutRunner",
+    "StepStats",
+    "make_coding_workload",
+    "make_deepsearch_workload",
+    "make_mopd_workload",
+    "workload_services",
+]

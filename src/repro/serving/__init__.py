@@ -1,0 +1,4 @@
+from repro.serving.engine import Engine, GenerationConfig
+from repro.serving.reward_service import RewardService, deploy_reward_service
+
+__all__ = ["Engine", "GenerationConfig", "RewardService", "deploy_reward_service"]

@@ -1,0 +1,72 @@
+"""Serving engine: batched prefill + autoregressive decode.
+
+Used both by the examples (serve a small model with batched requests)
+and by the GPU manager's reward services (rl/ + serving/reward_service).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import ModelApi
+from repro.sharding.rules import Rules
+
+
+@dataclasses.dataclass
+class GenerationConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0  # 0 => greedy
+    cache_len: int = 512
+    sliding_window: int = 0
+
+
+class Engine:
+    """Compiles prefill/decode once per (batch, cache_len) signature."""
+
+    def __init__(self, api: ModelApi, params, gen: GenerationConfig, rules: Optional[Rules] = None):
+        self.api = api
+        self.params = params
+        self.gen = gen
+        self.rules = rules
+        self._prefill = jax.jit(lambda p, b: api.prefill(p, b, rules))
+        self._decode = jax.jit(
+            lambda p, s, t: api.decode_step(
+                p, s, t, rules, sliding_window=gen.sliding_window
+            )
+        )
+
+    def generate(
+        self, batch: Dict[str, jax.Array], key: Optional[jax.Array] = None
+    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Returns (generated tokens [B, max_new], per-step logprobs)."""
+        logits, state = self._prefill(self.params, batch)
+        B = logits.shape[0]
+        out_toks = []
+        out_logps = []
+        key = key if key is not None else jax.random.PRNGKey(0)
+        for i in range(self.gen.max_new_tokens):
+            if self.gen.temperature > 0:
+                key, sub = jax.random.split(key)
+                tok = jax.random.categorical(sub, logits / self.gen.temperature, axis=-1)
+            else:
+                tok = jnp.argmax(logits, axis=-1)
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            out_logps.append(jnp.take_along_axis(logp, tok[:, None], axis=-1)[:, 0])
+            tok = tok[:, None].astype(jnp.int32)
+            out_toks.append(tok)
+            logits, state = self._decode(self.params, state, tok)
+        return jnp.concatenate(out_toks, axis=1), jnp.stack(out_logps, axis=1)
+
+    def score(self, batch: Dict[str, jax.Array]) -> jnp.ndarray:
+        """Sequence log-likelihood (used by LLM-as-judge reward services)."""
+        from repro.training.grpo import token_logprobs
+
+        logp = token_logprobs(self.params, batch["tokens"], self.api, self.rules)
+        mask = batch.get("mask")
+        if mask is not None:
+            return jnp.sum(logp * mask, axis=-1)
+        return jnp.sum(logp, axis=-1)

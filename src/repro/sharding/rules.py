@@ -1,0 +1,114 @@
+"""Logical-axis -> physical-mesh sharding rules.
+
+Production meshes (launch/mesh.py): ``(data=16, model=16)`` single-pod,
+``(pod=2, data=16, model=16)`` multi-pod.  Logical rules:
+
+* ``batch``     -> all data-parallel axes (``pod`` + ``data``);
+* ``heads`` / ``mlp`` / ``vocab`` / ``expert`` -> ``model`` (tensor /
+  expert parallelism);
+* ``capacity``  -> data axes (the MoE dispatch buffer is co-sharded with
+  tokens so GSPMD emits the expert all-to-all);
+* ``embed``     -> ``data`` when FSDP is on (params sharded within a pod,
+  replicated across pods — multi-pod FSDP would put optimizer-state
+  gathers on the slow cross-pod links);
+* ``kv_seq``    -> data axes for the long-context decode caches.
+
+Every rule silently falls back to replication when the dimension is not
+divisible by the mesh-axis extent (e.g. granite's 24 heads or smollm's
+15 heads on a 16-way model axis — the FFN still shards; see DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class Rules:
+    mesh: Mesh
+    mapping: Dict[str, Tuple[str, ...]]
+    axis_sizes: Dict[str, int]
+
+    def spec(self, shape: Sequence[int], dims: Sequence[Optional[str]]) -> P:
+        """PartitionSpec for ``shape`` with logical ``dims`` labels."""
+        assert len(shape) == len(dims), f"{shape} vs {dims}"
+        used: set = set()
+        out = []
+        for size, dim in zip(shape, dims):
+            axes = self.mapping.get(dim or "", ())
+            axes = tuple(a for a in axes if a not in used)
+            extent = math.prod(self.axis_sizes[a] for a in axes) if axes else 1
+            if axes and size % extent == 0 and size >= extent:
+                out.append(axes if len(axes) > 1 else axes[0])
+                used.update(axes)
+            else:
+                out.append(None)
+        while out and out[-1] is None:
+            out.pop()
+        return P(*out)
+
+    def sharding(self, shape: Sequence[int], dims: Sequence[Optional[str]]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(shape, dims))
+
+    def constrain(self, x: jax.Array, dims: Sequence[Optional[str]]) -> jax.Array:
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.spec(x.shape, dims))
+        )
+
+    def extent(self, dim: str) -> int:
+        """Total mesh extent the logical ``dim`` maps onto (1 if unmapped)."""
+        axes = self.mapping.get(dim, ())
+        return math.prod(self.axis_sizes[a] for a in axes) if axes else 1
+
+    @property
+    def data_axes(self) -> Tuple[str, ...]:
+        return self.mapping["batch"]
+
+    @property
+    def data_extent(self) -> int:
+        return math.prod(self.axis_sizes[a] for a in self.data_axes)
+
+
+def make_rules(mesh: Mesh, fsdp: bool = False, seq_shard: bool = False) -> Rules:
+    axes = mesh.axis_names
+    data_axes: Tuple[str, ...] = (
+        ("pod", "data") if "pod" in axes else ("data",)
+    )
+    mapping: Dict[str, Tuple[str, ...]] = {
+        "batch": data_axes,
+        "capacity": data_axes,
+        "kv_seq": data_axes,
+        "seq": data_axes if seq_shard else (),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        # decode KV caches: sequence sharded over the model axis (batch
+        # occupies data).  Avoids sub-axis kv x hd splits entirely; the
+        # attention's softmax/output reductions over the sharded S are
+        # KB-scale vs the 100 MB/layer cache re-gathers any head-dim
+        # sharding forces for GQA (EXPERIMENTS.md §Perf iteration 7).
+        "cache_seq": ("model",),
+        "qkv": ("model",),
+        "mlp": ("model",),
+        "vocab": ("model",),
+        "expert": ("model",),
+        "ssm_inner": ("model",),
+        "embed": ("data",) if fsdp else (),
+        "embed_tp": ("model",),  # activations' d_model inside TP regions
+        "layers": (),
+        "head_dim": (),
+        "ssm_state": (),
+        "": (),
+    }
+    return Rules(mesh=mesh, mapping=mapping, axis_sizes=dict(mesh.shape))
+
+
+def single_device_rules() -> Rules:
+    """Rules over the trivial 1-device mesh (tests / smoke runs)."""
+    dev = jax.devices()[0]
+    mesh = Mesh([[dev]], axis_names=("data", "model"))
+    return make_rules(mesh)

@@ -1,0 +1,64 @@
+"""Checkpointing: flat-path .npz snapshots of arbitrary pytrees.
+
+No orbax in the offline image; numpy archives are portable, atomic
+(write-then-rename) and sufficient for CPU-scale runs.  Sharded arrays
+are gathered before save (callers on real pods would swap in a
+process-local variant writing one shard file per host).
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def save_checkpoint(path: str, tree: Any, step: int = 0) -> None:
+    flat = _flatten(tree)
+    flat["__step__"] = np.asarray(step)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)))
+    os.close(fd)
+    try:
+        np.savez(tmp, **flat)
+        os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
+    finally:
+        for cand in (tmp, tmp + ".npz"):
+            if os.path.exists(cand):
+                os.remove(cand)
+
+
+def load_checkpoint(path: str, like: Any) -> Tuple[Any, int]:
+    """Restore into the structure of ``like`` (shape/dtype respected)."""
+    data = np.load(path)
+    step = int(data["__step__"]) if "__step__" in data else 0
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(like)
+    new_leaves = []
+    for path_t, leaf in leaves_with_path:
+        key = "/".join(_path_str(p) for p in path_t)
+        if key not in data:
+            raise KeyError(f"checkpoint missing {key!r}")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != expected {leaf.shape}")
+        new_leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), step

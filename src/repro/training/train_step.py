@@ -1,0 +1,101 @@
+"""Jittable train step(s): LM pre-training and the pjit wiring helpers."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import ModelApi
+from repro.sharding.rules import Rules
+from repro.training.optimizer import (
+    AdamWConfig,
+    AdamWState,
+    adamw_update,
+    init_adamw,
+)
+
+
+class TrainState:
+    """Lightweight pytree container (registered below)."""
+
+    def __init__(self, params: Any, opt: AdamWState):
+        self.params = params
+        self.opt = opt
+
+    def tree_flatten(self):
+        return (self.params, self.opt), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    TrainState, TrainState.tree_flatten, TrainState.tree_unflatten
+)
+
+
+def init_train_state(api: ModelApi, key: jax.Array) -> TrainState:
+    params = api.init(key)
+    return TrainState(params, init_adamw(params))
+
+
+def make_train_step(
+    api: ModelApi,
+    opt_cfg: AdamWConfig,
+    rules: Optional[Rules] = None,
+):
+    """Returns ``train_step(state, batch) -> (state, metrics)``."""
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        def loss_fn(params):
+            loss, metrics = api.loss_fn(params, batch, rules)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(state.params)
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt_cfg, state.params, grads, state.opt
+        )
+        out = {"loss": loss, **metrics, **opt_metrics}
+        return TrainState(new_params, new_opt), out
+
+    return train_step
+
+
+def make_grad_accum_train_step(
+    api: ModelApi,
+    opt_cfg: AdamWConfig,
+    accum_steps: int,
+    rules: Optional[Rules] = None,
+):
+    """Microbatched step: batch leading dim = [accum, micro_batch, ...]."""
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        def loss_fn(params, micro):
+            loss, _ = api.loss_fn(params, micro, rules)
+            return loss
+
+        def acc_body(carry, micro):
+            gsum, lsum = carry
+            loss, grads = jax.value_and_grad(loss_fn)(state.params, micro)
+            gsum = jax.tree.map(jnp.add, gsum, grads)
+            return (gsum, lsum + loss), None
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+        )
+        (gsum, lsum), _ = jax.lax.scan(acc_body, (zeros, 0.0), batch)
+        grads = jax.tree.map(lambda g: g / accum_steps, gsum)
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt_cfg, state.params, grads, state.opt
+        )
+        return TrainState(new_params, new_opt), {
+            "loss": lsum / accum_steps,
+            **opt_metrics,
+        }
+
+    return train_step

@@ -1,0 +1,181 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+I = dict(interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,H,KV,S,d", [
+    (1, 2, 2, 128, 32),
+    (2, 4, 2, 128, 64),   # GQA g=2
+    (1, 8, 1, 256, 32),   # MQA
+    (2, 2, 2, 256, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(B, H, KV, S, d, dtype):
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(keys[0], (B, H, S, d), dtype)
+    k = jax.random.normal(keys[1], (B, KV, S, d), dtype)
+    v = jax.random.normal(keys[2], (B, KV, S, d), dtype)
+    got = ops.flash_attention_op(q, k, v, block_q=64, block_k=64, **I)
+    want = ref.flash_attention_ref(q, k, v)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol
+    )
+
+
+def test_flash_attention_non_causal():
+    keys = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(keys[0], (1, 2, 128, 32))
+    k = jax.random.normal(keys[1], (1, 2, 128, 32))
+    v = jax.random.normal(keys[2], (1, 2, 128, 32))
+    got = ops.flash_attention_op(q, k, v, causal=False, block_q=64, block_k=64, **I)
+    want = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("block_q,block_k", [(32, 128), (128, 32), (64, 64)])
+def test_flash_attention_block_shape_sweep(block_q, block_k):
+    keys = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(keys[0], (1, 2, 128, 64))
+    k = jax.random.normal(keys[1], (1, 1, 128, 64))
+    v = jax.random.normal(keys[2], (1, 1, 128, 64))
+    got = ops.flash_attention_op(q, k, v, block_q=block_q, block_k=block_k, **I)
+    want = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD intra-chunk
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("BNC,H,Q,hd,N", [
+    (2, 3, 32, 16, 8),
+    (4, 2, 64, 32, 16),
+    (1, 1, 128, 64, 32),
+])
+def test_ssd_intra_chunk_matches_ref(BNC, H, Q, hd, N):
+    keys = jax.random.split(jax.random.PRNGKey(3), 4)
+    x = jax.random.normal(keys[0], (BNC, H, Q, hd)) * 0.5
+    b = jax.random.normal(keys[1], (BNC, Q, N)) * 0.5
+    c = jax.random.normal(keys[2], (BNC, Q, N)) * 0.5
+    # realistic decays: negative, monotonically decreasing cumsums
+    cum = -jnp.cumsum(jax.random.uniform(keys[3], (BNC, H, Q)) * 0.1, axis=-1)
+    y, st = ops.ssd_intra_chunk_op(x, b, c, cum, **I)
+    for i in range(BNC):
+        for h in range(H):
+            y_ref, st_ref = ref.ssd_chunk_ref(x[i, h], b[i], c[i], cum[i, h])
+            np.testing.assert_allclose(
+                np.asarray(y[i, h]), np.asarray(y_ref), rtol=1e-4, atol=1e-4
+            )
+            np.testing.assert_allclose(
+                np.asarray(st[i, h]), np.asarray(st_ref), rtol=1e-4, atol=1e-4
+            )
+
+
+def test_ssd_kernel_agrees_with_model_ssd():
+    """The kernel's intra-chunk math must match the model's ssd_scan when
+    the sequence is a single chunk (no inter-chunk contribution)."""
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.models.ssm import _project, ssd_scan_with_state
+
+    cfg = get_config("mamba2-130m").reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    lp = jax.tree.map(lambda a: a[0], params["layers"])["ssm"]
+    B, S = 1, cfg.ssm_chunk  # one chunk
+    xin = jax.random.normal(jax.random.PRNGKey(5), (B, S, cfg.d_model)) * 0.5
+    z, xs, b, c, dt = _project(lp, xin, cfg)
+    A = -jnp.exp(lp["a_log"].astype(jnp.float32))
+    cum = jnp.cumsum(dt * A, axis=1)  # [B,S,H]
+    xdt = (xs * dt[..., None].astype(xs.dtype)).astype(jnp.float32)
+
+    # kernel layout: [BNC=B, H, Q, hd] / [B, Q, N] / [B, H, Q]
+    y_k, st_k = ops.ssd_intra_chunk_op(
+        jnp.moveaxis(xdt, 2, 1),  # [B,H,S,hd]
+        b.astype(jnp.float32),
+        c.astype(jnp.float32),
+        jnp.moveaxis(cum, 2, 1),  # [B,H,S]
+        **I,
+    )
+    # model: full ssd on the same single chunk
+    _, st_model = ssd_scan_with_state(lp, xin, cfg, None)
+    np.testing.assert_allclose(
+        np.asarray(st_k[:, :, :, :]).transpose(0, 1, 2, 3),
+        np.asarray(st_model),
+        rtol=5e-3,
+        atol=5e-3,
+    )
+
+
+# ---------------------------------------------------------------------------
+# MoE grouped matmul
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("E,C,D,F", [
+    (4, 128, 128, 128),
+    (2, 256, 128, 256),
+    (8, 128, 256, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_moe_matmul_matches_ref(E, C, D, F, dtype):
+    keys = jax.random.split(jax.random.PRNGKey(4), 2)
+    buf = jax.random.normal(keys[0], (E, C, D), dtype)
+    w = jax.random.normal(keys[1], (E, D, F), dtype) * 0.1
+    got = ops.moe_matmul_op(buf, w, **I)
+    want = ref.moe_matmul_ref(buf, w)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol
+    )
+
+
+def test_moe_matmul_block_sweep():
+    buf = jax.random.normal(jax.random.PRNGKey(6), (2, 256, 256))
+    w = jax.random.normal(jax.random.PRNGKey(7), (2, 256, 256)) * 0.1
+    want = ref.moe_matmul_ref(buf, w)
+    for bc, bd, bf in [(64, 128, 64), (128, 64, 128), (256, 256, 256)]:
+        got = ops.moe_matmul_op(buf, w, block_c=bc, block_d=bd, block_f=bf, **I)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("T,D", [(256, 128), (512, 256), (128, 1024)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_matches_ref(T, D, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(8), (T, D), dtype)
+    w = jax.random.normal(jax.random.PRNGKey(9), (D,), dtype)
+    got = ops.rmsnorm_op(x, w, block_rows=128, **I)
+    want = ref.rmsnorm_ref(x, w)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol
+    )
+
+
+def test_rmsnorm_matches_model_layer():
+    from repro.models.layers import rms_norm
+
+    x = jax.random.normal(jax.random.PRNGKey(10), (64, 4, 128))
+    w = jnp.ones((128,))
+    got = ops.rmsnorm_op(x, w, block_rows=64, **I)
+    want = rms_norm(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,161 @@
+"""RL layer: workload generators + rollout runner + paper-claim checks."""
+
+import math
+
+import pytest
+
+from repro.core.cluster import paper_testbed
+from repro.rl.driver import run_baseline_step, run_tangram_step
+from repro.rl.tasks import (
+    make_coding_workload,
+    make_deepsearch_workload,
+    make_mopd_workload,
+    workload_services,
+)
+
+
+class TestWorkloadGenerators:
+    def test_deterministic(self):
+        a = make_coding_workload(10, seed=3)
+        b = make_coding_workload(10, seed=3)
+        for x, y in zip(a, b):
+            assert x.traj_id == y.traj_id
+            assert len(x.turns) == len(y.turns)
+            assert x.arrival_s == y.arrival_s
+
+    def test_coding_actions_well_formed(self):
+        trajs = make_coding_workload(5)
+        for t in trajs:
+            assert t.turns, "coding trajectories are multi-turn"
+            a = t.reward[0].make(t.task_id, t.traj_id)
+            assert a.key_resource == "cpu"
+            assert a.scalable
+            assert a.cost["cpu"].units == (1, 2, 4, 8, 16, 32)
+
+    def test_mopd_teachers_enumerated(self):
+        trajs = make_mopd_workload(20, n_teachers=5, teachers_per_traj=2)
+        services = workload_services(trajs)
+        assert all(s.startswith("teacher") for s in services)
+        assert len(services) <= 5
+
+    def test_deepsearch_uses_basic_resources(self):
+        trajs = make_deepsearch_workload(5)
+        apis = set()
+        for t in trajs:
+            for turn in t.turns:
+                for tmpl in turn.actions:
+                    a = tmpl.make(t.task_id, t.traj_id)
+                    apis.update(a.cost)
+        assert apis <= {"google_search", "web_fetch", "pdf_parse"}
+
+
+class TestRolloutRunner:
+    def test_all_trajectories_complete(self):
+        cluster = paper_testbed(cpu_nodes=2, gpu_nodes=2)
+        trajs = make_coding_workload(16)
+        stats, tg = run_tangram_step(trajs, cluster)
+        assert stats.step_duration > 0
+        assert math.isfinite(stats.mean_act)
+        assert tg.queue_depth() == 0 and tg.in_flight() == 0
+        # every reward ran exactly once
+        rewards = [r for r in tg.telemetry.records if r.name.startswith("reward")]
+        assert len(rewards) == 16
+
+    def test_stage_durations_tracked(self):
+        cluster = paper_testbed(cpu_nodes=2, gpu_nodes=2)
+        trajs = make_coding_workload(8)
+        stats, _ = run_tangram_step(trajs, cluster)
+        assert stats.stage_durations["gen"] > 0
+        assert stats.stage_durations["tool"] > 0
+        assert stats.stage_durations["reward"] > 0
+
+
+class TestPaperClaims:
+    """Qualitative reproduction gates on small-scale versions of §6.2/6.3."""
+
+    def test_coding_act_improvement(self):
+        """Tangram must beat the k8s baseline clearly on bursty coding."""
+        cluster = paper_testbed(cpu_nodes=2, cores_per_node=128, gpu_nodes=1)
+        trajs = make_coding_workload(128, arrival_spread_s=20)
+        tg, _ = run_tangram_step(trajs, cluster)
+        bl, _ = run_baseline_step(trajs, cluster)
+        assert bl.mean_act / tg.mean_act > 1.5, (
+            f"expected >1.5x ACT gain, got {bl.mean_act / tg.mean_act:.2f}"
+        )
+
+    def test_coding_step_speedup(self):
+        cluster = paper_testbed(cpu_nodes=2, cores_per_node=128, gpu_nodes=1)
+        trajs = make_coding_workload(128, arrival_spread_s=20)
+        tg, _ = run_tangram_step(trajs, cluster)
+        bl, _ = run_baseline_step(trajs, cluster)
+        assert bl.step_duration > tg.step_duration
+
+    def test_mopd_multiplexing_beats_static(self):
+        cluster = paper_testbed(cpu_nodes=1, gpu_nodes=3)
+        trajs = make_mopd_workload(128, n_teachers=6, arrival_spread_s=5)
+        tg, _ = run_tangram_step(trajs, cluster)
+        st, _ = run_baseline_step(trajs, cluster, gpu_baseline="static")
+        assert tg.mean_act < st.mean_act
+
+    def test_resource_saving_at_equal_act(self):
+        """§6.3 / Fig. 8b Right: Tangram serves 10 reward services on ~30%
+        of the GPUs the static baseline needs, at comparable ACT (paper:
+        29% of GPUs, same ACT — i.e. 71.2% savings).
+
+        Regime calibration (see EXPERIMENTS.md): the claim holds where
+        teacher popularity is heavily skewed (Fig. 3d: invocations vary by
+        orders of magnitude) so the static baseline's hot services saturate
+        while its cold services idle, and aggregate demand (~9 GPU-equiv)
+        still fits Tangram's pooled 12 GPUs."""
+        from repro.core.cluster import ClusterSpec, CpuNodeSpec, GpuNodeSpec
+
+        trajs = make_mopd_workload(
+            128, n_teachers=10, arrival_spread_s=240, teacher_skew=3.0
+        )
+        static, _ = run_baseline_step(
+            trajs, paper_testbed(cpu_nodes=1, gpu_nodes=5), gpu_baseline="static"
+        )
+        small_cluster = ClusterSpec(
+            cpu_nodes=(CpuNodeSpec(name="cpu0"),),
+            gpu_nodes=(
+                GpuNodeSpec(name="gpu0", devices=8),
+                GpuNodeSpec(name="gpu1", devices=4),
+            ),
+        )
+        small, _ = run_tangram_step(trajs, small_cluster)
+        # 12 GPUs (30% of the static baseline's 40) at <=1.2x its ACT
+        assert small.mean_act <= static.mean_act * 1.2
+
+    def test_elastic_beats_fixed_dop(self):
+        """Fig. 9: elastic allocation adapts to contention where any fixed
+        DoP is wrong at one end of the load range.  Paper: 2.0x vs DoP=4
+        at low batch (resources abundant -> scale up) and 3.0x vs DoP=16
+        at high batch (congested -> shrink toward min units)."""
+        from benchmarks.fig9_elastic import _fix_dop
+
+        # abundant: elastic scales rewards up, fixed4 underuses the pool
+        cluster = paper_testbed(cpu_nodes=1, cores_per_node=128, gpu_nodes=1)
+        trajs = make_coding_workload(32, arrival_spread_s=10)
+        elastic, _ = run_tangram_step(trajs, cluster)
+        fixed4, _ = run_tangram_step(_fix_dop(trajs, 4), cluster)
+        assert fixed4.mean_act / elastic.mean_act > 1.5, (
+            f"abundant: expected >1.5x vs fixed4, got "
+            f"{fixed4.mean_act / elastic.mean_act:.2f}"
+        )
+
+        # congested: elastic shrinks toward min units, fixed16 thrashes
+        cluster = paper_testbed(cpu_nodes=1, cores_per_node=64, gpu_nodes=1)
+        trajs = make_coding_workload(192, arrival_spread_s=10)
+        elastic, _ = run_tangram_step(trajs, cluster)
+        fixed16, _ = run_tangram_step(_fix_dop(trajs, 16), cluster)
+        assert fixed16.mean_act / elastic.mean_act > 1.5, (
+            f"congested: expected >1.5x vs fixed16, got "
+            f"{fixed16.mean_act / elastic.mean_act:.2f}"
+        )
+
+    def test_serverless_baseline_worse_than_tangram(self):
+        cluster = paper_testbed(cpu_nodes=1, gpu_nodes=2)
+        trajs = make_mopd_workload(96, n_teachers=6, arrival_spread_s=5)
+        tg, _ = run_tangram_step(trajs, cluster)
+        sl, _ = run_baseline_step(trajs, cluster, gpu_baseline="serverless")
+        assert tg.mean_act < sl.mean_act

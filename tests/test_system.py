@@ -1,0 +1,161 @@
+"""End-to-end behaviour tests: the full submit -> formulate -> schedule ->
+execute -> observe cycle (paper §3) across heterogeneous resources, with
+the mixed "MOPD+Search" scenario from §6.2 and Table-1-style invariants.
+"""
+
+import math
+
+import pytest
+
+from repro.core.cluster import paper_testbed
+from repro.core.managers.gpu import GpuManager
+from repro.rl.driver import build_tangram, run_baseline_step, run_tangram_step
+from repro.rl.rollout import RolloutRunner
+from repro.rl.tasks import (
+    make_coding_workload,
+    make_deepsearch_workload,
+    make_mopd_workload,
+    workload_services,
+)
+
+
+def _mixed_workload(seed=0):
+    """MOPD + DeepSearch sharing one resource pool (paper 'MOPD+Search')."""
+    mopd = make_mopd_workload(48, seed=seed, n_teachers=6, arrival_spread_s=30)
+    search = make_deepsearch_workload(32, seed=seed + 1)
+    return mopd + search
+
+
+class TestMixedWorkloadE2E:
+    def test_all_actions_complete_exactly_once(self):
+        cluster = paper_testbed(cpu_nodes=2, gpu_nodes=2)
+        trajs = _mixed_workload()
+        stats, tg = run_tangram_step(trajs, cluster)
+        assert tg.queue_depth() == 0 and tg.in_flight() == 0
+        # one telemetry record per submitted action
+        expected = sum(
+            len(turn.actions) for t in trajs for turn in t.turns
+        ) + sum(len(t.reward) for t in trajs)
+        assert len(tg.telemetry.records) == expected
+        assert math.isfinite(stats.mean_act) and stats.mean_act > 0
+
+    def test_breakdown_structure_matches_table1(self):
+        """ACT decomposes into exec + queue + sys overhead (Table 1)."""
+        cluster = paper_testbed(cpu_nodes=2, gpu_nodes=2)
+        stats, tg = run_tangram_step(_mixed_workload(), cluster)
+        br = stats.breakdown
+        assert set(br) >= {"exec", "queue", "overhead"}
+        assert all(v >= 0 for v in br.values())
+        assert br["exec"] > 0
+        # mean ACT equals the breakdown sum (it is a decomposition)
+        assert stats.mean_act == pytest.approx(
+            br["exec"] + br["queue"] + br["overhead"], rel=1e-6
+        )
+
+    def test_cpu_overhead_under_3_percent(self):
+        """Table 1: CPU-workload system overhead is <3% of exec time."""
+        cluster = paper_testbed(cpu_nodes=2, cores_per_node=128, gpu_nodes=1)
+        stats, _ = run_tangram_step(make_coding_workload(64), cluster)
+        assert stats.breakdown["overhead"] < 0.03 * stats.breakdown["exec"]
+
+    def test_mixed_beats_static_baseline(self):
+        """§6.2 'MOPD+Search': pooling across tasks beats per-task statics.
+
+        The static baseline deploys every service on dedicated TP-4 GPUs
+        regardless of cluster size (that IS the over-provisioning), so the
+        equal-resources comparison needs a cluster that can actually hold
+        all 7 services x 4 GPUs: gpu_nodes=4 -> 32 devices."""
+        cluster = paper_testbed(cpu_nodes=2, gpu_nodes=4)
+        trajs = _mixed_workload()
+        tg_stats, _ = run_tangram_step(trajs, cluster)
+        bl_stats, _ = run_baseline_step(trajs, cluster, gpu_baseline="static")
+        assert tg_stats.mean_act < bl_stats.mean_act
+
+
+class TestResourceInvariants:
+    def test_gpu_chunks_never_oversubscribed(self):
+        """EOE + chunk allocator: at completion all chunks are free and
+        hits+misses account for every service-backed execution."""
+        cluster = paper_testbed(cpu_nodes=1, gpu_nodes=2)
+        trajs = make_mopd_workload(48, n_teachers=6, arrival_spread_s=10)
+        _, tg = run_tangram_step(trajs, cluster)
+        gm = tg.managers["gpu"]
+        assert isinstance(gm, GpuManager)
+        assert gm.available == gm.capacity  # everything released
+        served = gm.stats["hits"] + gm.stats["misses"]
+        gpu_actions = [
+            r for r in tg.telemetry.records if r.name.startswith("reward")
+        ]
+        assert served == len(gpu_actions)
+        assert gm.stats["restore_s"] >= 0
+
+    def test_api_quota_respected(self):
+        """Basic manager: per-window quota consumption never exceeds the
+        configured quota (DeepSearch google_search is quota-mode)."""
+        cluster = paper_testbed(cpu_nodes=1, gpu_nodes=1)
+        trajs = make_deepsearch_workload(64, seed=3)
+        _, tg = run_tangram_step(trajs, cluster)
+        mgr = tg.managers["google_search"]
+        spec = next(a for a in cluster.apis if a.name == "google_search")
+        for used in getattr(mgr, "window_usage", lambda: [])():
+            assert used <= spec.quota
+
+    def test_fcfs_no_starvation(self):
+        """Every submitted action eventually runs; queue drains to zero
+        even under heavy contention (starvation kills trajectories)."""
+        cluster = paper_testbed(cpu_nodes=1, cores_per_node=64, gpu_nodes=1)
+        trajs = make_coding_workload(128, arrival_spread_s=5)
+        _, tg = run_tangram_step(trajs, cluster)
+        assert tg.queue_depth() == 0 and tg.in_flight() == 0
+        for rec in tg.telemetry.records:
+            assert rec.start >= rec.submit
+            assert rec.finish > rec.start
+
+    def test_vectorized_constraints_all_resources(self):
+        """An action's allocation never exceeds any cost dimension's
+        feasible set (the scheduler's vectorized constraint, §4.1)."""
+        cluster = paper_testbed(cpu_nodes=1, gpu_nodes=1)
+        trajs = _mixed_workload(seed=5)
+        _, tg = run_tangram_step(trajs, cluster)
+        by_name = {}
+        for t in trajs:
+            for turn in t.turns:
+                for tmpl in turn.actions:
+                    a = tmpl.make(t.task_id, t.traj_id)
+                    by_name.setdefault(a.name, a)
+            for tmpl in t.reward:
+                a = tmpl.make(t.task_id, t.traj_id)
+                by_name.setdefault(a.name, a)
+        for rec in tg.telemetry.records:
+            proto = by_name.get(rec.name)
+            if proto is None:
+                continue
+            for rtype, units in rec.units.items():
+                assert units in proto.cost[rtype].units
+
+
+class TestSchedulerModesE2E:
+    def test_beyond_paper_mode_runs_clean(self):
+        """The opt-in scheduler extensions complete the same workload with
+        identical action accounting (no lost/duplicated actions)."""
+        from repro.core.scheduler import ElasticScheduler
+
+        cluster = paper_testbed(cpu_nodes=1, cores_per_node=64, gpu_nodes=1)
+        trajs = make_coding_workload(64, arrival_spread_s=10)
+        services = workload_services(trajs)
+
+        tg = build_tangram(cluster, services)
+        tg.scheduler = ElasticScheduler(
+            depth=2, history=tg.history, estimate_units="dp_avg"
+        )
+        tg.scheduler.eviction_search = "exhaustive"
+        tg.scheduler.dop_floor = 4
+        runner = RolloutRunner(
+            {"*": tg, "cpu": tg, "gpu": tg, **{a.name: tg for a in cluster.apis}},
+            tg.loop,
+        )
+        stats = runner.run_step(trajs)
+        assert tg.queue_depth() == 0 and tg.in_flight() == 0
+        rewards = [r for r in tg.telemetry.records if r.name.startswith("reward")]
+        assert len(rewards) == 64
+        assert math.isfinite(stats.mean_act)
