@@ -6,6 +6,8 @@ The paper's contribution, as a composable library:
 * :mod:`repro.core.scheduler`  — elastic scheduling, Algorithms 1-2 (§4.2)
 * :mod:`repro.core.dparrange`  — topology-agnostic DPArrange, Alg. 3-4 (App. B)
 * :mod:`repro.core.managers`   — Basic / CPU(AOE) / GPU(EOE) managers (§5)
+* :mod:`repro.core.orchestrator` — event-driven control plane: partitioned
+  queues, incremental rounds, policies, action lifecycle
 * :mod:`repro.core.tangram`    — the system facade (§3)
 * :mod:`repro.core.baselines`  — k8s / SGLang / ServerlessLLM baselines (§6.1)
 * :mod:`repro.core.simulator`  — discrete-event engine
@@ -31,8 +33,16 @@ from repro.core.dparrange import (
     brute_force_arrange,
     dp_arrange,
 )
+from repro.core.baselines import FcfsPolicy, StaticDopPolicy
 from repro.core.managers import BasicResourceManager, CpuManager, GpuManager
 from repro.core.managers.gpu import ChunkAllocator, ServiceSpec
+from repro.core.orchestrator import (
+    ActionCancelled,
+    ActionError,
+    ActionTimeout,
+    Orchestrator,
+    SchedulingPolicy,
+)
 from repro.core.scheduler import ElasticScheduler
 from repro.core.simulator import EventLoop, SimClock
 from repro.core.tangram import Tangram
@@ -40,6 +50,9 @@ from repro.core.telemetry import Telemetry
 
 __all__ = [
     "Action",
+    "ActionCancelled",
+    "ActionError",
+    "ActionTimeout",
     "AmdahlElasticity",
     "BasicDPOperator",
     "BasicResourceManager",
@@ -51,12 +64,16 @@ __all__ = [
     "Elasticity",
     "ElasticScheduler",
     "EventLoop",
+    "FcfsPolicy",
     "GpuChunkDPOperator",
     "GpuManager",
     "LinearElasticity",
+    "Orchestrator",
     "ResourceRequest",
+    "SchedulingPolicy",
     "ServiceSpec",
     "SimClock",
+    "StaticDopPolicy",
     "Tangram",
     "TableElasticity",
     "Telemetry",

@@ -150,6 +150,14 @@ class ActionState(Enum):
     RUNNING = "running"
     DONE = "done"
     FAILED = "failed"
+    TIMEOUT = "timeout"
+    CANCELLED = "cancelled"
+
+
+#: States from which an action can never leave (its future is resolved).
+TERMINAL_STATES = frozenset(
+    {ActionState.DONE, ActionState.FAILED, ActionState.TIMEOUT, ActionState.CANCELLED}
+)
 
 
 _ACTION_COUNTER = itertools.count()
@@ -173,6 +181,9 @@ class Action:
     fn: Optional[Callable[..., object]] = None
     duration_sampler: Optional[Callable[[int], float]] = None
     metadata: Dict[str, object] = field(default_factory=dict)
+    # --- lifecycle policy (orchestrator-enforced) ---
+    timeout_s: Optional[float] = None  # per-attempt deadline from (re)queueing
+    max_retries: int = 0  # bounded re-queue-at-head retries after timeout
 
     # --- lifecycle bookkeeping (filled by the system) ---
     uid: int = field(default_factory=lambda: next(_ACTION_COUNTER))
@@ -181,6 +192,8 @@ class Action:
     start_time: float = math.nan
     finish_time: float = math.nan
     sys_overhead: float = 0.0
+    attempts: int = 0  # completed (timed-out) attempts so far
+    failure: Optional[str] = None  # terminal failure reason, if any
     allocation: Optional[object] = None  # set by the manager
 
     def __post_init__(self) -> None:

@@ -17,6 +17,15 @@ generators drive either system unchanged.
 * :class:`UnmanagedApiSystem`      — DeepSearch baseline: clients fire
   API calls directly; rate-limit violations cause failures and <=3
   retries with a 600 s timeout.
+
+Additionally, two *policy-level* baselines implement the orchestrator's
+:class:`~repro.core.orchestrator.SchedulingPolicy` protocol, so ablations
+can swap the scheduling algorithm while keeping Tangram's managers,
+lifecycle, and telemetry:
+
+* :class:`FcfsPolicy`      — strict FCFS at minimum units, no elasticity;
+* :class:`StaticDopPolicy` — every scalable action pinned to one fixed
+  DoP (the SGLang-style "static TP" discipline) on a shared pool.
 """
 
 from __future__ import annotations
@@ -24,11 +33,83 @@ from __future__ import annotations
 import math
 import random
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.action import Action, ActionState
+from repro.core.scheduler import Decision, ScheduleResult
 from repro.core.simulator import EventLoop, Future
 from repro.core.telemetry import ActionRecord, Telemetry
+
+
+# ---------------------------------------------------------------------------
+# Policy-level baselines (SchedulingPolicy protocol)
+# ---------------------------------------------------------------------------
+
+
+class FcfsPolicy:
+    """Strict FCFS at least-required units — the no-elasticity ablation."""
+
+    def __init__(self, candidate_limit: int = 128) -> None:
+        self.candidate_limit = candidate_limit
+
+    def arrange(
+        self,
+        candidates: Sequence[Action],
+        remaining: Sequence[Action],
+        executing: Sequence[Action],
+        managers: Dict[str, object],
+        now: float,
+    ) -> ScheduleResult:
+        return ScheduleResult(
+            decisions=[Decision(a, a.min_cost()) for a in candidates]
+        )
+
+    def schedule(
+        self,
+        waiting: Sequence[Action],
+        executing: Sequence[Action],
+        managers: Dict[str, object],
+        now: float,
+    ) -> ScheduleResult:
+        from repro.core.orchestrator import candidate_window
+
+        candidates = candidate_window(waiting, managers, self.candidate_limit)
+        return self.arrange(
+            candidates, list(waiting[len(candidates) :]), executing, managers, now
+        )
+
+
+class StaticDopPolicy(FcfsPolicy):
+    """FCFS with every scalable action pinned at a fixed DoP (static TP).
+
+    The admission window still opens at min units, so an action whose
+    static DoP exceeds what is currently free simply fails allocation
+    and retries — mirroring the queueing behaviour of a fixed-TP
+    deployment on a shared pool.
+    """
+
+    def __init__(self, dop: int = 4, candidate_limit: int = 128) -> None:
+        super().__init__(candidate_limit)
+        self.dop = dop
+
+    def arrange(
+        self,
+        candidates: Sequence[Action],
+        remaining: Sequence[Action],
+        executing: Sequence[Action],
+        managers: Dict[str, object],
+        now: float,
+    ) -> ScheduleResult:
+        decisions = []
+        for a in candidates:
+            units = a.min_cost()
+            if a.key_resource is not None:
+                feasible = a.key_units()
+                units[a.key_resource] = max(
+                    (u for u in feasible if u <= self.dop), default=feasible[0]
+                )
+            decisions.append(Decision(a, units))
+        return ScheduleResult(decisions=decisions)
 
 
 class _BaseSystem:

@@ -19,7 +19,7 @@ scheduling algorithm".  The scheduler only ever calls:
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, Hashable, List, Optional, Sequence
 
 from repro.core.action import Action
 from repro.core.dparrange import BasicDPOperator, DPOperator
@@ -57,7 +57,28 @@ class ResourceManager:
 
     def can_accommodate(self, actions: Sequence[Action]) -> bool:
         """Admission test with every action at least-required units."""
-        return sum(self.min_units(a) for a in actions) <= self.available
+        state = self.begin_admission()
+        return all(self.admit_one(state, a) for a in actions)
+
+    # ------------------------------------------------------------------
+    # incremental admission (orchestrator candidate window)
+    # ------------------------------------------------------------------
+    # ``can_accommodate(prefix)`` re-evaluated for every FCFS prefix is
+    # O(n^2) per round.  The orchestrator instead opens one admission
+    # cursor per round and feeds actions through it one at a time:
+    # ``admit_one`` must behave exactly like extending the prefix, so
+    # the incremental window equals the seed's full-rescan window.
+    def begin_admission(self) -> object:
+        """Opaque mutable cursor over a *copy* of the free state."""
+        return [self.available]
+
+    def admit_one(self, state: object, action: Action) -> bool:
+        """Extend the admission prefix by one action at min units."""
+        need = self.min_units(action)
+        if need > state[0]:  # type: ignore[index]
+            return False
+        state[0] -= need  # type: ignore[index]
+        return True
 
     # ------------------------------------------------------------------
     # scheduling hooks
@@ -66,6 +87,15 @@ class ResourceManager:
         """``reserve`` units are already committed to co-scheduled actions
         in the same round and must be excluded from elastic scaling."""
         return BasicDPOperator(max(0, self.available - reserve))
+
+    def dp_cache_key(
+        self, actions: Sequence[Action], reserve: int = 0
+    ) -> Optional[Hashable]:
+        """Hashable key under which a DPArrange result over ``actions``
+        may be memoized, or None if results are state-dependent in ways
+        the key cannot capture.  Contract: equal keys (plus an equal task
+        list) imply ``dp_operator`` yields identical DP results."""
+        return (self.rtype, max(0, self.available - reserve))
 
     def partition(self, actions: Sequence[Action]) -> Dict[str, List[Action]]:
         """Sub-scheduling domains; default: one global domain."""
@@ -83,6 +113,12 @@ class ResourceManager:
     def release(self, action: Action, allocation: Allocation) -> None:
         self._in_use -= allocation.units
         assert self._in_use >= 0, f"{self.rtype}: negative usage"
+
+    def release_on_failure(self, action: Action, allocation: Allocation) -> None:
+        """Release after a timeout/cancel/failure mid-execution.  Default:
+        identical to a normal release; managers with non-returnable
+        consumption (quota tokens) or cleanup costs may override."""
+        self.release(action, allocation)
 
     # ------------------------------------------------------------------
     # lifetime hooks

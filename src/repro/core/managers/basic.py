@@ -54,9 +54,6 @@ class BasicResourceManager(ResourceManager):
             return self._tokens
         return super().available
 
-    def can_accommodate(self, actions: Sequence[Action]) -> bool:
-        return sum(self.min_units(a) for a in actions) <= self.available
-
     def try_allocate(self, action: Action, units: int) -> Optional[Allocation]:
         if self.mode == "quota":
             self._refill()

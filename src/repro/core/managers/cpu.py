@@ -144,25 +144,38 @@ class CpuManager(ResourceManager):
             return BasicDPOperator(max(0, free - reserve))
         return BasicDPOperator(max(0, self.available - reserve))
 
-    def can_accommodate(self, actions: Sequence[Action]) -> bool:
-        """Admission: greedy placement of min requirements respecting bindings."""
-        free = {n: s.free_core_count for n, s in self.nodes.items()}
-        mem = {n: s.free_mem_gb for n, s in self.nodes.items()}
-        for a in actions:
-            need = self.min_units(a)
-            bound = self._binding.get(a.trajectory_id)
-            if bound is not None:
-                if free[bound] < need:
-                    return False
-                free[bound] -= need
-            else:
-                tmem = float(a.metadata.get("traj_mem_gb", DEFAULT_TRAJ_MEM_GB))
-                cands = [n for n in free if free[n] >= need and mem[n] >= tmem]
-                if not cands:
-                    return False
-                pick = max(cands, key=lambda n: mem[n])
-                free[pick] -= need
-                mem[pick] -= tmem
+    def dp_cache_key(self, actions: Sequence[Action], reserve: int = 0):
+        nodes = {self._binding.get(a.trajectory_id) for a in actions}
+        nodes.discard(None)
+        if len(nodes) == 1:
+            name = next(iter(nodes))
+            return ("cpu", name, max(0, self.nodes[name].free_core_count - reserve))
+        return ("cpu", "*", max(0, self.available - reserve))
+
+    # admission (greedy placement of min requirements respecting bindings);
+    # ``can_accommodate`` is the inherited begin/admit loop over this cursor.
+    def begin_admission(self) -> object:
+        return (
+            {n: s.free_core_count for n, s in self.nodes.items()},
+            {n: s.free_mem_gb for n, s in self.nodes.items()},
+        )
+
+    def admit_one(self, state: object, action: Action) -> bool:
+        free, mem = state  # type: ignore[misc]
+        need = self.min_units(action)
+        bound = self._binding.get(action.trajectory_id)
+        if bound is not None:
+            if free[bound] < need:
+                return False
+            free[bound] -= need
+            return True
+        tmem = float(action.metadata.get("traj_mem_gb", DEFAULT_TRAJ_MEM_GB))
+        cands = [n for n in free if free[n] >= need and mem[n] >= tmem]
+        if not cands:
+            return False
+        pick = max(cands, key=lambda n: mem[n])
+        free[pick] -= need
+        mem[pick] -= tmem
         return True
 
     # ------------------------------------------------------------------

@@ -81,6 +81,9 @@ class ChunkAllocator:
         self.busy: Set[Tuple[int, int]] = set()  # (start, level)
         # cache tags: (start, level) -> (service key, last-used time)
         self.cache: Dict[Tuple[int, int], Tuple[ServiceKey, float]] = {}
+        # memoized free_level_counts (invalidated on allocate/release) —
+        # admission and DP feasibility hammer it between mutations
+        self._level_counts: Optional[List[int]] = None
 
     # ------------------------------------------------------------------
     @property
@@ -89,6 +92,8 @@ class ChunkAllocator:
 
     def free_level_counts(self) -> List[int]:
         """Free chunk counts per level under maximal buddy merging."""
+        if self._level_counts is not None:
+            return list(self._level_counts)
         counts = [len(self.free[l]) for l in range(self.max_level + 1)]
         # merging two level-l buddies yields a level-(l+1) chunk; emulate
         # canonical merge on counts using actual adjacency.
@@ -104,7 +109,8 @@ class ChunkAllocator:
                         frees[l + 1].add(min(start, buddy))
                         merged = True
                         break
-        return [len(frees[l]) for l in range(self.max_level + 1)]
+        self._level_counts = [len(frees[l]) for l in range(self.max_level + 1)]
+        return list(self._level_counts)
 
     # ------------------------------------------------------------------
     def _evict(self, chunk_key: Tuple[int, int]) -> None:
@@ -142,6 +148,7 @@ class ChunkAllocator:
         """Allocate >=m devices; returns (start, level, cache_hit)."""
         if m <= 0 or m > self.devices:
             return None
+        self._level_counts = None
         target = max(0, math.ceil(math.log2(m)))
         # 1) exact-level free chunk, preferring a cache hit, then untagged,
         #    then the LRU-tagged chunk (eviction victim).
@@ -188,6 +195,7 @@ class ChunkAllocator:
     def release(self, start: int, level: int, service: Optional[ServiceKey], now: float) -> None:
         key = (start, level)
         assert key in self.busy, f"releasing non-busy chunk {key}"
+        self._level_counts = None
         self.busy.discard(key)
         self.free[level].add(start)
         if service is not None:
@@ -241,19 +249,23 @@ class GpuManager(ResourceManager):
         return sum(a.free_capacity for a in self.allocators.values())
 
     # ------------------------------------------------------------------
-    def can_accommodate(self, actions: Sequence[Action]) -> bool:
-        counts = [0, 0, 0, 0]
-        for a in actions:
-            need = self.min_units(a)
-            if need == 0:
-                continue
-            dec = GpuChunkDPOperator.greedy_decompose(
-                1 << max(0, math.ceil(math.log2(need)))
-            )
-            if dec is None:
-                return False
-            counts = [x + y for x, y in zip(counts, dec)]
-        return self.feasible_multiset(tuple(counts))
+    def begin_admission(self) -> object:
+        return [0, 0, 0, 0]  # accumulated chunk-consumption multiset
+
+    def admit_one(self, state: object, action: Action) -> bool:
+        need = self.min_units(action)
+        if need == 0:
+            return True
+        dec = GpuChunkDPOperator.greedy_decompose(
+            1 << max(0, math.ceil(math.log2(need)))
+        )
+        if dec is None:
+            return False
+        trial = [x + y for x, y in zip(state, dec)]  # type: ignore[arg-type]
+        if not self.feasible_multiset(tuple(trial)):
+            return False
+        state[:] = trial  # type: ignore[index]
+        return True
 
     def feasible_multiset(self, counts: Tuple[int, int, int, int]) -> bool:
         """Can the pooled free chunks satisfy this consumption multiset?"""
@@ -284,6 +296,15 @@ class GpuManager(ResourceManager):
         max_counts = (free, free // 2, free // 4, free // 8)
         return GpuChunkDPOperator(
             max_counts, feasible=self.feasible_multiset, total_devices=free
+        )
+
+    def dp_cache_key(self, actions: Sequence[Action], reserve: int = 0):
+        # the DP's feasibility callback reads only the canonical per-node
+        # free-chunk level counts, so they (plus the unit budget) key it.
+        return (
+            "gpu",
+            max(0, self.available - reserve),
+            tuple(tuple(a.free_level_counts()) for a in self.allocators.values()),
         )
 
     # ------------------------------------------------------------------

@@ -35,11 +35,12 @@ from __future__ import annotations
 
 import heapq
 import math
+from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Hashable, List, Optional, Sequence, Tuple
 
 from repro.core.action import Action, DurationHistory
-from repro.core.dparrange import DPTask, dp_arrange, dp_arrange_prefixes
+from repro.core.dparrange import DPResult, DPTask, dp_arrange, dp_arrange_prefixes
 from repro.core.managers.base import ResourceManager
 
 INF = math.inf
@@ -67,10 +68,21 @@ class ElasticScheduler:
         candidate_limit: int = 128,
         history: Optional[DurationHistory] = None,
         estimate_units: str = "min",  # "min" (paper Alg. 2) | "dp_avg"
+        cache_dp: Optional[bool] = None,
     ) -> None:
         self.depth = depth
         self.candidate_limit = candidate_limit
         self.history = history or DurationHistory()
+        # Prefix-DP memo for incremental rounds: keyed on the manager's
+        # dp_cache_key (free state) + the exact task tuple, so a round
+        # whose resource group did not change reuses the arrangement.
+        # None = off (seed-faithful direct use); the Orchestrator enables
+        # it when running incrementally.
+        self.cache_dp = cache_dp
+        self.dp_cache_max = 512
+        self._dp_cache: "OrderedDict[Hashable, List[Optional[DPResult]]]" = OrderedDict()
+        self.dp_cache_hits = 0
+        self.dp_cache_misses = 0
         # BEYOND-PAPER (EXPERIMENTS.md §Perf, scheduler iterations): the
         # paper's Alg. 2 prices evicted/remaining actions at MIN-unit
         # durations, so under a burst eviction never engages (deferring a
@@ -118,14 +130,27 @@ class ElasticScheduler:
         managers: Dict[str, ResourceManager],
         now: float,
     ) -> ScheduleResult:
-        result = ScheduleResult()
         if not waiting:
-            return result
-
+            return ScheduleResult()
         candidates = self._candidate_window(waiting, managers)
+        remaining = list(waiting[len(candidates) :])
+        return self.arrange(candidates, remaining, executing, managers, now)
+
+    # ------------------------------------------------------------------
+    # Alg. 1 lines 3+ — SchedulingPolicy protocol entry point: the caller
+    # (the Orchestrator) has already picked the FCFS candidate window.
+    # ------------------------------------------------------------------
+    def arrange(
+        self,
+        candidates: Sequence[Action],
+        remaining: Sequence[Action],
+        executing: Sequence[Action],
+        managers: Dict[str, ResourceManager],
+        now: float,
+    ) -> ScheduleResult:
+        result = ScheduleResult()
         if not candidates:
             return result
-        remaining = list(waiting[len(candidates) :])
 
         # split by key elasticity resource (Alg. 1 line 4)
         groups: Dict[Optional[str], List[Action]] = {}
@@ -221,27 +246,41 @@ class ElasticScheduler:
             free = max(1, manager.available - reserve)
             if demand > self.floor_pressure * free:
                 floor = None
+        # tasks are named POSITIONALLY ("0".."m-1"), not by uid: the DP
+        # result depends only on the ordered (units, durations) profiles,
+        # so positional names let _prefixes_cached share arrangements
+        # across rounds whose task multiset recurs with fresh actions.
         tasks = []
-        for a in group:
+        for i, a in enumerate(group):
             units = a.key_units()
             if floor:
                 floored = tuple(m for m in units if m >= floor)
                 if floored:
                     units = floored
-            tasks.append(
-                DPTask(
-                    name=str(a.uid),
-                    units=units,
-                    durations=tuple(a.get_dur(m) for m in units),
-                )
-            )
-        prefixes = dp_arrange_prefixes(tasks, manager.dp_operator(group, reserve))
+            # per-action duration-vector memo: the elasticity curve is
+            # immutable, and the same action re-enters _greedy_eviction on
+            # every round it stays queued.
+            memo = a.metadata.get("_dp_durs")
+            if memo is None or memo[0] != units:
+                memo = (units, tuple(a.get_dur(m) for m in units))
+                a.metadata["_dp_durs"] = memo
+            tasks.append(DPTask(name=str(i), units=units, durations=memo[1]))
+        prefixes = self._prefixes_cached(tasks, group, manager, reserve)
 
         exec_tail = [
             max(0.0, e.finish_time - now)
             for e in executing
             if rtype in e.cost and not math.isnan(e.finish_time)
         ]
+
+        # Estimate-part durations are prefix-invariant in the default
+        # ("min") pricing mode and without a DoP floor: hoist them out of
+        # the eviction loop so each prefix probe is pure heap arithmetic
+        # instead of re-deriving every remaining action's duration.
+        hoist = self.estimate_units != "dp_avg" and floor is None
+        if hoist:
+            group_min_durs = [t.durations[0] for t in tasks]
+            rest_same_durs = [self._dur(a, None) for a in rest_same]
 
         def objective(n_keep: int) -> Tuple[float, Dict[str, int]]:
             dp = prefixes[n_keep] if n_keep < len(prefixes) else None
@@ -255,8 +294,9 @@ class ElasticScheduler:
                 est_units = int(
                     sum(dp.allocation.values()) / max(1, len(dp.allocation))
                 )
+            rest_durs = group_min_durs[n_keep:] + rest_same_durs if hoist else None
             return (
-                dp.total_duration + self._estimate(heap, rest, est_units),
+                dp.total_duration + self._estimate(heap, rest, est_units, rest_durs),
                 dp.allocation,
             )
 
@@ -276,7 +316,40 @@ class ElasticScheduler:
                 continue  # exhaustive: keep scanning past local bumps
             obj, best_kept, best_alloc = new_obj, len(group) - t, new_alloc
         kept = group[:best_kept]
-        return kept, best_alloc, obj, len(group) - best_kept
+        # translate positional task names back to action uids for callers
+        uid_alloc = {str(group[int(k)].uid): v for k, v in best_alloc.items()}
+        return kept, uid_alloc, obj, len(group) - best_kept
+
+    # ------------------------------------------------------------------
+    def _prefixes_cached(
+        self,
+        tasks: List[DPTask],
+        group: List[Action],
+        manager: ResourceManager,
+        reserve: int,
+    ) -> List[Optional[DPResult]]:
+        """dp_arrange_prefixes, memoized on (manager free-state key, task
+        tuple).  DPTask captures the unit sets *and* durations, and the
+        manager key captures everything its dp_operator reads, so equal
+        keys are guaranteed to reproduce the same DP — results are shared
+        across rounds whose group and free resources did not change."""
+        if not self.cache_dp:
+            return dp_arrange_prefixes(tasks, manager.dp_operator(group, reserve))
+        mkey = manager.dp_cache_key(group, reserve)
+        if mkey is None:
+            return dp_arrange_prefixes(tasks, manager.dp_operator(group, reserve))
+        key = (mkey, tuple(tasks))
+        hit = self._dp_cache.get(key)
+        if hit is not None:
+            self.dp_cache_hits += 1
+            self._dp_cache.move_to_end(key)
+            return hit
+        self.dp_cache_misses += 1
+        prefixes = dp_arrange_prefixes(tasks, manager.dp_operator(group, reserve))
+        self._dp_cache[key] = prefixes
+        if len(self._dp_cache) > self.dp_cache_max:
+            self._dp_cache.popitem(last=False)
+        return prefixes
 
     # ------------------------------------------------------------------
     # Alg. 2
@@ -326,15 +399,23 @@ class ElasticScheduler:
         heap: List[float],
         rest: List[Action],
         est_units: Optional[int] = None,
+        rest_durs: Optional[List[float]] = None,
     ) -> float:
         """Alg. 2 ESTIMATE: insert the remaining queue min-allocation into
         the completion heap; the *first* remaining action probes up to
         ``depth`` unit choices.  ``est_units`` (beyond-paper "dp_avg"
-        mode) prices scalable actions at that DoP instead of min."""
+        mode) prices scalable actions at that DoP instead of min.
+        ``rest_durs``, when given, are the precomputed min-allocation
+        durations aligned with ``rest`` (callers hoist them out of the
+        eviction loop — they do not depend on the kept prefix)."""
         if not rest:
             return 0.0
         first = rest[0]
         probes = self._depth_probes(first)
+        if rest_durs is None:
+            tail_durs = [self._dur(a, est_units) for a in rest[1:]]
+        else:
+            tail_durs = rest_durs[1:]
         best = INF
         for d in probes:
             tmp_heap = list(heap)
@@ -344,8 +425,7 @@ class ElasticScheduler:
             ts = heapq.heappop(tmp_heap) if tmp_heap else 0.0
             obj += ts + t0
             heapq.heappush(tmp_heap, ts + t0)
-            for a in rest[1:]:
-                ti = self._dur(a, est_units)
+            for ti in tail_durs:
                 ts = heapq.heappop(tmp_heap) if tmp_heap else 0.0
                 obj += ts + ti
                 heapq.heappush(tmp_heap, ts + ti)

@@ -16,185 +16,53 @@ The standardized execution cycle:
    duration history are updated, the action's future resolves, and the
    next round fires.
 
-The facade is clock-agnostic: driven by a DES :class:`EventLoop` for the
-benchmarks, or stepped with real threads in live mode (examples).
+Since the event-driven refactor the mechanics live in
+:class:`repro.core.orchestrator.Orchestrator` (partitioned queues,
+coalesced rounds, dirty tracking, the action lifecycle); ``Tangram``
+is the paper-facing facade that wires an
+:class:`~repro.core.scheduler.ElasticScheduler` policy in by default
+and keeps the historical ``scheduler`` attribute name.  The facade is
+clock-agnostic: driven by a DES :class:`EventLoop` for the benchmarks,
+or stepped with real threads in live mode (examples).
 """
 
 from __future__ import annotations
 
-import math
-import time
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, Optional
 
-from repro.core.action import Action, ActionState, DurationHistory
-from repro.core.managers.base import Allocation, ResourceManager
-from repro.core.scheduler import Decision, ElasticScheduler
-from repro.core.simulator import EventLoop, Future
-from repro.core.telemetry import ActionRecord, Telemetry
+from repro.core.managers.base import ResourceManager
+from repro.core.orchestrator import SCHED_TICK_S, Orchestrator, SchedulingPolicy
+from repro.core.scheduler import ElasticScheduler
+from repro.core.simulator import EventLoop
 
-# Decision latency charged per scheduling round when not measuring the
-# real wall clock (Table 1 shows sub-3% system overhead on CPU workloads).
-SCHED_TICK_S = 0.0005
+__all__ = ["Tangram", "SCHED_TICK_S"]
 
 
-class Tangram:
+class Tangram(Orchestrator):
     def __init__(
         self,
         managers: Dict[str, ResourceManager],
         loop: Optional[EventLoop] = None,
-        scheduler: Optional[ElasticScheduler] = None,
+        scheduler: Optional[SchedulingPolicy] = None,
         charge_real_sched_latency: bool = False,
+        incremental: bool = True,
     ) -> None:
-        self.loop = loop or EventLoop()
-        self.history = DurationHistory()
-        self.scheduler = scheduler or ElasticScheduler(history=self.history)
-        self.managers = managers
-        self.telemetry = Telemetry()
-        self.charge_real_sched_latency = charge_real_sched_latency
-        self._waiting: List[Action] = []
-        self._executing: List[Action] = []
-        self._futures: Dict[int, Future] = {}
-        self._allocs: Dict[int, List[Allocation]] = {}
-        self._tick_scheduled = False
+        super().__init__(
+            managers,
+            loop=loop,
+            policy=scheduler,
+            charge_real_sched_latency=charge_real_sched_latency,
+            incremental=incremental,
+        )
 
-    # ------------------------------------------------------------------
-    # public API
-    # ------------------------------------------------------------------
-    def submit(self, action: Action, delay: float = 0.0) -> Future:
-        fut = Future()
-        self._futures[action.uid] = fut
-
-        def _enqueue() -> None:
-            action.submit_time = self.loop.clock.now()
-            action.state = ActionState.QUEUED
-            self._waiting.append(action)
-            self._request_tick()
-
-        self.loop.call_after(delay, _enqueue)
-        return fut
-
-    def trajectory_start(self, trajectory_id: str, metadata: Optional[dict] = None) -> None:
-        for m in self.managers.values():
-            m.trajectory_start(trajectory_id, metadata or {})
-
-    def trajectory_end(self, trajectory_id: str) -> None:
-        for m in self.managers.values():
-            m.trajectory_end(trajectory_id)
-
-    def run(self, until: Optional[float] = None) -> float:
-        return self.loop.run(until=until)
-
+    # historical name for the policy slot (pre-refactor callers assign a
+    # configured ElasticScheduler here after construction)
     @property
-    def now(self) -> float:
-        return self.loop.clock.now()
+    def scheduler(self) -> SchedulingPolicy:
+        return self.policy
 
-    # ------------------------------------------------------------------
-    # scheduling rounds
-    # ------------------------------------------------------------------
-    def _request_tick(self) -> None:
-        if self._tick_scheduled:
-            return
-        self._tick_scheduled = True
-        self.loop.call_after(0.0, self._tick)
-
-    def _tick(self) -> None:
-        self._tick_scheduled = False
-        if not self._waiting:
-            return
-        for m in self.managers.values():
-            if hasattr(m, "set_time"):
-                m.set_time(self.now)
-
-        t0 = time.perf_counter()
-        result = self.scheduler.schedule(
-            self._waiting, self._executing, self.managers, self.now
-        )
-        sched_wall = time.perf_counter() - t0
-        self.telemetry.sched_invocations += 1
-        self.telemetry.sched_wall_s += sched_wall
-        sched_overhead = sched_wall if self.charge_real_sched_latency else SCHED_TICK_S
-
-        launched = False
-        for decision in result.decisions:
-            if self._launch(decision, sched_overhead):
-                launched = True
-        # quota refills may unblock queued actions even without completions
-        if self._waiting and not launched:
-            wake = min(
-                (
-                    m.time_to_next_refill()
-                    for m in self.managers.values()
-                    if hasattr(m, "time_to_next_refill")
-                ),
-                default=math.inf,
-            )
-            if math.isfinite(wake) and wake > 0:
-                self.loop.call_after(wake + 1e-6, self._request_tick)
-
-    def _launch(self, decision: Decision, sched_overhead: float) -> bool:
-        action = decision.action
-        allocs: List[Allocation] = []
-        for rtype in sorted(decision.units):
-            manager = self.managers.get(rtype)
-            if manager is None:
-                continue
-            alloc = manager.try_allocate(action, decision.units[rtype])
-            if alloc is None:
-                for a in allocs:  # rollback partial acquisition
-                    self.managers[a.rtype].release(action, a)
-                return False
-            allocs.append(alloc)
-
-        self._waiting.remove(action)
-        self._executing.append(action)
-        self._allocs[action.uid] = allocs
-        action.state = ActionState.RUNNING
-        action.start_time = self.now
-        overhead = sched_overhead + sum(a.overhead for a in allocs)
-        action.sys_overhead = overhead
-
-        key_units = decision.units.get(action.key_resource or "", None)
-        duration = self._duration_of(action, key_units)
-        action.finish_time = self.now + overhead + duration
-        self.loop.call_at(action.finish_time, lambda: self._complete(action, duration))
-        return True
-
-    def _duration_of(self, action: Action, key_units: Optional[int]) -> float:
-        if action.duration_sampler is not None:
-            return action.duration_sampler(key_units or 1)
-        d = action.get_dur(key_units) if key_units is not None else action.get_dur()
-        if math.isnan(d):
-            d = self.history.estimate(action)
-        return d
-
-    def _complete(self, action: Action, duration: float) -> None:
-        self._executing.remove(action)
-        allocs = self._allocs.pop(action.uid, [])
-        for alloc in allocs:
-            self.managers[alloc.rtype].release(action, alloc)
-        action.state = ActionState.DONE
-        self.history.observe(action.name, duration)
-        units = {a.rtype: a.units for a in allocs}
-        self.telemetry.record(
-            ActionRecord(
-                name=action.name,
-                task_id=action.task_id,
-                trajectory_id=action.trajectory_id,
-                submit=action.submit_time,
-                start=action.start_time,
-                finish=action.finish_time,
-                sys_overhead=action.sys_overhead,
-                units=units,
-            )
-        )
-        fut = self._futures.pop(action.uid, None)
-        if fut is not None:
-            fut.set_result(duration)
-        self._request_tick()
-
-    # ------------------------------------------------------------------
-    def queue_depth(self) -> int:
-        return len(self._waiting)
-
-    def in_flight(self) -> int:
-        return len(self._executing)
+    @scheduler.setter
+    def scheduler(self, policy: SchedulingPolicy) -> None:
+        self.policy = policy
+        if getattr(policy, "cache_dp", False) is None:
+            policy.cache_dp = self.incremental

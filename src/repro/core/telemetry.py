@@ -39,6 +39,10 @@ class Telemetry:
     records: List[ActionRecord] = field(default_factory=list)
     sched_invocations: int = 0
     sched_wall_s: float = 0.0
+    # -- action-lifecycle counters (orchestrator-maintained) ---------------
+    timeouts: int = 0  # deadline expiries (each retry re-arms the deadline)
+    retries: int = 0  # re-queues at the FCFS head after a timeout
+    cancellations: int = 0
 
     def record(self, rec: ActionRecord) -> None:
         self.records.append(rec)

@@ -20,21 +20,19 @@ from repro.core.cluster import ApiResourceSpec, ClusterSpec, paper_testbed
 from repro.core.managers.basic import BasicResourceManager
 from repro.core.managers.cpu import CpuManager
 from repro.core.managers.gpu import GpuManager, ServiceSpec
+from repro.core.orchestrator import Orchestrator, SchedulingPolicy
 from repro.core.simulator import EventLoop
 from repro.core.tangram import Tangram
 from repro.rl.rollout import RolloutRunner, StepStats
 from repro.rl.tasks import TrajectorySpec, workload_services
 
 
-def build_tangram(
+def build_managers(
     cluster: ClusterSpec,
     services: Sequence[str] = (),
     service_state_gb: float = 40.0,
     loop: Optional[EventLoop] = None,
-    depth: int = 2,
-) -> Tangram:
-    from repro.core.scheduler import ElasticScheduler
-
+) -> Tuple[Dict[str, object], EventLoop]:
     loop = loop or EventLoop()
     managers: Dict[str, object] = {}
     if cluster.cpu_nodes:
@@ -46,6 +44,33 @@ def build_tangram(
         )
     for api in cluster.apis:
         managers[api.name] = BasicResourceManager(api, loop.clock)
+    return managers, loop
+
+
+def build_orchestrator(
+    cluster: ClusterSpec,
+    policy: Optional[SchedulingPolicy] = None,
+    services: Sequence[str] = (),
+    service_state_gb: float = 40.0,
+    loop: Optional[EventLoop] = None,
+    incremental: bool = True,
+) -> Orchestrator:
+    """One orchestrator, swappable policy (ElasticScheduler by default,
+    or the FCFS/static baseline policies for ablations)."""
+    managers, loop = build_managers(cluster, services, service_state_gb, loop)
+    return Orchestrator(managers, loop=loop, policy=policy, incremental=incremental)
+
+
+def build_tangram(
+    cluster: ClusterSpec,
+    services: Sequence[str] = (),
+    service_state_gb: float = 40.0,
+    loop: Optional[EventLoop] = None,
+    depth: int = 2,
+) -> Tangram:
+    from repro.core.scheduler import ElasticScheduler
+
+    managers, loop = build_managers(cluster, services, service_state_gb, loop)
     tg = Tangram(managers, loop=loop)
     tg.scheduler = ElasticScheduler(depth=depth, history=tg.history)
     return tg

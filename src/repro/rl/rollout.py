@@ -26,6 +26,7 @@ class StepStats:
     failure_rate: float
     breakdown: Dict[str, float]
     stage_durations: Dict[str, float]  # total time per stage label
+    retries: int = 0  # lifecycle re-queues observed across all systems
 
 
 class RolloutRunner:
@@ -62,11 +63,13 @@ class RolloutRunner:
         acts: List[float] = []
         fails = 0
         total = 0
+        retries = 0
         sums = {"exec": 0.0, "queue": 0.0, "overhead": 0.0}
         for sys_ in seen.values():
             tel = sys_.telemetry
             for r in tel.records:
                 total += 1
+                retries += r.retries
                 if r.failed:
                     fails += 1
                 else:
@@ -88,6 +91,7 @@ class RolloutRunner:
             failure_rate=fails / total if total else 0.0,
             breakdown=breakdown,
             stage_durations=dict(self._stage_time),
+            retries=retries,
         )
 
     # ------------------------------------------------------------------
