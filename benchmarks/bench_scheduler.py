@@ -4,16 +4,25 @@ The paper's constraint: action durations go down to ~1 ms, so the
 scheduling window is tiny; Table 1 attributes <3% overhead to the
 system.  This harness measures the Python control-plane directly:
 
-* ``schedule_*``     — one cold full reschedule per call (seed path);
+* ``schedule_*``     — one cold full reschedule per call, measured for
+  both the dense vectorized DPArrange (default) and the dict-based
+  reference DP (``*_ref`` rows), plus a ``*_dense_speedup`` ratio;
 * ``churn_*``        — steady-state churn against a WARM orchestrator
   (interleaved submissions + completions), incremental rounds vs full
   rescheduling, reporting per-event decision latency and the speedup.
+
+``main`` additionally writes ``BENCH_scheduler.json`` (per-scenario
+ns/op + mean ACT, machine-readable for CI trending) and, with
+``--check``, exits non-zero if the dense path is slower than the
+reference on the queue-128 scenario — the CI smoke guard for the
+fast path.
 """
 
 from __future__ import annotations
 
+import json
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 from benchmarks.common import emit
 from repro.core.action import Action, AmdahlElasticity, ResourceRequest, fixed
@@ -49,19 +58,31 @@ def run(scale: float = 1.0) -> List[Dict[str, object]]:
     rows = []
     for depth in (1, 2, 3):
         for n in (8, 32, 128):
-            mgr = {"cpu": CpuManager([CpuNodeSpec("n0", cores=256)])}
-            sched = ElasticScheduler(depth=depth)
             waiting = _mk_waiting(n)
-            iters = max(3, int(30 * scale))
-            t0 = time.perf_counter()
-            for _ in range(iters):
-                sched.schedule(waiting, [], mgr, 0.0)
-            us = (time.perf_counter() - t0) / iters * 1e6
+            timings: Dict[str, float] = {}
+            for variant in ("dense", "ref"):
+                mgr = {"cpu": CpuManager([CpuNodeSpec("n0", cores=256)])}
+                sched = ElasticScheduler(depth=depth)
+                sched.use_dense = variant == "dense"
+                iters = max(3, int(30 * scale))
+                t0 = time.perf_counter()
+                for _ in range(iters):
+                    sched.schedule(waiting, [], mgr, 0.0)
+                us = (time.perf_counter() - t0) / iters * 1e6
+                timings[variant] = us
+                suffix = "" if variant == "dense" else "_ref"
+                rows.append(
+                    {
+                        "name": f"schedule_depth{depth}_queue{n}{suffix}",
+                        "us_per_call": us,
+                        "derived": f"depth={depth};queue={n};dp={variant}",
+                    }
+                )
             rows.append(
                 {
-                    "name": f"schedule_depth{depth}_queue{n}",
-                    "us_per_call": us,
-                    "derived": f"depth={depth};queue={n}",
+                    "name": f"schedule_depth{depth}_queue{n}_dense_speedup",
+                    "us_per_call": timings["ref"] / max(1e-9, timings["dense"]),
+                    "derived": f"depth={depth};queue={n};x_ref_over_dense",
                 }
             )
     return rows
@@ -225,10 +246,10 @@ def run_churn(scale: float = 1.0) -> List[Dict[str, object]]:
                 {
                     "name": f"churn_queue{queue}_{mode}",
                     "us_per_call": r["sched_us_per_event"],
+                    "mean_act": r["mean_act"],
                     "derived": (
                         f"queue={queue};events={r['events']};rounds={r['rounds']};"
-                        f"partition_runs={r['partition_runs']};"
-                        f"mean_act={r['mean_act']:.2f}"
+                        f"partition_runs={r['partition_runs']}"
                     ),
                 }
             )
@@ -236,6 +257,7 @@ def run_churn(scale: float = 1.0) -> List[Dict[str, object]]:
             {
                 "name": f"churn_queue{queue}_speedup_vs_seed",
                 "us_per_call": results["seed"]["sched_us_per_event"] / inc_us,
+                "mean_act": "",
                 "derived": f"queue={queue};x_seed_over_incremental",
             }
         )
@@ -243,16 +265,80 @@ def run_churn(scale: float = 1.0) -> List[Dict[str, object]]:
             {
                 "name": f"churn_queue{queue}_speedup_vs_full",
                 "us_per_call": results["full"]["sched_us_per_event"] / inc_us,
+                "mean_act": "",
                 "derived": f"queue={queue};x_full_over_incremental",
             }
         )
     return rows
 
 
-def main(scale: float = 1.0) -> None:
-    emit(run(scale), "scheduler decision latency")
-    emit(run_churn(scale), "steady-state churn decision latency (warm orchestrator)")
+CHECK_SCENARIO = "schedule_depth2_queue128"
+
+
+def write_json(rows: List[Dict[str, object]], path: str) -> None:
+    """Machine-readable per-scenario results: ns/op + mean ACT."""
+    scenarios: Dict[str, Dict[str, object]] = {}
+    for r in rows:
+        us = float(r["us_per_call"])  # type: ignore[arg-type]
+        name = str(r["name"])
+        is_ratio = "speedup" in name
+        scenarios[name] = {
+            "ns_per_op": None if is_ratio else us * 1e3,
+            "us_per_call": None if is_ratio else us,
+            "ratio": us if is_ratio else None,
+            "mean_act": (
+                float(r["mean_act"])  # type: ignore[arg-type]
+                if r.get("mean_act") not in (None, "")
+                else None
+            ),
+            "derived": r.get("derived"),
+        }
+    with open(path, "w") as f:
+        json.dump({"scenarios": scenarios}, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def check_dense_fast_path(rows: List[Dict[str, object]]) -> None:
+    """CI guard: the dense DP must not be slower than the reference on
+    the queue-128 scenario (the acceptance target is >= 3x, but a smoke
+    run at low scale is noisy, so the hard gate is parity)."""
+    by_name = {r["name"]: float(r["us_per_call"]) for r in rows}  # type: ignore[arg-type]
+    dense = by_name[CHECK_SCENARIO]
+    ref = by_name[f"{CHECK_SCENARIO}_ref"]
+    speedup = ref / max(1e-9, dense)
+    print(f"# dense-DP check: {CHECK_SCENARIO} dense={dense:.0f}us "
+          f"ref={ref:.0f}us speedup={speedup:.2f}x")
+    if dense > ref:
+        raise SystemExit(
+            f"dense DP slower than reference on {CHECK_SCENARIO}: "
+            f"{dense:.0f}us > {ref:.0f}us"
+        )
+
+
+def main(
+    scale: float = 1.0,
+    json_path: Optional[str] = "BENCH_scheduler.json",
+    check: bool = False,
+) -> None:
+    sched_rows = run(scale)
+    emit(sched_rows, "scheduler decision latency (dense vs reference DP)")
+    churn_rows = run_churn(scale)
+    emit(churn_rows, "steady-state churn decision latency (warm orchestrator)")
+    if json_path:
+        write_json(sched_rows + churn_rows, json_path)
+    if check:
+        check_dense_fast_path(sched_rows)
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--json", default="BENCH_scheduler.json",
+                    help="output path for machine-readable results ('' = skip)")
+    ap.add_argument("--check", action="store_true",
+                    help="fail if the dense DP is slower than the reference "
+                         f"on {CHECK_SCENARIO}")
+    args = ap.parse_args()
+    main(args.scale, args.json or None, args.check)

@@ -30,8 +30,11 @@ from repro.core.dparrange import (
     BasicDPOperator,
     DPTask,
     GpuChunkDPOperator,
+    TransitionTable,
     brute_force_arrange,
     dp_arrange,
+    dp_arrange_prefixes,
+    dp_arrange_ref,
 )
 from repro.core.baselines import FcfsPolicy, StaticDopPolicy
 from repro.core.managers import BasicResourceManager, CpuManager, GpuManager
@@ -77,8 +80,11 @@ __all__ = [
     "Tangram",
     "TableElasticity",
     "Telemetry",
+    "TransitionTable",
     "brute_force_arrange",
     "dp_arrange",
+    "dp_arrange_prefixes",
+    "dp_arrange_ref",
     "fixed",
     "paper_testbed",
     "powers_of_two",

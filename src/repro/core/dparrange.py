@@ -23,16 +23,61 @@ consumption).  With discrete unit sets an exact-n composition may not
 exist (e.g. sets {1,4}x2, n=7), so we return the best *feasible* final
 state ``argmin_j dp[m][j]`` — identical when exact-n is feasible, and
 well-defined otherwise.
+
+Dense fast path (PR 2)
+----------------------
+The original hash-map DP (kept below as :func:`dp_arrange_ref` /
+:func:`dp_arrange_prefixes_ref`, the property-test reference) spends the
+scheduler's whole hot-path budget on Python dict traffic.  The dense
+path factors the topology out of the inner loop entirely:
+
+1. each operator exports a precomputed **transition table**
+   (:meth:`DPOperator.transition_table`): for every distinct unit choice
+   ``k``, an int array ``next[k_idx, state] -> next_state`` with ``-1``
+   as the invalid sentinel, plus a per-state validity mask.
+   :class:`BasicDPOperator` is a trivial shift; :class:`GpuChunkDPOperator`
+   enumerates its mixed-radix state space once per free-chunk
+   configuration (callers cache the table on the owning manager's
+   ``dp_cache_key``, which captures exactly the state the table reads);
+2. :func:`dp_arrange_prefixes` then runs each task row as one vectorized
+   scatter-min over ``(states x choices)`` — NumPy by default, with a
+   jitted ``jax.lax.scan`` + ``segment_min`` path behind
+   ``backend="jax"`` for large state spaces — emitting every prefix
+   objective and a dense backtrace in a single pass.
+
+The dense rows visit exactly the reachable-state sums the reference DP
+visits (same float64 additions, same min over the same multisets), so
+objectives are **bit-identical**; only argmin tie-breaking (and hence
+the reported, equally-optimal allocation) may differ.
 """
 
 from __future__ import annotations
 
 import math
+import os
 from dataclasses import dataclass
 from functools import lru_cache
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+try:  # the dense fast path degrades to the dict reference without numpy
+    import numpy as np
+except ImportError:  # pragma: no cover - numpy is a core dependency
+    np = None  # type: ignore[assignment]
+
 INF = math.inf
+
+#: Largest dense state-space an operator will enumerate; beyond it the
+#: caller falls back to the sparse dict reference (which only visits
+#: reachable states).  Overridable for tests / huge pools.
+DENSE_STATE_LIMIT = int(os.environ.get("REPRO_DP_DENSE_STATE_LIMIT", 200_000))
+
+#: Default dense backend ("numpy" | "jax").  The jax path is opt-in: it
+#: pays a one-off jit compile per (m, K, S) shape and only wins on large
+#: state spaces; it runs in float64 (via ``jax.experimental.enable_x64``)
+#: so its objectives stay bit-identical to the reference.
+DENSE_BACKEND = os.environ.get("REPRO_DP_BACKEND", "numpy")
+
+_AUTO = object()  # sentinel: "build the transition table yourself"
 
 
 @dataclass(frozen=True)
@@ -44,8 +89,47 @@ class DPTask:
     durations: Tuple[float, ...]  # T_i(k) for each k in units
 
 
+@dataclass
+class TransitionTable:
+    """Precomputed dense transition structure of one operator state.
+
+    ``next[k_index[k], j]`` is the state reached from ``j`` by allocating
+    ``k`` units, or ``-1`` when the transition is invalid (target out of
+    topology bounds, infeasible under the operator's validity test, or
+    ``k`` not decomposable).  ``valid[j]`` is the operator's ``IsValid``
+    over the full dense state space; ``valid[0]`` gates the DP's start
+    state.  A table is immutable and pure: it must be rebuilt (or
+    re-fetched under a changed cache key) whenever the operator's backing
+    resource state changes — managers guarantee this by keying cached
+    tables on ``dp_cache_key``.
+    """
+
+    num_states: int
+    ks: Tuple[int, ...]
+    k_index: Dict[int, int]
+    next: "np.ndarray"  # (len(ks), num_states) int64, -1 = invalid
+    valid: "np.ndarray"  # (num_states,) bool
+    shift: bool = False  # fungible-unit shift topology (BasicDPOperator)
+
+    @property
+    def start_valid(self) -> bool:
+        return bool(self.valid[0])
+
+    def covers(self, units: Sequence[int]) -> bool:
+        return all(k in self.k_index for k in units)
+
+
 class DPOperator:
-    """Paper's "Basic DP Operator" interface (Algorithm 3 requirements)."""
+    """Paper's "Basic DP Operator" interface (Algorithm 3 requirements).
+
+    Dense contract (PR 2): operators that can enumerate their state
+    space additionally implement :meth:`transition_table`, returning a
+    :class:`TransitionTable` over the distinct unit choices ``ks`` (or
+    ``None`` when enumeration is unsupported / over ``limit`` states, in
+    which case callers use the sparse reference DP).  The table must
+    agree exactly with ``prev``/``is_valid``: ``next[k, j] == j'`` iff
+    ``is_valid(j')`` and ``prev(j', k) == j`` under greedy decomposition.
+    """
 
     def start(self, unit_sets: Sequence[Tuple[int, ...]]) -> int:
         raise NotImplementedError
@@ -60,6 +144,15 @@ class DPOperator:
 
     def is_valid(self, j: int) -> bool:
         raise NotImplementedError
+
+    def transition_table(
+        self, ks: Sequence[int], limit: Optional[int] = None
+    ) -> Optional[TransitionTable]:
+        """Dense ``state x unit-choice -> next-state`` export; None = use
+        the sparse reference DP.  ``limit`` caps the enumerated state
+        space (default: module-level ``DENSE_STATE_LIMIT``, resolved at
+        call time so tests/operators can tighten it)."""
+        return None
 
 
 class BasicDPOperator(DPOperator):
@@ -81,6 +174,29 @@ class BasicDPOperator(DPOperator):
     def is_valid(self, j: int) -> bool:
         return 0 <= j <= self.total_units
 
+    def transition_table(
+        self, ks: Sequence[int], limit: Optional[int] = None
+    ) -> Optional[TransitionTable]:
+        if np is None:
+            return None
+        num_states = self.total_units + 1
+        if num_states > (DENSE_STATE_LIMIT if limit is None else limit):
+            return None
+        ks = tuple(sorted(set(int(k) for k in ks)))
+        states = np.arange(num_states, dtype=np.int64)
+        nxt = np.empty((len(ks), num_states), dtype=np.int64)
+        for i, k in enumerate(ks):
+            tgt = states + k
+            nxt[i] = np.where(tgt <= self.total_units, tgt, -1)
+        return TransitionTable(
+            num_states=num_states,
+            ks=ks,
+            k_index={k: i for i, k in enumerate(ks)},
+            next=nxt,
+            valid=np.ones(num_states, dtype=bool),
+            shift=True,
+        )
+
 
 class GpuChunkDPOperator(DPOperator):
     """Paper Algorithm 4: chunk-count states over sizes {1, 2, 4, 8}.
@@ -89,7 +205,10 @@ class GpuChunkDPOperator(DPOperator):
     linearized with mixed-radix encoding (collision-free, finite).
     ``feasible`` — supplied by the chunk allocator — answers whether the
     current free-chunk configuration can yield that consumption multiset
-    (buddy splitting allowed).
+    (buddy splitting allowed).  ``feasible`` must be **pure over the
+    free-chunk snapshot the operator was built from** (the GPU manager
+    closes it over a snapshot) so that :meth:`transition_table` output is
+    cacheable under the manager's ``dp_cache_key``.
     """
 
     SIZES = (1, 2, 4, 8)
@@ -181,6 +300,64 @@ class GpuChunkDPOperator(DPOperator):
             return False
         return True
 
+    def transition_table(
+        self, ks: Sequence[int], limit: Optional[int] = None
+    ) -> Optional[TransitionTable]:
+        """Enumerate the full mixed-radix state space once.
+
+        Cheap mask tests (radix bounds are implicit, ``total_devices`` is
+        vectorized) prune the state set before the Python ``feasible``
+        callback runs, so the callback only sees states that could hold
+        devices at all.
+        """
+        if np is None:
+            return None
+        r1, r2, r4, r8 = self._radix
+        num_states = r1 * r2 * r4 * r8
+        if num_states > (DENSE_STATE_LIMIT if limit is None else limit):
+            return None
+        js = np.arange(num_states, dtype=np.int64)
+        a = js % r1
+        t = js // r1
+        b = t % r2
+        t //= r2
+        c = t % r4
+        d = t // r4
+        valid = np.ones(num_states, dtype=bool)
+        if self.total_devices is not None:
+            valid &= (a + 2 * b + 4 * c + 8 * d) <= self.total_devices
+        if self._feasible is not None:
+            idx = np.flatnonzero(valid)
+            feas = self._feasible  # lru-cached
+            valid[idx] = np.fromiter(
+                (
+                    feas((int(a[j]), int(b[j]), int(c[j]), int(d[j])))
+                    for j in idx
+                ),
+                dtype=bool,
+                count=idx.size,
+            )
+        ks = tuple(sorted(set(int(k) for k in ks)))
+        nxt = np.full((len(ks), num_states), -1, dtype=np.int64)
+        for i, k in enumerate(ks):
+            dec = self.greedy_decompose(k)
+            if dec is None:
+                continue
+            na, nb, nc, nd = a + dec[0], b + dec[1], c + dec[2], d + dec[3]
+            # guard the mixed radix: digit overflow would alias a state
+            ok = (na < r1) & (nb < r2) & (nc < r4) & (nd < r8)
+            tgt = na + r1 * (nb + r2 * (nc + r4 * nd))
+            safe = np.where(ok, tgt, 0)
+            ok &= valid[safe]
+            nxt[i] = np.where(ok, tgt, -1)
+        return TransitionTable(
+            num_states=num_states,
+            ks=ks,
+            k_index={k: i for i, k in enumerate(ks)},
+            next=nxt,
+            valid=valid,
+        )
+
 
 @dataclass
 class DPResult:
@@ -189,8 +366,249 @@ class DPResult:
     durations: Dict[str, float]  # task name -> T_i(k_i)
 
 
+# ---------------------------------------------------------------------------
+# Dense vectorized DP (the scheduler's fast path)
+# ---------------------------------------------------------------------------
+
+
+@lru_cache(maxsize=8)
+def _jax_compiled_scan(S: int):
+    """One jitted scan kernel per state-space size (module-level cache so
+    repeated DP calls reuse the traced/compiled XLA program; jax itself
+    re-specializes per (m, K) input shape under the same jit object)."""
+    import jax
+    import jax.numpy as jnp
+
+    def step(prev, inputs):
+        nxt, durs = inputs
+        cand = prev[None, :] + durs[:, None]
+        seg = jnp.where(nxt >= 0, nxt, S)  # S = invalid dump bucket
+        new = jax.ops.segment_min(
+            cand.ravel(), seg.ravel(), num_segments=S + 1
+        )[:S]
+        return new, new
+
+    def run(nxt_all, durs_all, v0):
+        _, rows = jax.lax.scan(step, v0, (nxt_all, durs_all))
+        return rows
+
+    return jax.jit(run)
+
+
+def _jax_value_rows(nxt_pad, durs_pad, start_valid, num_states):
+    """All DP value rows via a jitted scan of segment-mins (float64)."""
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    with enable_x64():
+        v0 = jnp.full((num_states,), jnp.inf, dtype=jnp.float64)
+        if start_valid:
+            v0 = v0.at[0].set(0.0)
+        rows = _jax_compiled_scan(num_states)(
+            jnp.asarray(nxt_pad), jnp.asarray(durs_pad, dtype=jnp.float64), v0
+        )
+        out = np.array(rows, dtype=np.float64)  # copy: jax buffers are read-only
+    # segment_min's identity for float64 is +inf, so unreached states are
+    # already inf; normalize defensively anyway.
+    out[out > 1e300] = INF
+    return out
+
+
+def dp_arrange_prefixes_dense(
+    tasks: Sequence[DPTask],
+    operator: DPOperator,
+    table: Optional[TransitionTable] = None,
+    backend: Optional[str] = None,
+) -> Optional[List[Optional[DPResult]]]:
+    """Vectorized :func:`dp_arrange_prefixes_ref`: one scatter-min per
+    task row over the operator's dense transition table.
+
+    Returns ``None`` when the dense path is unavailable (no numpy, the
+    operator cannot export a table, or the table does not cover the task
+    unit sets) — callers fall back to the sparse reference.  Otherwise
+    the result is objective-identical to the reference: the same float64
+    sums are formed and minimized, so every prefix's ``total_duration``
+    matches bit-for-bit (ties may back-track to a different, equally
+    optimal allocation).
+    """
+    if np is None:
+        return None
+    m = len(tasks)
+    if table is None:
+        ks = sorted({k for t in tasks for k in t.units})
+        table = operator.transition_table(tuple(ks))
+    if table is None or not table.covers([k for t in tasks for k in t.units]):
+        return None
+    S = table.num_states
+
+    results: List[Optional[DPResult]] = [DPResult(0.0, {}, {})]
+    value = np.full(S, INF)
+    if table.start_valid:
+        value[0] = 0.0
+
+    # Optional jitted backend: compute all value rows in one scan, then
+    # share the numpy backtrace below.  Heterogeneous unit-set sizes are
+    # padded with invalid transitions (duration slot unused).
+    backend = backend or DENSE_BACKEND
+    jax_rows = None
+    if backend == "jax" and m > 0:
+        kmax = max(len(t.units) for t in tasks)
+        nxt_pad = np.full((m, kmax, S), -1, dtype=np.int64)
+        durs_pad = np.zeros((m, kmax), dtype=np.float64)
+        for i, task in enumerate(tasks):
+            kidx = [table.k_index[k] for k in task.units]
+            nxt_pad[i, : len(kidx)] = table.next[kidx]
+            durs_pad[i, : len(kidx)] = task.durations
+        try:
+            jax_rows = _jax_value_rows(nxt_pad, durs_pad, table.start_valid, S)
+        except ImportError:
+            jax_rows = None
+
+    backptrs: List["np.ndarray"] = []  # per row: state -> flat (choice*S+prev)
+    for i, task in enumerate(tasks):
+        kidx = [table.k_index[k] for k in task.units]
+        nxt = table.next[kidx]  # (K, S)
+        durs = np.asarray(task.durations, dtype=np.float64)
+        cand = value[None, :] + durs[:, None]  # (K, S)
+        if jax_rows is not None:
+            new = jax_rows[i]
+        elif table.shift:
+            # fungible units: transition k is a pure shift — use sliced
+            # minimums instead of a scatter (same sums, much faster)
+            new = np.full(S, INF)
+            for ci, k in enumerate(task.units):
+                if k < S:
+                    np.minimum(new[k:], cand[ci, : S - k], out=new[k:])
+        else:
+            ok = (nxt >= 0) & np.isfinite(cand)
+            new = np.full(S, INF)
+            if ok.any():
+                np.minimum.at(new, nxt[ok], cand[ok])
+        # dense backtrace: the first (choice-major) contributor achieving
+        # each state's minimum.  Exact float equality is sound — ``new``
+        # values are drawn from ``cand`` verbatim.
+        safe = np.where(nxt >= 0, nxt, 0)
+        ach = (nxt >= 0) & (cand == new[safe])
+        flat = np.flatnonzero(ach.ravel())  # ascending (choice-major)
+        bp = np.full(S, -1, dtype=np.int64)
+        bp[nxt.ravel()[flat][::-1]] = flat[::-1]  # smallest index wins
+        backptrs.append(bp)
+        value = new
+
+        finite = np.isfinite(new)
+        if not finite.any():
+            results.append(None)
+            continue
+        best_state = int(np.argmin(new))
+        alloc: Dict[str, int] = {}
+        durs_out: Dict[str, float] = {}
+        state = best_state
+        feasible = True
+        for t in range(i, -1, -1):
+            f = int(backptrs[t][state])
+            if f < 0:
+                feasible = False
+                break
+            choice, state = divmod(f, S)
+            tk = tasks[t]
+            alloc[tk.name] = tk.units[choice]
+            durs_out[tk.name] = tk.durations[choice]
+        results.append(
+            DPResult(float(new[best_state]), alloc, durs_out) if feasible else None
+        )
+    return results
+
+
+#: Cost-model constants for the dense-vs-sparse dispatch, in units of
+#: "one sparse dict transition" (~0.2us of Python).  A dense task row
+#: costs a fixed ~10 numpy calls (DENSE_ROW_OVERHEAD_OPS) plus work
+#: linear in the full (choices x states) sweep (DENSE_CELL_COST each,
+#: cheap vectorized element ops).  Both paths produce bit-identical
+#: objectives, so the dispatch is purely a latency decision.
+DENSE_ROW_OVERHEAD_OPS = 90
+DENSE_CELL_COST = 0.07
+
+
+def _dense_worthwhile(tasks: Sequence[DPTask], table: TransitionTable) -> bool:
+    """Predict whether the vectorized sweep beats the sparse dict DP.
+
+    The sparse DP touches ``reachable_states x choices`` per row, where
+    reachability is bounded by the product of choice counts and (for the
+    shift topology) by the span of attainable unit sums; the dense sweep
+    always pays the full ``choices x states`` row.  Small instances
+    (few tasks against a large pool) are faster sparse."""
+    S = table.num_states
+    reach = 1
+    span = 1
+    ref_ops = 0
+    dense_ops = 0.0
+    for t in tasks:
+        K = len(t.units)
+        ref_ops += reach * K
+        dense_ops += DENSE_ROW_OVERHEAD_OPS + DENSE_CELL_COST * K * S
+        reach = min(S, reach * K)
+        if table.shift:
+            span += t.units[-1] - t.units[0]
+            reach = min(reach, span)
+    return ref_ops > dense_ops
+
+
+def dp_arrange_prefixes(
+    tasks: Sequence[DPTask],
+    operator: DPOperator,
+    table: object = _AUTO,
+    backend: Optional[str] = None,
+) -> List[Optional[DPResult]]:
+    """DPResult for every prefix ``tasks[:i]`` (i = 0..m) in ONE DP pass.
+
+    Greedy eviction (Alg. 1) always evicts the LAST candidate, so the
+    objective of every kept-set it evaluates is a prefix of the same DP —
+    one pass over the rows serves the whole eviction loop (this is what
+    keeps the scheduler inside the paper's O(k n^2 m^2) bound).
+
+    Dispatches to the dense vectorized path when the operator exports a
+    transition table (``table``: pass a pre-built/cached
+    :class:`TransitionTable`, or ``None`` to force the sparse reference)
+    AND the instance is big enough for vectorization to pay
+    (:func:`_dense_worthwhile`); otherwise runs
+    :func:`dp_arrange_prefixes_ref`.  Both paths return bit-identical
+    objectives.
+    """
+    if table is not None:
+        resolved: Optional[TransitionTable]
+        if table is _AUTO:
+            ks = sorted({k for t in tasks for k in t.units})
+            resolved = operator.transition_table(tuple(ks))
+        else:
+            resolved = table  # type: ignore[assignment]
+        if resolved is not None and (
+            backend == "jax" or _dense_worthwhile(tasks, resolved)
+        ):
+            dense = dp_arrange_prefixes_dense(tasks, operator, resolved, backend)
+            if dense is not None:
+                return dense
+    return dp_arrange_prefixes_ref(tasks, operator)
+
+
 def dp_arrange(tasks: Sequence[DPTask], operator: DPOperator) -> Optional[DPResult]:
-    """Algorithm 3.  Returns None when even minimal allocation is infeasible."""
+    """Algorithm 3.  Returns None when even minimal allocation is infeasible.
+
+    Uses the dense fast path when available and worthwhile (see
+    :func:`dp_arrange_prefixes`); :func:`dp_arrange_ref` is the sparse
+    dict-based reference."""
+    if not tasks:
+        return DPResult(0.0, {}, {})
+    return dp_arrange_prefixes(tasks, operator)[-1]
+
+
+# ---------------------------------------------------------------------------
+# Sparse dict-based reference (the original implementation; property
+# tests assert the dense path is objective-identical to it)
+# ---------------------------------------------------------------------------
+
+
+def dp_arrange_ref(tasks: Sequence[DPTask], operator: DPOperator) -> Optional[DPResult]:
+    """Reference Algorithm 3 over a sparse dict of reachable states."""
     m = len(tasks)
     if m == 0:
         return DPResult(0.0, {}, {})
@@ -243,16 +661,11 @@ def dp_arrange(tasks: Sequence[DPTask], operator: DPOperator) -> Optional[DPResu
     return DPResult(best, alloc, durs)
 
 
-def dp_arrange_prefixes(
+def dp_arrange_prefixes_ref(
     tasks: Sequence[DPTask], operator: DPOperator
 ) -> List[Optional[DPResult]]:
-    """DPResult for every prefix ``tasks[:i]`` (i = 0..m) in ONE DP pass.
-
-    Greedy eviction (Alg. 1) always evicts the LAST candidate, so the
-    objective of every kept-set it evaluates is a prefix of the same DP —
-    one pass over the rows serves the whole eviction loop (this is what
-    keeps the scheduler inside the paper's O(k n^2 m^2) bound).
-    """
+    """Reference prefix DP over sparse dict rows (see
+    :func:`dp_arrange_prefixes` for the contract)."""
     m = len(tasks)
     results: List[Optional[DPResult]] = [DPResult(0.0, {}, {})]
     rows: List[Dict[int, float]] = [{0: 0.0} if operator.is_valid(0) else {}]

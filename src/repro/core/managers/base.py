@@ -84,17 +84,36 @@ class ResourceManager:
     # scheduling hooks
     # ------------------------------------------------------------------
     def dp_operator(self, actions: Sequence[Action], reserve: int = 0) -> DPOperator:
-        """``reserve`` units are already committed to co-scheduled actions
-        in the same round and must be excluded from elastic scaling."""
+        """Topology abstraction DPArrange runs over (paper Appendix B).
+
+        ``reserve`` units are already committed to co-scheduled actions
+        in the same round and must be excluded from elastic scaling.
+
+        Dense-DP contract (PR 2): the returned operator SHOULD implement
+        :meth:`~repro.core.dparrange.DPOperator.transition_table` so the
+        scheduler can run DPArrange as vectorized array sweeps — a
+        ``state x unit-choice -> next-state`` int table with a ``-1``
+        invalid sentinel plus a per-state validity mask.  The operator
+        (and therefore the table) must be a PURE function of the
+        manager state snapshot taken at this call: any feasibility
+        callback it closes over must read a snapshot, never live manager
+        state, or cached tables would silently go stale."""
         return BasicDPOperator(max(0, self.available - reserve))
 
     def dp_cache_key(
         self, actions: Sequence[Action], reserve: int = 0
     ) -> Optional[Hashable]:
-        """Hashable key under which a DPArrange result over ``actions``
+        """Hashable key under which DPArrange artifacts over ``actions``
         may be memoized, or None if results are state-dependent in ways
-        the key cannot capture.  Contract: equal keys (plus an equal task
-        list) imply ``dp_operator`` yields identical DP results."""
+        the key cannot capture.  Contract: equal keys imply
+        ``dp_operator`` yields an operator with identical transition
+        structure — so the key guards BOTH the per-task-tuple DP-result
+        memo and the task-independent dense transition-table cache
+        (:class:`~repro.core.dparrange.TransitionTable`).  A manager must
+        therefore fold into the key everything its operator's
+        transitions/validity read (free units here; the GPU manager adds
+        its per-node free-chunk level counts, which is what invalidates
+        cached tables when chunks are taken or returned)."""
         return (self.rtype, max(0, self.available - reserve))
 
     def partition(self, actions: Sequence[Action]) -> Dict[str, List[Action]]:

@@ -54,6 +54,13 @@ class BasicResourceManager(ResourceManager):
             return self._tokens
         return super().available
 
+    # NOTE on the inherited dp_cache_key: it reads ``available``, which
+    # for the quota mode re-runs _refill against the governing clock, so
+    # the key reflects the token count AT THIS INSTANT — a refill
+    # between rounds rotates the key, keeping cached DP results and
+    # dense transition tables sound even though this manager's state
+    # moves with time rather than with allocate/release alone.
+
     def try_allocate(self, action: Action, units: int) -> Optional[Allocation]:
         if self.mode == "quota":
             self._refill()

@@ -136,7 +136,10 @@ class CpuManager(ResourceManager):
         return parts
 
     def dp_operator(self, actions: Sequence[Action], reserve: int = 0) -> DPOperator:
-        # called per partition; all actions share one node after _bind
+        # called per partition; all actions share one node after _bind.
+        # Cores are fungible within the pool, so the operator is the
+        # basic shift topology — its dense transition table is a trivial
+        # (free+1)-state shift keyed by the free-core count below.
         nodes = {self._binding.get(a.trajectory_id) for a in actions}
         nodes.discard(None)
         if len(nodes) == 1:
@@ -145,6 +148,9 @@ class CpuManager(ResourceManager):
         return BasicDPOperator(max(0, self.available - reserve))
 
     def dp_cache_key(self, actions: Sequence[Action], reserve: int = 0):
+        # keys both the DP-result memo and the dense transition-table
+        # cache: the node's (or pool's) free-core count is the only state
+        # BasicDPOperator reads, so equal keys reproduce equal tables.
         nodes = {self._binding.get(a.trajectory_id) for a in actions}
         nodes.discard(None)
         if len(nodes) == 1:

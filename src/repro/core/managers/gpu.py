@@ -267,44 +267,68 @@ class GpuManager(ResourceManager):
         state[:] = trial  # type: ignore[index]
         return True
 
-    def feasible_multiset(self, counts: Tuple[int, int, int, int]) -> bool:
-        """Can the pooled free chunks satisfy this consumption multiset?"""
-        node_levels = {
-            name: alloc.free_level_counts() for name, alloc in self.allocators.items()
-        }
+    def free_level_snapshot(self) -> Tuple[Tuple[int, ...], ...]:
+        """Canonical per-node free-chunk level counts (maximal merging)."""
+        return tuple(
+            tuple(a.free_level_counts()) for a in self.allocators.values()
+        )
+
+    @staticmethod
+    def _fit_multiset(
+        snapshot: Tuple[Tuple[int, ...], ...], counts: Tuple[int, int, int, int]
+    ) -> bool:
+        """Pure first-fit of a consumption multiset against a free-chunk
+        snapshot — the feasibility test behind the DP operator.  Pure so
+        the operator (and any dense transition table enumerated from it)
+        is a function of the snapshot alone, cacheable under
+        ``dp_cache_key``."""
+        node_levels = [list(levels) for levels in snapshot]
         for size_idx in (3, 2, 1, 0):  # large chunks first
             size_level = size_idx
             for _ in range(counts[size_idx]):
                 placed = False
                 # smallest-sufficient-level fit across nodes
                 for lvl in range(size_level, 4):
-                    cands = [n for n, c in node_levels.items() if len(c) > lvl and c[lvl] > 0]
-                    if not cands:
-                        continue
-                    n = cands[0]
-                    node_levels[n][lvl] -= 1
-                    for l in range(size_level, lvl):  # split remainder
-                        node_levels[n][l] += 1
-                    placed = True
-                    break
+                    for c in node_levels:
+                        if len(c) > lvl and c[lvl] > 0:
+                            c[lvl] -= 1
+                            for l in range(size_level, lvl):  # split remainder
+                                c[l] += 1
+                            placed = True
+                            break
+                    if placed:
+                        break
                 if not placed:
                     return False
         return True
 
+    def feasible_multiset(self, counts: Tuple[int, int, int, int]) -> bool:
+        """Can the pooled free chunks satisfy this consumption multiset?"""
+        return self._fit_multiset(self.free_level_snapshot(), counts)
+
     def dp_operator(self, actions: Sequence[Action], reserve: int = 0) -> DPOperator:
         free = max(0, self.available - reserve)
         max_counts = (free, free // 2, free // 4, free // 8)
+        # close the feasibility callback over a SNAPSHOT (not live
+        # allocator state): the dense transition table enumerated from
+        # this operator is cached on dp_cache_key, and the snapshot is
+        # exactly what that key captures.
+        snapshot = self.free_level_snapshot()
         return GpuChunkDPOperator(
-            max_counts, feasible=self.feasible_multiset, total_devices=free
+            max_counts,
+            feasible=lambda counts: self._fit_multiset(snapshot, counts),
+            total_devices=free,
         )
 
     def dp_cache_key(self, actions: Sequence[Action], reserve: int = 0):
         # the DP's feasibility callback reads only the canonical per-node
-        # free-chunk level counts, so they (plus the unit budget) key it.
+        # free-chunk level counts, so they (plus the unit budget) key it;
+        # chunk allocate/release rotates the key, which is what expires
+        # cached dense transition tables (regression-tested).
         return (
             "gpu",
             max(0, self.available - reserve),
-            tuple(tuple(a.free_level_counts()) for a in self.allocators.values()),
+            self.free_level_snapshot(),
         )
 
     # ------------------------------------------------------------------

@@ -23,7 +23,9 @@ subsystem:
 * **Incremental candidate window** — managers expose an admission
   cursor (:meth:`ResourceManager.begin_admission` /
   :meth:`~ResourceManager.admit_one`) so the FCFS window is computed
-  in O(window) instead of O(window²) full rescans.
+  in O(window) instead of O(window²) full rescans.  The cursor loop
+  lives in :func:`repro.core.scheduler.candidate_window` (re-exported
+  here) and is shared by the policy's standalone ``schedule()`` path.
 * **Pluggable policy** — anything satisfying :class:`SchedulingPolicy`
   (the ported :class:`~repro.core.scheduler.ElasticScheduler`, or the
   FCFS/static baselines in :mod:`repro.core.baselines`) drives the same
@@ -35,7 +37,7 @@ subsystem:
   :meth:`Future.set_exception` propagation.
 
 Set ``incremental=False`` to force full rescheduling every round (every
-partition dirty, no DP memo, the policy's own O(n²) window scan) — the
+partition dirty, no DP memo, the policy's own window scan) — the
 equivalence tests run both modes over identical workloads and assert
 identical launch traces.
 """
@@ -54,7 +56,12 @@ from repro.core.action import (
     DurationHistory,
 )
 from repro.core.managers.base import Allocation, ResourceManager
-from repro.core.scheduler import Decision, ElasticScheduler, ScheduleResult
+from repro.core.scheduler import (
+    Decision,
+    ElasticScheduler,
+    ScheduleResult,
+    candidate_window,
+)
 from repro.core.simulator import EventLoop, Future
 from repro.core.telemetry import ActionRecord, Telemetry
 
@@ -110,37 +117,6 @@ class SchedulingPolicy(Protocol):
         managers: Dict[str, ResourceManager],
         now: float,
     ) -> ScheduleResult: ...
-
-
-def candidate_window(
-    waiting: Sequence[Action],
-    managers: Dict[str, ResourceManager],
-    limit: int = 128,
-) -> List[Action]:
-    """Largest FCFS prefix admissible at min units, in one O(window) pass.
-
-    Equivalent to re-testing ``can_accommodate`` on every prefix (the
-    seed's O(n²) scan): each manager's admission cursor sees exactly the
-    subsequence of prefix actions that touch it.
-    """
-    out: List[Action] = []
-    cursors: Dict[str, object] = {}
-    for action in waiting[: min(len(waiting), limit)]:
-        ok = True
-        for rtype in action.cost:
-            manager = managers.get(rtype)
-            if manager is None:
-                continue
-            cur = cursors.get(rtype)
-            if cur is None:
-                cur = cursors[rtype] = manager.begin_admission()
-            if not manager.admit_one(cur, action):
-                ok = False
-                break
-        if not ok:
-            break
-        out.append(action)
-    return out
 
 
 class Orchestrator:

@@ -34,16 +34,54 @@ under Python slicing but plainly means "keep at least the head").
 from __future__ import annotations
 
 import heapq
+import itertools
 import math
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Dict, Hashable, List, Optional, Sequence, Tuple
 
 from repro.core.action import Action, DurationHistory
-from repro.core.dparrange import DPResult, DPTask, dp_arrange, dp_arrange_prefixes
+from repro.core.dparrange import (
+    DPResult,
+    DPTask,
+    TransitionTable,
+    dp_arrange,
+    dp_arrange_prefixes,
+)
 from repro.core.managers.base import ResourceManager
 
 INF = math.inf
+
+
+def candidate_window(
+    waiting: Sequence[Action],
+    managers: Dict[str, ResourceManager],
+    limit: int = 128,
+) -> List[Action]:
+    """Largest FCFS prefix admissible at min units, in one O(window) pass.
+
+    Equivalent to re-testing ``can_accommodate`` on every prefix (the
+    seed's O(n²) scan): each manager's admission cursor sees exactly the
+    subsequence of prefix actions that touch it.
+    """
+    out: List[Action] = []
+    cursors: Dict[str, object] = {}
+    for action in waiting[: min(len(waiting), limit)]:
+        ok = True
+        for rtype in action.cost:
+            manager = managers.get(rtype)
+            if manager is None:
+                continue
+            cur = cursors.get(rtype)
+            if cur is None:
+                cur = cursors[rtype] = manager.begin_admission()
+            if not manager.admit_one(cur, action):
+                ok = False
+                break
+        if not ok:
+            break
+        out.append(action)
+    return out
 
 
 @dataclass
@@ -83,6 +121,22 @@ class ElasticScheduler:
         self._dp_cache: "OrderedDict[Hashable, List[Optional[DPResult]]]" = OrderedDict()
         self.dp_cache_hits = 0
         self.dp_cache_misses = 0
+        # Dense DPArrange (PR 2): run the DP as vectorized array sweeps
+        # over precomputed operator transition tables instead of the
+        # dict-of-dicts reference.  Tables are pure functions of the
+        # manager's free state, so they are LRU-cached on dp_cache_key
+        # and shared across rounds AND across different task profiles
+        # (unlike the prefix-result memo above, which also keys the task
+        # tuple).  ``dense_backend``: None -> numpy; "jax" -> jitted
+        # segment-min scan for large state spaces.
+        self.use_dense = True
+        self.dense_backend: Optional[str] = None
+        self.table_cache_max = 256
+        self._table_cache: "OrderedDict[Hashable, Optional[TransitionTable]]" = (
+            OrderedDict()
+        )
+        self.table_cache_hits = 0
+        self.table_cache_misses = 0
         # BEYOND-PAPER (EXPERIMENTS.md §Perf, scheduler iterations): the
         # paper's Alg. 2 prices evicted/remaining actions at MIN-unit
         # durations, so under a burst eviction never engages (deferring a
@@ -199,22 +253,16 @@ class ElasticScheduler:
     def _candidate_window(
         self, waiting: Sequence[Action], managers: Dict[str, ResourceManager]
     ) -> List[Action]:
-        """Largest FCFS prefix accommodatable at min units (Alg. 1 line 2)."""
-        limit = min(len(waiting), self.candidate_limit)
-        best = 0
-        for i in range(1, limit + 1):
-            prefix = waiting[:i]
-            touched = {r for a in prefix for r in a.cost}
-            ok = all(
-                managers[r].can_accommodate([a for a in prefix if r in a.cost])
-                for r in touched
-                if r in managers
-            )
-            if ok:
-                best = i
-            else:
-                break
-        return list(waiting[:best])
+        """Largest FCFS prefix accommodatable at min units (Alg. 1 line 2).
+
+        Incremental: one admission cursor per touched manager accumulates
+        the per-resource prefix state action by action — O(window) total,
+        where the former per-prefix ``can_accommodate`` rescan was
+        O(window²).  This is the same cursor protocol the orchestrator's
+        round loop uses, so standalone ``schedule()`` and orchestrated
+        ``arrange()`` compute identical windows.
+        """
+        return candidate_window(waiting, managers, self.candidate_limit)
 
     # ------------------------------------------------------------------
     def _greedy_eviction(
@@ -286,8 +334,12 @@ class ElasticScheduler:
             dp = prefixes[n_keep] if n_keep < len(prefixes) else None
             if dp is None:
                 return INF, {}
-            heap = [dp.durations[t.name] for t in tasks[:n_keep]] + list(exec_tail)
-            heapq.heapify(heap)
+            # pre-sorted completion array: ESTIMATE's sorted-merge replay
+            # consumes it via a cursor, shared across all depth probes
+            # (no per-probe heap copy / heapify)
+            base = sorted(
+                [dp.durations[t.name] for t in tasks[:n_keep]] + exec_tail
+            )
             rest = list(group[n_keep:]) + rest_same  # evicted rejoin the queue
             est_units = None
             if self.estimate_units == "dp_avg" and dp.allocation:
@@ -296,7 +348,7 @@ class ElasticScheduler:
                 )
             rest_durs = group_min_durs[n_keep:] + rest_same_durs if hoist else None
             return (
-                dp.total_duration + self._estimate(heap, rest, est_units, rest_durs),
+                dp.total_duration + self._estimate(base, rest, est_units, rest_durs),
                 dp.allocation,
             )
 
@@ -332,12 +384,28 @@ class ElasticScheduler:
         tuple).  DPTask captures the unit sets *and* durations, and the
         manager key captures everything its dp_operator reads, so equal
         keys are guaranteed to reproduce the same DP — results are shared
-        across rounds whose group and free resources did not change."""
-        if not self.cache_dp:
-            return dp_arrange_prefixes(tasks, manager.dp_operator(group, reserve))
+        across rounds whose group and free resources did not change.
+
+        Two cache levels: the prefix-result memo above (``cache_dp``,
+        incremental rounds only), and the dense transition-table LRU
+        (always on with ``use_dense``) — tables depend only on the
+        manager's free state + the distinct unit choices, so they hit
+        even when durations or group composition change every round."""
         mkey = manager.dp_cache_key(group, reserve)
-        if mkey is None:
-            return dp_arrange_prefixes(tasks, manager.dp_operator(group, reserve))
+
+        def compute() -> List[Optional[DPResult]]:
+            # operator construction stays on the miss path — a DP-memo
+            # hit must not pay for manager state snapshots
+            operator = manager.dp_operator(group, reserve)
+            if not self.use_dense:
+                return dp_arrange_prefixes(tasks, operator, table=None)
+            table = self._table_for(operator, tasks, mkey)
+            return dp_arrange_prefixes(
+                tasks, operator, table=table, backend=self.dense_backend
+            )
+
+        if not self.cache_dp or mkey is None:
+            return compute()
         key = (mkey, tuple(tasks))
         hit = self._dp_cache.get(key)
         if hit is not None:
@@ -345,11 +413,44 @@ class ElasticScheduler:
             self._dp_cache.move_to_end(key)
             return hit
         self.dp_cache_misses += 1
-        prefixes = dp_arrange_prefixes(tasks, manager.dp_operator(group, reserve))
+        prefixes = compute()
         self._dp_cache[key] = prefixes
         if len(self._dp_cache) > self.dp_cache_max:
             self._dp_cache.popitem(last=False)
         return prefixes
+
+    # ------------------------------------------------------------------
+    def _table_for(
+        self,
+        operator,
+        tasks: Sequence[DPTask],
+        mkey: Optional[Hashable],
+    ) -> Optional[TransitionTable]:
+        """Transition table for ``operator`` over the tasks' distinct unit
+        choices, LRU-cached on (manager free-state key, choice tuple).
+
+        ``dp_cache_key`` captures everything the operator's transitions
+        and validity read (e.g. the GPU manager's free-chunk level
+        counts), so a free-state change rotates the key and the stale
+        table simply ages out — the invalidation regression test pins
+        this.  ``mkey is None`` (state-dependent manager) builds fresh.
+        A cached ``None`` records that the operator cannot export a table
+        (unsupported topology or over the state limit) so the round falls
+        straight back to the sparse reference without re-probing."""
+        ks = tuple(sorted({k for t in tasks for k in t.units}))
+        if mkey is None:
+            return operator.transition_table(ks)
+        key = (mkey, ks)
+        if key in self._table_cache:
+            self.table_cache_hits += 1
+            self._table_cache.move_to_end(key)
+            return self._table_cache[key]
+        self.table_cache_misses += 1
+        table = operator.transition_table(ks)
+        self._table_cache[key] = table
+        if len(self._table_cache) > self.table_cache_max:
+            self._table_cache.popitem(last=False)
+        return table
 
     # ------------------------------------------------------------------
     # Alg. 2
@@ -384,27 +485,33 @@ class ElasticScheduler:
             return INF, {}
         exact_obj = dp.total_duration
 
-        # completion heap: candidates' completions + in-flight completions
-        heap: List[float] = [dp.durations[t.name] for t in tasks]
+        # completions: candidates' completions + in-flight completions,
+        # pre-sorted once for ESTIMATE's sorted-merge replay
+        completions: List[float] = [dp.durations[t.name] for t in tasks]
         for e in executing:
             if rtype in e.cost and not math.isnan(e.finish_time):
-                heap.append(max(0.0, e.finish_time - now))
-        heapq.heapify(heap)
+                completions.append(max(0.0, e.finish_time - now))
+        completions.sort()
 
-        approx_obj = self._estimate(heap, list(rest))
+        approx_obj = self._estimate(completions, list(rest))
         return exact_obj + approx_obj, dp.allocation
 
     def _estimate(
         self,
-        heap: List[float],
+        completions: List[float],
         rest: List[Action],
         est_units: Optional[int] = None,
         rest_durs: Optional[List[float]] = None,
     ) -> float:
         """Alg. 2 ESTIMATE: insert the remaining queue min-allocation into
-        the completion heap; the *first* remaining action probes up to
-        ``depth`` unit choices.  ``est_units`` (beyond-paper "dp_avg"
-        mode) prices scalable actions at that DoP instead of min.
+        the completion schedule; the *first* remaining action probes up
+        to ``depth`` unit choices.  ``completions`` must be sorted
+        ascending — it is shared READ-ONLY across all depth probes, so
+        the former per-probe ``list(heap)`` copy + O(k) ``heapify``
+        replay collapses into one sorted-merge (:meth:`_replay`) whose
+        only mutable state is the small heap of newly generated
+        completion times.  ``est_units`` (beyond-paper "dp_avg" mode)
+        prices scalable actions at that DoP instead of min.
         ``rest_durs``, when given, are the precomputed min-allocation
         durations aligned with ``rest`` (callers hoist them out of the
         eviction loop — they do not depend on the kept prefix)."""
@@ -418,19 +525,38 @@ class ElasticScheduler:
             tail_durs = rest_durs[1:]
         best = INF
         for d in probes:
-            tmp_heap = list(heap)
-            heapq.heapify(tmp_heap)
-            obj = 0.0
             t0 = self._dur(first, d if est_units is None else max(d or 1, est_units))
-            ts = heapq.heappop(tmp_heap) if tmp_heap else 0.0
-            obj += ts + t0
-            heapq.heappush(tmp_heap, ts + t0)
-            for ti in tail_durs:
-                ts = heapq.heappop(tmp_heap) if tmp_heap else 0.0
-                obj += ts + ti
-                heapq.heappush(tmp_heap, ts + ti)
-            best = min(best, obj)
+            best = min(best, self._replay(completions, t0, tail_durs))
         return best
+
+    @staticmethod
+    def _replay(completions: List[float], t0: float, tail_durs: List[float]) -> float:
+        """One ESTIMATE replay as a sorted merge.
+
+        Equivalent to the heap simulation (pop the earliest completion,
+        start the next queued action on it, push its completion): because
+        every generated completion is >= the value popped for it, the pop
+        sequence is non-decreasing, so the pre-sorted base array can be
+        consumed with a cursor and only *generated* completions need a
+        heap.  Identical objective to the heap replay — ties between the
+        cursor head and the generated heap pick the same value either
+        way."""
+        i = 0
+        n = len(completions)
+        gen: List[float] = []
+        obj = 0.0
+        for dur in itertools.chain((t0,), tail_durs):
+            if i < n and (not gen or completions[i] <= gen[0]):
+                ts = completions[i]
+                i += 1
+            elif gen:
+                ts = heapq.heappop(gen)
+            else:
+                ts = 0.0
+            c = ts + dur
+            obj += c
+            heapq.heappush(gen, c)
+        return obj
 
     def _depth_probes(self, action: Action) -> List[Optional[int]]:
         if not action.scalable:
