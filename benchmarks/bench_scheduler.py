@@ -21,6 +21,7 @@ fast path.
 from __future__ import annotations
 
 import json
+import statistics
 import time
 from typing import Dict, List, Optional
 
@@ -272,6 +273,203 @@ def run_churn(scale: float = 1.0) -> List[Dict[str, object]]:
     return rows
 
 
+# ---------------------------------------------------------------------------
+# Multi-tenant fairness scenario (2 heavy + 2 light tasks, wave arrivals)
+# ---------------------------------------------------------------------------
+
+#: Configured fair-share weights; targets are w_i / sum(w).
+FAIRNESS_WEIGHTS = {"heavy0": 2.0, "heavy1": 2.0, "light0": 1.0, "light1": 1.0}
+FAIRNESS_HORIZON_S = 90.0  # saturated measurement window (virtual seconds)
+
+
+def _tenant_action(task: str, i: int) -> Action:
+    """Mixed cpu/gpu tenant streams: heavy tasks burst long scalable
+    reward jobs (plus TP-scalable GPU scoring), light tasks stream short
+    rigid tool calls — the exact shape where cross-task FCFS starves the
+    light tenants behind a heavy wave."""
+    heavy = task.startswith("heavy")
+    i += 3 * (task.endswith("1"))  # de-phase the twin tenants' streams
+    if heavy and i % 6 == 5:
+        return Action(
+            name="rm:score",
+            cost={"gpu": ResourceRequest("gpu", (1, 2, 4))},
+            key_resource="gpu",
+            elasticity=AmdahlElasticity(0.15),
+            base_duration=1.0 + 0.2 * (i % 3),
+            service="rm0",
+            task_id=task,
+            trajectory_id=f"{task}-{i}",
+        )
+    if heavy:
+        return Action(
+            name="reward",
+            cost={"cpu": ResourceRequest("cpu", (2, 4, 8))},
+            key_resource="cpu",
+            elasticity=AmdahlElasticity(0.08),
+            base_duration=3.5 + 0.3 * (i % 4),
+            task_id=task,
+            trajectory_id=f"{task}-{i}",
+        )
+    if i % 8 == 7:
+        return Action(
+            name="rm:probe",
+            cost={"gpu": fixed("gpu", 1)},
+            base_duration=0.3,
+            service="rm0",
+            task_id=task,
+            trajectory_id=f"{task}-{i}",
+        )
+    return Action(
+        name="tool",
+        cost={"cpu": fixed("cpu", 1)},
+        base_duration=0.4 + 0.1 * (i % 3),
+        task_id=task,
+        trajectory_id=f"{task}-{i}",
+    )
+
+
+def _run_fairness(fair: bool, horizon: float, tasks=None):
+    """Saturated multi-tenant churn: every task keeps a queued backlog
+    through ``horizon`` via wave refills (each task's completions refill
+    in same-timestamp bursts — the paper's rollout-batch arrival shape)."""
+    from repro.core.cluster import GpuNodeSpec
+    from repro.core.fairqueue import FairSharePolicy
+    from repro.core.managers.gpu import GpuManager, ServiceSpec
+    from repro.core.simulator import EventLoop
+
+    tasks = list(tasks or FAIRNESS_WEIGHTS)
+    loop = EventLoop()
+    managers = {
+        "cpu": CpuManager([CpuNodeSpec("n0", cores=16)]),
+        "gpu": GpuManager([GpuNodeSpec("g0")], [ServiceSpec("rm0", 40.0)]),
+    }
+    fs = FairSharePolicy(weights=dict(FAIRNESS_WEIGHTS)) if fair else None
+    orch = Orchestrator(managers, loop=loop, policy=ElasticScheduler(), fair_share=fs)
+    wave = 6
+    counters = {t: 0 for t in tasks}
+    pending_wave = {t: 0 for t in tasks}
+
+    def submit(task: str, burst: int) -> None:
+        for _ in range(burst):
+            i = counters[task]
+            counters[task] += 1
+            fut = orch.submit(_tenant_action(task, i))
+            fut.add_done_callback(lambda _f, t=task: refill(t))
+
+    def refill(task: str) -> None:
+        # wave arrivals: every ``wave`` completions of a task trigger one
+        # same-timestamp burst of replacements, keeping its backlog deep.
+        if orch.now >= horizon:
+            return
+        pending_wave[task] += 1
+        if pending_wave[task] >= wave:
+            pending_wave[task] = 0
+            submit(task, wave)
+
+    for k, t in enumerate(tasks):
+        orch.loop.call_after(0.001 * k, lambda t=t: submit(t, 2 * wave))
+    orch.run(until=horizon * 2)
+    return orch
+
+
+def _fairness_trace(orch: Orchestrator):
+    return sorted(
+        (r.name, r.task_id, r.trajectory_id, round(r.submit, 9), round(r.start, 9),
+         round(r.finish, 9), tuple(sorted(r.units.items())), r.failed)
+        for r in orch.telemetry.records
+    )
+
+
+def run_fairness(scale: float = 1.0) -> List[Dict[str, object]]:
+    """Multi-tenant fairness rows: weighted-share tracking error, light-
+    tenant interference vs the FCFS ablation, and the single-task
+    launch-trace equivalence bit.  The DES wall cost is negligible, so
+    ``scale`` only ever lengthens the saturated window (never shortens
+    it below the share-quantum granularity the 10% gate needs)."""
+    horizon = FAIRNESS_HORIZON_S * max(1.0, scale)
+    fair = _run_fairness(True, horizon)
+    fcfs = _run_fairness(False, horizon)
+
+    wsum = sum(FAIRNESS_WEIGHTS.values())
+    share = fair.telemetry.task_share("cpu", until=horizon)
+    rows: List[Dict[str, object]] = []
+    max_err = 0.0
+    for task, w in FAIRNESS_WEIGHTS.items():
+        target = w / wsum
+        got = share.get(task, 0.0)
+        max_err = max(max_err, abs(got - target) / target)
+        rows.append(
+            {
+                "name": f"fairness_share_cpu_{task}",
+                "us_per_call": got,
+                "mean_act": fair.telemetry.mean_act(task),
+                "derived": f"target={target:.4f};weight={w}",
+            }
+        )
+    rows.append(
+        {
+            "name": "fairness_share_maxerr",
+            "us_per_call": max_err,
+            "mean_act": "",
+            "derived": "max relative |share-target|/target over tasks",
+        }
+    )
+
+    light_fair = statistics.fmean(
+        fair.telemetry.mean_act(t) for t in ("light0", "light1")
+    )
+    light_fcfs = statistics.fmean(
+        fcfs.telemetry.mean_act(t) for t in ("light0", "light1")
+    )
+    rows.append(
+        {"name": "fairness_light_act_wfq", "us_per_call": light_fair,
+         "mean_act": light_fair, "derived": "light-tenant mean ACT, WFQ"}
+    )
+    rows.append(
+        {"name": "fairness_light_act_fcfs", "us_per_call": light_fcfs,
+         "mean_act": light_fcfs, "derived": "light-tenant mean ACT, FCFS ablation"}
+    )
+    rows.append(
+        {
+            "name": "fairness_interference_speedup",
+            "us_per_call": light_fcfs / max(1e-9, light_fair),
+            "mean_act": "",
+            "derived": "x_fcfs_light_act_over_wfq",
+        }
+    )
+
+    # single-task equivalence: the fairness layer must be a bit-identical
+    # no-op when only one tenant exists (WFQ order == FCFS order).
+    single_fair = _run_fairness(True, horizon / 3, tasks=["heavy0"])
+    single_fcfs = _run_fairness(False, horizon / 3, tasks=["heavy0"])
+    identical = _fairness_trace(single_fair) == _fairness_trace(single_fcfs)
+    rows.append(
+        {
+            "name": "fairness_single_task_equivalent",
+            "us_per_call": 1.0 if identical else 0.0,
+            "mean_act": "",
+            "derived": "1=launch traces identical to the FCFS path",
+        }
+    )
+    return rows
+
+
+def check_fairness(rows: List[Dict[str, object]]) -> None:
+    """CI fairness-smoke gates: (a) weighted shares within 10% of target
+    under saturation; (b) single-task launch traces identical to the
+    FCFS path.  The DES is deterministic, so these are hard gates."""
+    by_name = {r["name"]: float(r["us_per_call"]) for r in rows}  # type: ignore[arg-type]
+    err = by_name["fairness_share_maxerr"]
+    speedup = by_name["fairness_interference_speedup"]
+    equiv = by_name["fairness_single_task_equivalent"]
+    print(f"# fairness check: share_maxerr={err:.3f} "
+          f"light_interference_speedup={speedup:.2f}x single_task_equiv={equiv:.0f}")
+    if err > 0.10:
+        raise SystemExit(f"weighted shares off target by {err:.1%} (> 10%)")
+    if equiv != 1.0:
+        raise SystemExit("single-task fairness run diverged from the FCFS path")
+
+
 CHECK_SCENARIO = "schedule_depth2_queue128"
 
 
@@ -281,7 +479,9 @@ def write_json(rows: List[Dict[str, object]], path: str) -> None:
     for r in rows:
         us = float(r["us_per_call"])  # type: ignore[arg-type]
         name = str(r["name"])
-        is_ratio = "speedup" in name
+        # fairness_* rows carry dimensionless metrics (shares, flags,
+        # ratios), not latencies — keep them out of the ns_per_op trend.
+        is_ratio = "speedup" in name or name.startswith("fairness_")
         scenarios[name] = {
             "ns_per_op": None if is_ratio else us * 1e3,
             "us_per_call": None if is_ratio else us,
@@ -317,9 +517,20 @@ def check_dense_fast_path(rows: List[Dict[str, object]]) -> None:
 
 def main(
     scale: float = 1.0,
-    json_path: Optional[str] = "BENCH_scheduler.json",
+    json_path: Optional[str] = None,
     check: bool = False,
+    suite: str = "latency",
 ) -> None:
+    if json_path is None:
+        json_path = "BENCH_fairness.json" if suite == "fairness" else "BENCH_scheduler.json"
+    if suite == "fairness":
+        fairness_rows = run_fairness(scale)
+        emit(fairness_rows, "multi-tenant fairness (WFQ vs FCFS ablation)")
+        if json_path:
+            write_json(fairness_rows, json_path)
+        if check:
+            check_fairness(fairness_rows)
+        return
     sched_rows = run(scale)
     emit(sched_rows, "scheduler decision latency (dense vs reference DP)")
     churn_rows = run_churn(scale)
@@ -335,10 +546,22 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--scale", type=float, default=1.0)
-    ap.add_argument("--json", default="BENCH_scheduler.json",
-                    help="output path for machine-readable results ('' = skip)")
+    ap.add_argument("--json", default=None,
+                    help="output path for machine-readable results ('' = skip; "
+                         "default: BENCH_scheduler.json for the latency suite, "
+                         "BENCH_fairness.json for the fairness suite)")
     ap.add_argument("--check", action="store_true",
-                    help="fail if the dense DP is slower than the reference "
-                         f"on {CHECK_SCENARIO}")
+                    help="fail the suite's CI gate: dense-DP parity on "
+                         f"{CHECK_SCENARIO} (latency suite) or the weighted-"
+                         "share / single-task-equivalence gates (fairness)")
+    ap.add_argument("--suite", choices=("latency", "fairness"), default="latency",
+                    help="latency = decision-latency scenarios (default); "
+                         "fairness = multi-tenant weighted-share scenario")
     args = ap.parse_args()
-    main(args.scale, args.json or None, args.check)
+    if args.json is None:
+        # per-suite defaults keep the fairness run from overwriting the
+        # tracked latency baseline (and vice versa)
+        args.json = (
+            "BENCH_fairness.json" if args.suite == "fairness" else "BENCH_scheduler.json"
+        )
+    main(args.scale, args.json, args.check, args.suite)

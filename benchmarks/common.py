@@ -2,11 +2,9 @@
 
 from __future__ import annotations
 
-import csv
-import io
 import sys
 import time
-from typing import Dict, Iterable, List
+from typing import Dict, Iterable
 
 
 def emit(rows: Iterable[Dict[str, object]], header: str) -> None:

@@ -10,7 +10,6 @@ artifacts under results/dryrun (produce them with
 from __future__ import annotations
 
 import argparse
-import sys
 import time
 
 

@@ -8,8 +8,8 @@ smoke variant (2 layers, d_model <= 512, <= 4 experts) used by CPU tests.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict
 
 
 @dataclass(frozen=True)

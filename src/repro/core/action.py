@@ -21,7 +21,7 @@ import itertools
 import math
 from dataclasses import dataclass, field
 from enum import Enum
-from typing import Callable, Dict, Optional, Sequence, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 # ---------------------------------------------------------------------------
 # Resource requests
@@ -173,9 +173,13 @@ class Action:
     key_resource: Optional[str] = None
     elasticity: Optional[Elasticity] = None
     base_duration: Optional[float] = None  # T_ori (1 unit of key resource)
-    # --- provenance ---
+    # --- provenance / multi-tenant fair share ---
     task_id: str = "task0"
     trajectory_id: str = "traj0"
+    # fair-share weight override for THIS action; None defers to the
+    # FairSharePolicy's per-task weight (tasks are the sharing tenant —
+    # per-action overrides exist for e.g. latency-critical probes).
+    weight: Optional[float] = None
     service: Optional[str] = None  # GPU manager: required service name
     # --- execution payload (live mode) / duration sampler (sim mode) ---
     fn: Optional[Callable[..., object]] = None

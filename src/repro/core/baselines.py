@@ -26,14 +26,22 @@ lifecycle, and telemetry:
 * :class:`FcfsPolicy`      — strict FCFS at minimum units, no elasticity;
 * :class:`StaticDopPolicy` — every scalable action pinned to one fixed
   DoP (the SGLang-style "static TP" discipline) on a shared pool.
+
+Multi-tenant fairness ablations compose orthogonally: the *queueing*
+ablation is ``Orchestrator(fair_share=None)`` (plain cross-task FCFS
+partitions — the pre-fairness path), and the *allocation* ablation is
+``FcfsPolicy`` under a fair-share orchestrator (weighted ordering, but
+no elastic/weighted allocation).  ``bench_scheduler --suite fairness``
+measures both against the full WFQ + fairness-aware ElasticScheduler
+stack.
 """
 
 from __future__ import annotations
 
 import math
 import random
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
 
 from repro.core.action import Action, ActionState
 from repro.core.scheduler import Decision, ScheduleResult

@@ -419,6 +419,7 @@ def dp_arrange_prefixes_dense(
     operator: DPOperator,
     table: Optional[TransitionTable] = None,
     backend: Optional[str] = None,
+    weights: Optional[Sequence[float]] = None,
 ) -> Optional[List[Optional[DPResult]]]:
     """Vectorized :func:`dp_arrange_prefixes_ref`: one scatter-min per
     task row over the operator's dense transition table.
@@ -430,6 +431,14 @@ def dp_arrange_prefixes_dense(
     sums are formed and minimized, so every prefix's ``total_duration``
     matches bit-for-bit (ties may back-track to a different, equally
     optimal allocation).
+
+    ``weights`` (multi-tenant fairness): optional per-task multipliers —
+    the objective becomes ``sum_i w_i * T_i(k_i)`` so a heavy-weight
+    tenant's completion time counts for more when trading allocations
+    off, while the reported per-task ``durations`` stay the TRUE
+    durations (callers feed them to the completion-time estimate).
+    ``None`` is the unweighted paper objective, bit-identical to the
+    pre-fairness code path.
     """
     if np is None:
         return None
@@ -459,6 +468,8 @@ def dp_arrange_prefixes_dense(
             kidx = [table.k_index[k] for k in task.units]
             nxt_pad[i, : len(kidx)] = table.next[kidx]
             durs_pad[i, : len(kidx)] = task.durations
+            if weights is not None:
+                durs_pad[i, : len(kidx)] *= float(weights[i])
         try:
             jax_rows = _jax_value_rows(nxt_pad, durs_pad, table.start_valid, S)
         except ImportError:
@@ -469,6 +480,8 @@ def dp_arrange_prefixes_dense(
         kidx = [table.k_index[k] for k in task.units]
         nxt = table.next[kidx]  # (K, S)
         durs = np.asarray(task.durations, dtype=np.float64)
+        if weights is not None:
+            durs = durs * float(weights[i])  # objective-side only
         cand = value[None, :] + durs[:, None]  # (K, S)
         if jax_rows is not None:
             new = jax_rows[i]
@@ -558,6 +571,7 @@ def dp_arrange_prefixes(
     operator: DPOperator,
     table: object = _AUTO,
     backend: Optional[str] = None,
+    weights: Optional[Sequence[float]] = None,
 ) -> List[Optional[DPResult]]:
     """DPResult for every prefix ``tasks[:i]`` (i = 0..m) in ONE DP pass.
 
@@ -584,13 +598,19 @@ def dp_arrange_prefixes(
         if resolved is not None and (
             backend == "jax" or _dense_worthwhile(tasks, resolved)
         ):
-            dense = dp_arrange_prefixes_dense(tasks, operator, resolved, backend)
+            dense = dp_arrange_prefixes_dense(
+                tasks, operator, resolved, backend, weights=weights
+            )
             if dense is not None:
                 return dense
-    return dp_arrange_prefixes_ref(tasks, operator)
+    return dp_arrange_prefixes_ref(tasks, operator, weights=weights)
 
 
-def dp_arrange(tasks: Sequence[DPTask], operator: DPOperator) -> Optional[DPResult]:
+def dp_arrange(
+    tasks: Sequence[DPTask],
+    operator: DPOperator,
+    weights: Optional[Sequence[float]] = None,
+) -> Optional[DPResult]:
     """Algorithm 3.  Returns None when even minimal allocation is infeasible.
 
     Uses the dense fast path when available and worthwhile (see
@@ -598,7 +618,7 @@ def dp_arrange(tasks: Sequence[DPTask], operator: DPOperator) -> Optional[DPResu
     dict-based reference."""
     if not tasks:
         return DPResult(0.0, {}, {})
-    return dp_arrange_prefixes(tasks, operator)[-1]
+    return dp_arrange_prefixes(tasks, operator, weights=weights)[-1]
 
 
 # ---------------------------------------------------------------------------
@@ -607,7 +627,11 @@ def dp_arrange(tasks: Sequence[DPTask], operator: DPOperator) -> Optional[DPResu
 # ---------------------------------------------------------------------------
 
 
-def dp_arrange_ref(tasks: Sequence[DPTask], operator: DPOperator) -> Optional[DPResult]:
+def dp_arrange_ref(
+    tasks: Sequence[DPTask],
+    operator: DPOperator,
+    weights: Optional[Sequence[float]] = None,
+) -> Optional[DPResult]:
     """Reference Algorithm 3 over a sparse dict of reachable states."""
     m = len(tasks)
     if m == 0:
@@ -628,6 +652,7 @@ def dp_arrange_ref(tasks: Sequence[DPTask], operator: DPOperator) -> Optional[DP
     choice: List[Dict[int, Tuple[int, int]]] = []  # [i] state -> (k, prev_state)
 
     for i, task in enumerate(tasks):
+        w = None if weights is None else float(weights[i])
         cur_row: Dict[int, float] = {}
         cur_choice: Dict[int, Tuple[int, int]] = {}
         for jp, base in prev_row.items():
@@ -636,7 +661,7 @@ def dp_arrange_ref(tasks: Sequence[DPTask], operator: DPOperator) -> Optional[DP
                 j = _forward(operator, jp, k)
                 if j is None or j > n or not operator.is_valid(j):
                     continue
-                total = base + dur
+                total = base + (dur if w is None else dur * w)
                 if total < cur_row.get(j, INF):
                     cur_row[j] = total
                     cur_choice[j] = (k, jp)
@@ -662,7 +687,9 @@ def dp_arrange_ref(tasks: Sequence[DPTask], operator: DPOperator) -> Optional[DP
 
 
 def dp_arrange_prefixes_ref(
-    tasks: Sequence[DPTask], operator: DPOperator
+    tasks: Sequence[DPTask],
+    operator: DPOperator,
+    weights: Optional[Sequence[float]] = None,
 ) -> List[Optional[DPResult]]:
     """Reference prefix DP over sparse dict rows (see
     :func:`dp_arrange_prefixes` for the contract)."""
@@ -673,6 +700,7 @@ def dp_arrange_prefixes_ref(
     unit_sets = [t.units for t in tasks]
     n = operator.end(unit_sets)
     for i, task in enumerate(tasks):
+        w = None if weights is None else float(weights[i])
         prev_row = rows[-1]
         cur_row: Dict[int, float] = {}
         cur_choice: Dict[int, Tuple[int, int]] = {}
@@ -681,7 +709,7 @@ def dp_arrange_prefixes_ref(
                 j = _forward(operator, jp, k)
                 if j is None or j > n or not operator.is_valid(j):
                     continue
-                total = base + dur
+                total = base + (dur if w is None else dur * w)
                 if total < cur_row.get(j, INF):
                     cur_row[j] = total
                     cur_choice[j] = (k, jp)

@@ -43,6 +43,10 @@ class ResourceManager:
         self.rtype = rtype
         self.capacity = int(capacity)
         self._in_use = 0
+        # per-task units currently held (multi-tenant fair share): the
+        # orchestrator notes every launch/release here, so accounting is
+        # manager-agnostic — subclasses never need to touch it.
+        self._task_use: Dict[str, int] = {}
 
     # ------------------------------------------------------------------
     # capacity / admission
@@ -138,6 +142,28 @@ class ResourceManager:
         identical to a normal release; managers with non-returnable
         consumption (quota tokens) or cleanup costs may override."""
         self.release(action, allocation)
+
+    # ------------------------------------------------------------------
+    # multi-tenant share accounting (fed by the orchestrator's launch /
+    # release choke points; read by the fairness-aware scheduler)
+    # ------------------------------------------------------------------
+    def note_allocated(self, task_id: str, units: int) -> None:
+        self._task_use[task_id] = self._task_use.get(task_id, 0) + units
+
+    def note_released(self, task_id: str, units: int) -> None:
+        left = self._task_use.get(task_id, 0) - units
+        if left > 0:
+            self._task_use[task_id] = left
+        else:
+            self._task_use.pop(task_id, None)
+
+    def task_usage(self) -> Dict[str, int]:
+        """Units currently held per task (live dict — treat as read-only).
+
+        This measures *occupancy* regardless of the manager's own
+        release semantics (quota managers consume tokens on release, but
+        the task is still no longer occupying them)."""
+        return self._task_use
 
     # ------------------------------------------------------------------
     # lifetime hooks

@@ -14,7 +14,7 @@ baseline's API failures and retries (§6.2, DeepSearch).
 from __future__ import annotations
 
 import math
-from typing import Dict, Optional, Sequence
+from typing import Optional
 
 from repro.core.action import Action
 from repro.core.cluster import ApiResourceSpec

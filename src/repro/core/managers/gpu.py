@@ -26,7 +26,7 @@ a "node" is a v5e tray and chunks are ICI-contiguous slices.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.core.action import Action

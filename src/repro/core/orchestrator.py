@@ -6,11 +6,17 @@ single global waiting list — O(n²) control-plane work per round.  This
 module restructures orchestration as an *incremental* event-driven
 subsystem:
 
-* **Partitioned waiting queues** — one insertion-ordered queue per
-  scheduling partition (an action's key elasticity resource, or its
-  sole resource type).  Admission, removal, and retry-at-head are all
-  O(1); FCFS order is preserved *within* a partition, and partitions
-  of unrelated resources no longer block each other.
+* **Partitioned waiting queues** — one queue per scheduling partition
+  (an action's key elasticity resource, or its sole resource type).
+  Admission, removal, and retry-at-head are all O(1) tag work; FCFS
+  order is preserved *within* a task, and partitions of unrelated
+  resources no longer block each other.  Each partition queue is a
+  :class:`~repro.core.fairqueue.PartitionQueue`: with a
+  :class:`~repro.core.fairqueue.FairSharePolicy` it holds per-task
+  sub-queues drained by weighted start-time fair queueing (multi-tenant
+  fair share, optional quota caps); with ``fair_share=None`` it is the
+  plain cross-task FCFS deque (bit-identical to the pre-fairness path,
+  and the fairness ablation).
 * **Event coalescing** — all submissions/completions arriving at the
   same virtual timestamp are folded into ONE scheduling round (the
   round fires as a zero-delay event behind them).
@@ -46,8 +52,8 @@ from __future__ import annotations
 
 import math
 import time
-from collections import OrderedDict
-from typing import Dict, Iterable, List, Optional, Protocol, Sequence, Set
+from functools import partial
+from typing import Dict, Iterable, List, Optional, Protocol, Sequence, Set, Tuple
 
 from repro.core.action import (
     TERMINAL_STATES,
@@ -55,6 +61,7 @@ from repro.core.action import (
     ActionState,
     DurationHistory,
 )
+from repro.core.fairqueue import FairSharePolicy, PartitionQueue, default_cost
 from repro.core.managers.base import Allocation, ResourceManager
 from repro.core.scheduler import (
     Decision,
@@ -129,6 +136,7 @@ class Orchestrator:
         policy: Optional[SchedulingPolicy] = None,
         charge_real_sched_latency: bool = False,
         incremental: bool = True,
+        fair_share: Optional[FairSharePolicy] = None,
     ) -> None:
         self.loop = loop or EventLoop()
         self.history = DurationHistory()
@@ -136,12 +144,23 @@ class Orchestrator:
         self.telemetry = Telemetry()
         self.charge_real_sched_latency = charge_real_sched_latency
         self.incremental = incremental
+        # Multi-tenant fair share: None = single-tenant FCFS queues (the
+        # pre-fairness path and the fairness ablation); a FairSharePolicy
+        # turns every partition into weighted per-task sub-queues (WFQ)
+        # and makes a fairness-capable policy weight its objective.
+        self.fair_share = fair_share
         self.policy = policy or ElasticScheduler(history=self.history)
         if getattr(self.policy, "cache_dp", False) is None:
             # DP memoization is only sound/useful on the incremental path
             self.policy.cache_dp = incremental
+        if (
+            fair_share is not None
+            and hasattr(self.policy, "fair_share")
+            and self.policy.fair_share is None
+        ):
+            self.policy.fair_share = fair_share
         # --- partitioned queues + reverse index -------------------------
-        self._queues: Dict[str, "OrderedDict[int, Action]"] = {}
+        self._queues: Dict[str, PartitionQueue] = {}
         self._rtype_index: Dict[str, Dict[str, int]] = {}  # rtype -> {part: n}
         # --- execution state ---------------------------------------------
         self._executing: Dict[int, Action] = {}
@@ -162,6 +181,7 @@ class Orchestrator:
             "partitions_skipped": 0,
             "events_coalesced": 0,
             "launch_failures": 0,
+            "quota_deferrals": 0,
         }
 
     # ------------------------------------------------------------------
@@ -215,6 +235,18 @@ class Orchestrator:
     def in_flight(self) -> int:
         return len(self._executing)
 
+    def starvation_ages(self) -> Dict[str, float]:
+        """Live starvation telemetry: per task, the age (now - submit) of
+        its oldest queued action across all partitions."""
+        now = self.now
+        ages: Dict[str, float] = {}
+        for queue in self._queues.values():
+            for task, oldest in queue.oldest_submit_by_task().items():
+                age = now - oldest
+                if age > ages.get(task, -math.inf):
+                    ages[task] = age
+        return ages
+
     # ------------------------------------------------------------------
     # queue + index plumbing (all O(1))
     # ------------------------------------------------------------------
@@ -223,6 +255,17 @@ class Orchestrator:
         if action.key_resource is not None:
             return action.key_resource
         return min(action.cost) if action.cost else "*"
+
+    def _make_queue(self, part: str) -> PartitionQueue:
+        fs = self.fair_share
+        if fs is None:
+            return PartitionQueue(fair=False)
+        rtype = part if part in self.managers else None
+        return PartitionQueue(
+            fair=True,
+            weight_of=fs.weight_of,
+            cost_of=partial(default_cost, rtype=rtype),
+        )
 
     def _index_add(self, part: str, action: Action) -> None:
         for rtype in action.cost:
@@ -245,24 +288,26 @@ class Orchestrator:
         if action.state in TERMINAL_STATES:
             return  # cancelled while the delayed submission was in flight
         part = self._partition_of(action)
-        queue = self._queues.setdefault(part, OrderedDict())
+        queue = self._queues.get(part)
+        if queue is None:
+            queue = self._queues[part] = self._make_queue(part)
         action.state = ActionState.QUEUED
         if not at_head:
             action.submit_time = self.now
-        queue[action.uid] = action
-        if at_head:
-            queue.move_to_end(action.uid, last=False)
+        # an arrival only touches its task's sub-queue (tag + one merge
+        # insert) and dirties this partition — no other task re-tags
+        queue.push(action, at_head=at_head)
         self._index_add(part, action)
         self._arm_deadline(action)
         self._stall_retries = 0
         self._dirty.add(part)
         self._request_round()
 
-    def _dequeue(self, action: Action) -> None:
+    def _dequeue(self, action: Action, served: bool = False) -> None:
         part = self._partition_of(action)
         queue = self._queues.get(part)
         if queue is not None and action.uid in queue:
-            del queue[action.uid]
+            queue.remove(action.uid, served=served)
             self._index_remove(part, action)
 
     def _dirty_rtypes(self, rtypes: Iterable[str]) -> None:
@@ -326,7 +371,20 @@ class Orchestrator:
             self._watch.discard(part)
             return False
         self.stats["partition_runs"] += 1
-        waiting = list(queue.values())
+        # WFQ service order: FCFS within a task, min-virtual-start-tag
+        # across tasks — so the candidate window below is drawn
+        # round-robin-by-virtual-time across tasks.  With fair_share=None
+        # (or a single task) this IS plain arrival order.
+        waiting = queue.ordered()
+        held = 0
+        if self.fair_share is not None and self.fair_share.quota:
+            waiting, held = self._apply_quota(part, waiting)
+            self.stats["quota_deferrals"] += held
+            if not waiting:
+                self._watch.discard(part)
+                if held:
+                    self._watch.add(part)
+                return False
         executing = list(self._executing.values())
 
         t0 = time.perf_counter()
@@ -347,22 +405,86 @@ class Orchestrator:
             if not self._launch(decision, overhead):
                 any_failed = True
         # cleanliness: a partition may only go clean in states that are
-        # no-ops until the next event.  Deliberate deferrals (eviction)
-        # and refused allocations are time/state-dependent — they stay on
-        # the watch list and re-run every round.  Otherwise the policy
-        # launched its whole window; the partition is clean exactly when
-        # the remaining head is inadmissible at min units *now* (checked
-        # against live manager state; quota-clock changes are covered by
-        # the refill wake), else it re-enters the dirty set so this
-        # round's fixpoint loop reschedules it.
+        # no-ops until the next event.  Deliberate deferrals (eviction,
+        # quota holds) and refused allocations are time/state-dependent —
+        # they stay on the watch list and re-run every round.  Otherwise
+        # the policy launched its whole window; the partition is clean
+        # exactly when the remaining head is inadmissible at min units
+        # *now* (checked against live manager state; quota-clock changes
+        # are covered by the refill wake), else it re-enters the dirty
+        # set so this round's fixpoint loop reschedules it.
         self._watch.discard(part)
-        if queue and (result.evicted or any_failed):
+        if queue and (result.evicted or any_failed or held):
             self._watch.add(part)
         elif queue:
-            head = next(iter(queue.values()))
-            if candidate_window([head], self.managers, 1):
+            head = queue.head()
+            if head is not None and candidate_window([head], self.managers, 1):
                 self._dirty.add(part)
         return any_failed
+
+    def _apply_quota(
+        self, part: str, waiting: List[Action]
+    ) -> Tuple[List[Action], int]:
+        """Hard share caps: withhold from this round's window the actions
+        of tasks at/above their quota fraction of the partition
+        manager's capacity.  Held actions stay queued (the partition
+        stays watched); a completion releasing units re-dirties it."""
+        manager = self.managers.get(part)
+        fs = self.fair_share
+        if manager is None or fs is None or manager.capacity <= 0:
+            return waiting, 0
+        usage = manager.task_usage()
+        # remaining min-unit budget per capped task THIS round: quota
+        # fraction of capacity minus units already held.  Walking the
+        # window in service order keeps the cap exact for rigid actions;
+        # scalable grants beyond min units are clamped against the same
+        # budget at launch time (:meth:`_quota_clamp`).  Progress rail:
+        # a task holding NOTHING always gets its first window action even
+        # when its min units exceed the configured cap — a sub-min quota
+        # must degrade to "one action at a time", never to a silent
+        # permanent hold.
+        budget: Dict[str, float] = {}
+        eligible: List[Action] = []
+        held = 0
+        for a in waiting:
+            t = a.task_id
+            q = fs.quota_of(t)
+            if math.isinf(q):
+                eligible.append(a)
+                continue
+            first = t not in budget
+            if first:
+                budget[t] = q * manager.capacity - usage.get(t, 0)
+            req = a.cost.get(part)
+            need = req.min_units if req is not None else 1
+            if need <= budget[t] or (first and usage.get(t, 0) == 0):
+                budget[t] -= need
+                eligible.append(a)
+            else:
+                held += 1
+        return eligible, held
+
+    def _quota_clamp(self, action: Action, rtype: str, units: int) -> int:
+        """Cap an elastic grant against the task's remaining quota budget
+        on ``rtype``: snap down to the largest feasible unit count within
+        the budget, but never below min units (the progress rail —
+        admission already decided this action may run)."""
+        fs = self.fair_share
+        if fs is None:
+            return units
+        q = fs.quota_of(action.task_id)
+        if math.isinf(q):
+            return units
+        manager = self.managers.get(rtype)
+        req = action.cost.get(rtype)
+        if manager is None or req is None or units <= req.min_units:
+            return units
+        allowed = q * manager.capacity - manager.task_usage().get(action.task_id, 0)
+        if units <= allowed:
+            return units
+        return max(
+            (u for u in req.units if u <= allowed), default=req.min_units
+        )
 
     def _post_round(self, any_failed: bool) -> None:
         if any_failed:
@@ -411,19 +533,27 @@ class Orchestrator:
         action = decision.action
         if action.state is not ActionState.QUEUED:
             return False  # withdrawn between arrange and launch
+        # elastic grants are capped against the task's quota budget up
+        # front so the charged duration matches the actual allocation
+        units = {
+            rtype: self._quota_clamp(action, rtype, u)
+            for rtype, u in decision.units.items()
+        }
         allocs: List[Allocation] = []
-        for rtype in sorted(decision.units):
+        for rtype in sorted(units):
             manager = self.managers.get(rtype)
             if manager is None:
                 continue
-            alloc = manager.try_allocate(action, decision.units[rtype])
+            alloc = manager.try_allocate(action, units[rtype])
             if alloc is None:
                 for a in allocs:  # rollback partial acquisition
                     self.managers[a.rtype].release(action, a)
                 return False
             allocs.append(alloc)
 
-        self._dequeue(action)
+        for a in allocs:  # multi-tenant share accounting
+            self.managers[a.rtype].note_allocated(action.task_id, a.units)
+        self._dequeue(action, served=True)
         self._executing[action.uid] = action
         self._allocs[action.uid] = allocs
         action.state = ActionState.RUNNING
@@ -431,7 +561,7 @@ class Orchestrator:
         overhead = sched_overhead + sum(a.overhead for a in allocs)
         action.sys_overhead = overhead
 
-        key_units = decision.units.get(action.key_resource or "", None)
+        key_units = units.get(action.key_resource or "", None)
         duration = self._duration_of(action, key_units)
         action.finish_time = self.now + overhead + duration
         self._completion_ev[action.uid] = self.loop.call_at(
@@ -455,6 +585,7 @@ class Orchestrator:
         released: Set[str] = set()
         for alloc in allocs:
             self.managers[alloc.rtype].release(action, alloc)
+            self.managers[alloc.rtype].note_released(action.task_id, alloc.units)
             released.add(alloc.rtype)
         action.state = ActionState.DONE
         self.history.observe(action.name, duration)
@@ -509,6 +640,7 @@ class Orchestrator:
             self._executing.pop(action.uid, None)
             for alloc in self._allocs.pop(action.uid, []):
                 self.managers[alloc.rtype].release_on_failure(action, alloc)
+                self.managers[alloc.rtype].note_released(action.task_id, alloc.units)
                 released.add(alloc.rtype)
         elif action.state is ActionState.QUEUED:
             self._dequeue(action)

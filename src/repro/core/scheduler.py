@@ -48,6 +48,7 @@ from repro.core.dparrange import (
     dp_arrange,
     dp_arrange_prefixes,
 )
+from repro.core.fairqueue import FairSharePolicy
 from repro.core.managers.base import ResourceManager
 
 INF = math.inf
@@ -107,10 +108,19 @@ class ElasticScheduler:
         history: Optional[DurationHistory] = None,
         estimate_units: str = "min",  # "min" (paper Alg. 2) | "dp_avg"
         cache_dp: Optional[bool] = None,
+        fair_share: Optional[FairSharePolicy] = None,
     ) -> None:
         self.depth = depth
         self.candidate_limit = candidate_limit
         self.history = history or DurationHistory()
+        # Multi-tenant fairness (None = single-tenant, pre-fairness
+        # behaviour, bit-identical): per-task weights scale the DP
+        # objective and the Alg. 2 estimate (weighted ΣACT), and
+        # ``preempt_scalable`` lets an over-share task's scalable
+        # allocations shrink to min units before an under-share task's
+        # actions are deferred by eviction.  The orchestrator assigns
+        # this when constructed with a FairSharePolicy.
+        self.fair_share = fair_share
         # Prefix-DP memo for incremental rounds: keyed on the manager's
         # dp_cache_key (free state) + the exact task tuple, so a round
         # whose resource group did not change reuses the arrangement.
@@ -275,14 +285,23 @@ class ElasticScheduler:
         now: float,
         reserve: int = 0,
     ) -> Tuple[List[Action], Dict[str, int], float, int]:
-        """Alg. 1 lines 7-12.  Returns (kept, allocation, objective, #evicted)."""
+        """Alg. 1 lines 7-12.  Returns (kept, allocation, objective, #evicted).
+
+        Multi-tenant fairness (``fair_share``): per-task weights scale
+        both the exact DP part and the Alg. 2 estimate (weighted ΣACT);
+        uniform weights reduce exactly to the unweighted objective.  When
+        the greedy pass would defer an *under-share* task's actions while
+        an *over-share* task holds scalable DoP>1 allocations,
+        ``preempt_scalable`` re-runs the pass with the over-share tasks
+        clamped to minimum units — shrinking the rich tenant before the
+        poor one is evicted — and adopts the re-run iff it strictly keeps
+        more actions.
+        """
         # remaining actions contending for this resource (Alg. 2 line 2:
         # W.split(R_j) - C_j); evicted candidates are prepended as they
         # re-enter the queue ahead of ``remaining``.
         rest_same = [a for a in remaining if a.key_resource == rtype or rtype in a.cost]
 
-        # ONE DP pass yields the exact-part objective of every prefix
-        # (greedy eviction only ever evaluates prefixes).
         floor = self.dop_floor
         if floor:
             # adaptive: a deep queue means throughput mode — min units
@@ -294,10 +313,68 @@ class ElasticScheduler:
             free = max(1, manager.available - reserve)
             if demand > self.floor_pressure * free:
                 floor = None
-        # tasks are named POSITIONALLY ("0".."m-1"), not by uid: the DP
-        # result depends only on the ordered (units, durations) profiles,
-        # so positional names let _prefixes_cached share arrangements
-        # across rounds whose task multiset recurs with fresh actions.
+
+        fs = self.fair_share
+        gw: Optional[Tuple[float, ...]] = None
+        rw: Optional[Tuple[float, ...]] = None
+        if fs is not None:
+            gw = tuple(fs.weight_of(a) for a in group)
+            rw = tuple(fs.weight_of(a) for a in rest_same)
+            if len(set(gw) | set(rw)) <= 1:
+                # uniform weights scale every term identically — the
+                # argmin (and hence every decision) equals the unweighted
+                # objective, so keep the bit-identical single-tenant path.
+                gw = rw = None
+
+        tasks = self._dp_tasks(group, floor)
+        best_kept, best_alloc, obj = self._evict_pass(
+            tasks, group, rest_same, rtype, manager, executing, now, reserve,
+            gw, rw, floor,
+        )
+
+        if (
+            fs is not None
+            and fs.preempt_scalable
+            and best_kept < len(group)
+        ):
+            over, under = self._share_bands(group, rest_same, manager)
+            deferred_tasks = {a.task_id for a in group[best_kept:]}
+            clampable = any(
+                a.task_id in over and len(tasks[i].units) > 1
+                for i, a in enumerate(group)
+            )
+            if (deferred_tasks & under) and clampable:
+                clamped = self._dp_tasks(group, floor, clamp_tasks=over)
+                kept2, alloc2, obj2 = self._evict_pass(
+                    clamped, group, rest_same, rtype, manager, executing, now,
+                    reserve, gw, rw, floor,
+                )
+                # the two passes optimize over different feasible sets, so
+                # their objectives are not comparable — adopt the clamped
+                # arrangement iff shrinking the over-share tenants lets
+                # strictly more (under-share) work launch this round.
+                if kept2 > best_kept:
+                    best_kept, best_alloc, obj = kept2, alloc2, obj2
+
+        kept = group[:best_kept]
+        # translate positional task names back to action uids for callers
+        uid_alloc = {str(group[int(k)].uid): v for k, v in best_alloc.items()}
+        return kept, uid_alloc, obj, len(group) - best_kept
+
+    # ------------------------------------------------------------------
+    def _dp_tasks(
+        self,
+        group: List[Action],
+        floor: Optional[int],
+        clamp_tasks: frozenset = frozenset(),
+    ) -> List[DPTask]:
+        """DPTask rows for ``group``.  Tasks are named POSITIONALLY
+        ("0".."m-1"), not by uid: the DP result depends only on the
+        ordered (units, durations) profiles, so positional names let
+        ``_prefixes_cached`` share arrangements across rounds whose task
+        multiset recurs with fresh actions.  ``clamp_tasks``: tenants
+        whose scalable unit choices collapse to min units (the
+        preempt_scalable shrink)."""
         tasks = []
         for i, a in enumerate(group):
             units = a.key_units()
@@ -312,8 +389,64 @@ class ElasticScheduler:
             if memo is None or memo[0] != units:
                 memo = (units, tuple(a.get_dur(m) for m in units))
                 a.metadata["_dp_durs"] = memo
-            tasks.append(DPTask(name=str(i), units=units, durations=memo[1]))
-        prefixes = self._prefixes_cached(tasks, group, manager, reserve)
+            units, durs = memo
+            if a.task_id in clamp_tasks and len(units) > 1:
+                units, durs = units[:1], durs[:1]
+            tasks.append(DPTask(name=str(i), units=units, durations=durs))
+        return tasks
+
+    # ------------------------------------------------------------------
+    def _share_bands(
+        self,
+        group: Sequence[Action],
+        rest_same: Sequence[Action],
+        manager: ResourceManager,
+    ) -> Tuple[set, set]:
+        """(over-share, under-share) tenants by live occupancy vs the
+        weighted fair share over the tasks currently active (holding
+        units or waiting) on this manager."""
+        fs = self.fair_share
+        usage = manager.task_usage()
+        total = sum(usage.values())
+        active = (
+            {a.task_id for a in group}
+            | {a.task_id for a in rest_same}
+            | set(usage)
+        )
+        if fs is None or total <= 0 or len(active) < 2:
+            return set(), set()
+        wsum = sum(fs.weight_of(t) for t in active)
+        over: set = set()
+        under: set = set()
+        for t in active:
+            target = fs.weight_of(t) / wsum
+            share = usage.get(t, 0) / total
+            if share > target * (1.0 + fs.share_slack):
+                over.add(t)
+            elif share < target:
+                under.add(t)
+        return over, under
+
+    # ------------------------------------------------------------------
+    def _evict_pass(
+        self,
+        tasks: List[DPTask],
+        group: List[Action],
+        rest_same: List[Action],
+        rtype: str,
+        manager: ResourceManager,
+        executing: Sequence[Action],
+        now: float,
+        reserve: int,
+        gw: Optional[Tuple[float, ...]],
+        rw: Optional[Tuple[float, ...]],
+        floor: Optional[int] = None,
+    ) -> Tuple[int, Dict[str, int], float]:
+        """One greedy-eviction sweep over the prefix DP; returns
+        (#kept, positional allocation, objective)."""
+        # ONE DP pass yields the exact-part objective of every prefix
+        # (greedy eviction only ever evaluates prefixes).
+        prefixes = self._prefixes_cached(tasks, group, manager, reserve, gw)
 
         exec_tail = [
             max(0.0, e.finish_time - now)
@@ -322,9 +455,12 @@ class ElasticScheduler:
         ]
 
         # Estimate-part durations are prefix-invariant in the default
-        # ("min") pricing mode and without a DoP floor: hoist them out of
-        # the eviction loop so each prefix probe is pure heap arithmetic
-        # instead of re-deriving every remaining action's duration.
+        # ("min") pricing mode and without a DoP floor (a floored row's
+        # durations[0] is the floored, not the true, min-unit duration):
+        # hoist them out of the eviction loop so each prefix probe is
+        # pure heap arithmetic instead of re-deriving every remaining
+        # action's duration.  A preempt-clamped row keeps hoisting —
+        # clamping truncates to the TRUE min-unit choice.
         hoist = self.estimate_units != "dp_avg" and floor is None
         if hoist:
             group_min_durs = [t.durations[0] for t in tasks]
@@ -341,6 +477,7 @@ class ElasticScheduler:
                 [dp.durations[t.name] for t in tasks[:n_keep]] + exec_tail
             )
             rest = list(group[n_keep:]) + rest_same  # evicted rejoin the queue
+            rest_w = None if gw is None else list(gw[n_keep:]) + list(rw or ())
             est_units = None
             if self.estimate_units == "dp_avg" and dp.allocation:
                 est_units = int(
@@ -348,7 +485,8 @@ class ElasticScheduler:
                 )
             rest_durs = group_min_durs[n_keep:] + rest_same_durs if hoist else None
             return (
-                dp.total_duration + self._estimate(base, rest, est_units, rest_durs),
+                dp.total_duration
+                + self._estimate(base, rest, est_units, rest_durs, rest_w),
                 dp.allocation,
             )
 
@@ -367,10 +505,7 @@ class ElasticScheduler:
                     break
                 continue  # exhaustive: keep scanning past local bumps
             obj, best_kept, best_alloc = new_obj, len(group) - t, new_alloc
-        kept = group[:best_kept]
-        # translate positional task names back to action uids for callers
-        uid_alloc = {str(group[int(k)].uid): v for k, v in best_alloc.items()}
-        return kept, uid_alloc, obj, len(group) - best_kept
+        return best_kept, best_alloc, obj
 
     # ------------------------------------------------------------------
     def _prefixes_cached(
@@ -379,6 +514,7 @@ class ElasticScheduler:
         group: List[Action],
         manager: ResourceManager,
         reserve: int,
+        weights: Optional[Tuple[float, ...]] = None,
     ) -> List[Optional[DPResult]]:
         """dp_arrange_prefixes, memoized on (manager free-state key, task
         tuple).  DPTask captures the unit sets *and* durations, and the
@@ -398,15 +534,17 @@ class ElasticScheduler:
             # hit must not pay for manager state snapshots
             operator = manager.dp_operator(group, reserve)
             if not self.use_dense:
-                return dp_arrange_prefixes(tasks, operator, table=None)
+                return dp_arrange_prefixes(tasks, operator, table=None, weights=weights)
             table = self._table_for(operator, tasks, mkey)
             return dp_arrange_prefixes(
-                tasks, operator, table=table, backend=self.dense_backend
+                tasks, operator, table=table, backend=self.dense_backend,
+                weights=weights,
             )
 
         if not self.cache_dp or mkey is None:
             return compute()
-        key = (mkey, tuple(tasks))
+        # weights scale the memoized objectives, so they are part of the key
+        key = (mkey, tuple(tasks), weights)
         hit = self._dp_cache.get(key)
         if hit is not None:
             self.dp_cache_hits += 1
@@ -502,6 +640,7 @@ class ElasticScheduler:
         rest: List[Action],
         est_units: Optional[int] = None,
         rest_durs: Optional[List[float]] = None,
+        rest_weights: Optional[List[float]] = None,
     ) -> float:
         """Alg. 2 ESTIMATE: insert the remaining queue min-allocation into
         the completion schedule; the *first* remaining action probes up
@@ -514,7 +653,10 @@ class ElasticScheduler:
         prices scalable actions at that DoP instead of min.
         ``rest_durs``, when given, are the precomputed min-allocation
         durations aligned with ``rest`` (callers hoist them out of the
-        eviction loop — they do not depend on the kept prefix)."""
+        eviction loop — they do not depend on the kept prefix).
+        ``rest_weights`` (multi-tenant fairness) weights each remaining
+        action's completion-time contribution — the estimate part of the
+        weighted ΣACT objective."""
         if not rest:
             return 0.0
         first = rest[0]
@@ -523,14 +665,23 @@ class ElasticScheduler:
             tail_durs = [self._dur(a, est_units) for a in rest[1:]]
         else:
             tail_durs = rest_durs[1:]
+        w0, tail_weights = 1.0, None
+        if rest_weights is not None:
+            w0, tail_weights = rest_weights[0], rest_weights[1:]
         best = INF
         for d in probes:
             t0 = self._dur(first, d if est_units is None else max(d or 1, est_units))
-            best = min(best, self._replay(completions, t0, tail_durs))
+            best = min(best, self._replay(completions, t0, tail_durs, w0, tail_weights))
         return best
 
     @staticmethod
-    def _replay(completions: List[float], t0: float, tail_durs: List[float]) -> float:
+    def _replay(
+        completions: List[float],
+        t0: float,
+        tail_durs: List[float],
+        w0: float = 1.0,
+        tail_weights: Optional[List[float]] = None,
+    ) -> float:
         """One ESTIMATE replay as a sorted merge.
 
         Equivalent to the heap simulation (pop the earliest completion,
@@ -540,12 +691,16 @@ class ElasticScheduler:
         consumed with a cursor and only *generated* completions need a
         heap.  Identical objective to the heap replay — ties between the
         cursor head and the generated heap pick the same value either
-        way."""
+        way.  ``w0``/``tail_weights`` weight each contribution (weighted
+        ΣACT); the defaults multiply by exactly 1.0, which is the
+        identity in IEEE-754, so the unweighted objective is bit-identical
+        to the pre-fairness code."""
         i = 0
         n = len(completions)
         gen: List[float] = []
         obj = 0.0
-        for dur in itertools.chain((t0,), tail_durs):
+        ws = itertools.chain((w0,), tail_weights or itertools.repeat(1.0))
+        for dur, w in zip(itertools.chain((t0,), tail_durs), ws):
             if i < n and (not gen or completions[i] <= gen[0]):
                 ts = completions[i]
                 i += 1
@@ -554,7 +709,7 @@ class ElasticScheduler:
             else:
                 ts = 0.0
             c = ts + dur
-            obj += c
+            obj += w * c
             heapq.heappush(gen, c)
         return obj
 

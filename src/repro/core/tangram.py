@@ -30,9 +30,9 @@ from __future__ import annotations
 
 from typing import Dict, Optional
 
+from repro.core.fairqueue import FairSharePolicy
 from repro.core.managers.base import ResourceManager
 from repro.core.orchestrator import SCHED_TICK_S, Orchestrator, SchedulingPolicy
-from repro.core.scheduler import ElasticScheduler
 from repro.core.simulator import EventLoop
 
 __all__ = ["Tangram", "SCHED_TICK_S"]
@@ -46,6 +46,7 @@ class Tangram(Orchestrator):
         scheduler: Optional[SchedulingPolicy] = None,
         charge_real_sched_latency: bool = False,
         incremental: bool = True,
+        fair_share: Optional[FairSharePolicy] = None,
     ) -> None:
         super().__init__(
             managers,
@@ -53,6 +54,7 @@ class Tangram(Orchestrator):
             policy=scheduler,
             charge_real_sched_latency=charge_real_sched_latency,
             incremental=incremental,
+            fair_share=fair_share,
         )
 
     # historical name for the policy slot (pre-refactor callers assign a
@@ -66,3 +68,9 @@ class Tangram(Orchestrator):
         self.policy = policy
         if getattr(policy, "cache_dp", False) is None:
             policy.cache_dp = self.incremental
+        if (
+            self.fair_share is not None
+            and hasattr(policy, "fair_share")
+            and policy.fair_share is None
+        ):
+            policy.fair_share = self.fair_share

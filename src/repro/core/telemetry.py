@@ -5,7 +5,7 @@ from __future__ import annotations
 import math
 import statistics
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Tuple
 
 
 @dataclass
@@ -48,9 +48,64 @@ class Telemetry:
         self.records.append(rec)
 
     # -- aggregates ---------------------------------------------------------
-    def mean_act(self) -> float:
-        ok = [r.act for r in self.records if not r.failed]
+    def mean_act(self, task_id: Optional[str] = None) -> float:
+        """Mean ACT; ``task_id`` restricts to one tenant's actions."""
+        ok = [
+            r.act
+            for r in self.records
+            if not r.failed and (task_id is None or r.task_id == task_id)
+        ]
         return statistics.fmean(ok) if ok else math.nan
+
+    # -- multi-tenant breakdowns -------------------------------------------
+    def task_share(
+        self, rtype: Optional[str] = None, until: Optional[float] = None
+    ) -> Dict[str, float]:
+        """Share of allocated resource-seconds per task (unit-seconds of
+        ``rtype``, or of all resources when None), normalized to sum to
+        1 over the recorded actions.  Under saturation this is the
+        quantity weighted fair queueing drives toward ``w_i / sum w``;
+        ``until`` restricts to actions finished by that time (use it to
+        measure shares inside the saturated window — over a fully
+        drained run the share is fixed by total work, not policy)."""
+        acc: Dict[str, float] = {}
+        for r in self.records:
+            if r.failed or (until is not None and r.finish > until):
+                continue
+            units = r.units.get(rtype, 0) if rtype is not None else sum(r.units.values())
+            if units <= 0:
+                continue
+            acc[r.task_id] = acc.get(r.task_id, 0.0) + units * max(0.0, r.exec_dur)
+        total = sum(acc.values())
+        if total <= 0:
+            return {}
+        return {t: v / total for t, v in acc.items()}
+
+    def max_queue_dur(self, task_id: Optional[str] = None) -> float:
+        """Worst observed queueing delay (recorded starvation age)."""
+        qs = [
+            r.queue_dur
+            for r in self.records
+            if not r.failed and (task_id is None or r.task_id == task_id)
+        ]
+        return max(qs) if qs else math.nan
+
+    def per_task(self, rtype: Optional[str] = None) -> Dict[str, Dict[str, float]]:
+        """One summary row per task: mean ACT, share-of-allocation,
+        worst queueing delay (starvation age), and completed count."""
+        share = self.task_share(rtype)
+        tasks = sorted({r.task_id for r in self.records})
+        return {
+            t: {
+                "mean_act": self.mean_act(t),
+                "share": share.get(t, 0.0),
+                "max_queue_dur": self.max_queue_dur(t),
+                "completed": float(
+                    sum(1 for r in self.records if r.task_id == t and not r.failed)
+                ),
+            }
+            for t in tasks
+        }
 
     def p(self, q: float) -> float:
         ok = sorted(r.act for r in self.records if not r.failed)

@@ -11,7 +11,6 @@ from __future__ import annotations
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.moe_matmul import moe_matmul

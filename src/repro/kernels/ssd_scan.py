@@ -14,7 +14,6 @@ run the [Q,N]x[N,Q] and [Q,Q]x[Q,hd] contractions.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,6 @@ from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import InputShape, ModelConfig
 from repro.models.model import ModelApi

@@ -9,7 +9,6 @@ mesh with the dry-run's shardings.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 
@@ -37,7 +36,6 @@ def main() -> None:
         make_train_step,
         save_checkpoint,
     )
-    from repro.training.data import batch_for
 
     cfg = get_config(args.arch)
     if not args.full:

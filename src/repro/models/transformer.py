@@ -8,8 +8,6 @@ body in ``jax.checkpoint``.
 
 from __future__ import annotations
 
-import math
-from functools import partial
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax

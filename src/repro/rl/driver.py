@@ -6,7 +6,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -16,7 +16,8 @@ from repro.core.baselines import (
     TrajectoryStaticCpuSystem,
     UnmanagedApiSystem,
 )
-from repro.core.cluster import ApiResourceSpec, ClusterSpec, paper_testbed
+from repro.core.cluster import ClusterSpec, paper_testbed
+from repro.core.fairqueue import FairSharePolicy
 from repro.core.managers.basic import BasicResourceManager
 from repro.core.managers.cpu import CpuManager
 from repro.core.managers.gpu import GpuManager, ServiceSpec
@@ -54,11 +55,16 @@ def build_orchestrator(
     service_state_gb: float = 40.0,
     loop: Optional[EventLoop] = None,
     incremental: bool = True,
+    fair_share: Optional[FairSharePolicy] = None,
 ) -> Orchestrator:
     """One orchestrator, swappable policy (ElasticScheduler by default,
-    or the FCFS/static baseline policies for ablations)."""
+    or the FCFS/static baseline policies for ablations).  ``fair_share``
+    turns on multi-tenant weighted queueing across task_ids."""
     managers, loop = build_managers(cluster, services, service_state_gb, loop)
-    return Orchestrator(managers, loop=loop, policy=policy, incremental=incremental)
+    return Orchestrator(
+        managers, loop=loop, policy=policy, incremental=incremental,
+        fair_share=fair_share,
+    )
 
 
 def build_tangram(
@@ -67,11 +73,12 @@ def build_tangram(
     service_state_gb: float = 40.0,
     loop: Optional[EventLoop] = None,
     depth: int = 2,
+    fair_share: Optional[FairSharePolicy] = None,
 ) -> Tangram:
     from repro.core.scheduler import ElasticScheduler
 
     managers, loop = build_managers(cluster, services, service_state_gb, loop)
-    tg = Tangram(managers, loop=loop)
+    tg = Tangram(managers, loop=loop, fair_share=fair_share)
     tg.scheduler = ElasticScheduler(depth=depth, history=tg.history)
     return tg
 

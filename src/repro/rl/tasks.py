@@ -25,14 +25,13 @@ from __future__ import annotations
 import dataclasses
 import math
 import random
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, List, Sequence
 
 from repro.core.action import (
     Action,
     AmdahlElasticity,
     TableElasticity,
     fixed,
-    ranged,
     ResourceRequest,
 )
 

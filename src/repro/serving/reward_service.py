@@ -10,8 +10,7 @@ the profiled DoP scaling supplies the action's elasticity table.
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Callable, Dict, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -21,7 +21,7 @@ divisible by the mesh-axis extent (e.g. granite's 24 heads or smollm's
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax

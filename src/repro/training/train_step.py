@@ -2,13 +2,11 @@
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
 from repro.models.model import ModelApi
 from repro.sharding.rules import Rules
 from repro.training.optimizer import (

@@ -1,6 +1,5 @@
 """DPArrange (Algorithms 3 & 4): unit + property tests vs brute force."""
 
-import math
 
 import pytest
 

@@ -5,7 +5,7 @@ import math
 
 import pytest
 
-from repro.core.action import Action, ActionState, fixed, ranged
+from repro.core.action import Action, ActionState, fixed
 from repro.core.cluster import CpuNodeSpec, GpuNodeSpec
 from repro.core.managers.base import ResourceManager
 from repro.core.managers.cpu import CpuManager

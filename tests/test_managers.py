@@ -1,6 +1,5 @@
 """Resource managers (§5): chunk allocator, AOE CPU, EOE GPU, Basic."""
 
-import math
 
 import pytest
 

@@ -5,10 +5,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import INPUT_SHAPES, all_configs, get_config
+from repro.configs import all_configs, get_config
 from repro.models import build_model
-from repro.models.layers import logits_fn, rms_norm
-from repro.models.ssm import ssd_scan_with_state, ssm_schema, ssd_decode_step
+from repro.models.layers import logits_fn
+from repro.models.ssm import ssd_scan_with_state, ssd_decode_step
 from repro.models.transformer import embed_tokens, forward
 
 ARCHS = sorted(all_configs())
@@ -185,7 +185,7 @@ class TestSSD:
 
 class TestMoE:
     def test_router_probs_normalized_and_capacity_respected(self):
-        from repro.models.moe import expert_capacity, moe_ffn, moe_schema
+        from repro.models.moe import moe_ffn
 
         cfg = get_config("granite-moe-3b-a800m").reduced()
         api = build_model(cfg)

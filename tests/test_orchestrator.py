@@ -1,7 +1,6 @@
 """Event-driven orchestrator: incremental-vs-full decision equivalence,
 partitioned queues, dirty-tracking skips, and the stalled-launch guard."""
 
-import math
 import random
 
 import pytest
@@ -9,7 +8,7 @@ import pytest
 from repro.core.action import Action, AmdahlElasticity, ResourceRequest, fixed, ranged
 from repro.core.baselines import FcfsPolicy, StaticDopPolicy
 from repro.core.cluster import ApiResourceSpec, CpuNodeSpec, GpuNodeSpec
-from repro.core.managers.base import Allocation, ResourceManager
+from repro.core.managers.base import ResourceManager
 from repro.core.managers.basic import BasicResourceManager
 from repro.core.managers.cpu import CpuManager
 from repro.core.managers.gpu import GpuManager, ServiceSpec

@@ -2,7 +2,6 @@
 
 import math
 
-import pytest
 
 from repro.core.cluster import paper_testbed
 from repro.rl.driver import run_baseline_step, run_tangram_step

@@ -1,16 +1,12 @@
 """Elastic scheduler (Algorithms 1 & 2): unit + property tests."""
 
-import math
 
-import pytest
 
 from _hypothesis_compat import given, settings, st
 
 from repro.core.action import (
     Action,
     AmdahlElasticity,
-    DurationHistory,
-    LinearElasticity,
     fixed,
     powers_of_two,
     ranged,

@@ -1,6 +1,5 @@
 """End-to-end Tangram system behaviour + baseline comparisons (DES)."""
 
-import math
 
 import pytest
 

@@ -21,7 +21,7 @@ from repro.training import (
     make_train_step,
     save_checkpoint,
 )
-from repro.training.optimizer import global_norm, lr_schedule
+from repro.training.optimizer import lr_schedule
 
 
 class TestOptimizer:
