@@ -9,7 +9,12 @@ system.  This harness measures the Python control-plane directly:
   reference DP (``*_ref`` rows), plus a ``*_dense_speedup`` ratio;
 * ``churn_*``        — steady-state churn against a WARM orchestrator
   (interleaved submissions + completions), incremental rounds vs full
-  rescheduling, reporting per-event decision latency and the speedup.
+  rescheduling, reporting per-event decision latency and the speedup;
+* ``shard_churn_*``  — synchronized fleet churn (many pools dirty per
+  round), the serial round loop vs the sharded plan/commit engine
+  (``--shards N``): critical-path decision latency, speedup, and the
+  launch-trace identity bit (``--suite shards`` + ``--check`` is the CI
+  shard-smoke gate).
 
 ``main`` additionally writes ``BENCH_scheduler.json`` (per-scenario
 ns/op + mean ACT, machine-readable for CI trending) and, with
@@ -28,6 +33,7 @@ from typing import Dict, List, Optional
 from benchmarks.common import emit
 from repro.core.action import Action, AmdahlElasticity, ResourceRequest, fixed
 from repro.core.cluster import CpuNodeSpec
+from repro.core.managers.base import ResourceManager
 from repro.core.managers.cpu import CpuManager
 from repro.core.orchestrator import Orchestrator
 from repro.core.scheduler import ElasticScheduler
@@ -274,6 +280,170 @@ def run_churn(scale: float = 1.0) -> List[Dict[str, object]]:
 
 
 # ---------------------------------------------------------------------------
+# Sharded-rounds scenario: synchronized fleet churn (the control-plane
+# scale wall the plan/commit engine removes)
+# ---------------------------------------------------------------------------
+
+#: Independent external resource pools in the fleet-churn scenario.  The
+#: fleet is symmetric — every wave lands the same action multiset on
+#: every pool at the same virtual instant, so completions coalesce
+#: across pools and (nearly) every scheduling round re-plans many dirty
+#: partitions: the regime where the serial round loop's decision latency
+#: grows with fleet size and the sharded engine's critical path stays
+#: flat.
+SHARD_POOLS = 8
+
+
+def _fleet_action(pool: int, wave: int, i: int) -> Action:
+    rt = f"pool{pool}"
+    if i % 3 == 2:
+        return Action(
+            name="tool", cost={rt: fixed(rt, 1)},
+            base_duration=0.5 + 0.1 * (wave % 3),
+            trajectory_id=f"p{pool}-{wave}-{i}",
+        )
+    return Action(
+        name="reward",
+        cost={rt: ResourceRequest(rt, (1, 2, 4, 8))},
+        key_resource=rt,
+        elasticity=AmdahlElasticity(0.05),
+        base_duration=4.0 + 0.5 * ((wave + i) % 4),
+        trajectory_id=f"p{pool}-{wave}-{i}",
+    )
+
+
+def _run_shard_churn(
+    shards: Optional[int], queue: int = 128, waves: int = 16,
+    cores: int = 8, period_s: float = 4.0,
+):
+    """Steady-state churn over ``SHARD_POOLS`` independent pools, each
+    smaller than its demand so a deep backlog persists: every wave
+    submits ``queue / SHARD_POOLS`` actions per pool at one timestamp,
+    and the symmetric workload keeps cross-pool completions coalesced —
+    every round is a genuinely multi-partition round.  ``shards=None``
+    is the serial round loop; ``shards=N`` the plan/commit engine, whose
+    charged decision latency is the critical path (max per-shard plan +
+    serialized commit — see repro.core.shards)."""
+    from repro.core.simulator import EventLoop
+
+    per_pool = max(1, queue // SHARD_POOLS)
+    loop = EventLoop()
+    managers = {
+        f"pool{k}": ResourceManager(f"pool{k}", cores) for k in range(SHARD_POOLS)
+    }
+    orch = Orchestrator(
+        managers, loop=loop, policy=ElasticScheduler(), incremental=True,
+        shards=shards,
+    )
+    wave_no = [0]
+
+    def submit_wave() -> None:
+        w = wave_no[0]
+        wave_no[0] += 1
+        for k in range(SHARD_POOLS):
+            for i in range(per_pool):
+                orch.submit(_fleet_action(k, w, i))
+        if w + 1 < waves:
+            orch.loop.call_after(period_s, submit_wave)
+
+    submit_wave()
+    # warm-up: the first wave primes queues, caches, and pool state;
+    # reset EVERY shard counter so the reported latency, wall, balance,
+    # and conflict figures all cover the same post-warm-up window
+    orch.run(until=period_s - 0.1)
+    warm_records = len(orch.telemetry.records)
+    orch.telemetry.sched_wall_s = 0.0
+    orch.telemetry.plan_wall_s = 0.0
+    orch.telemetry.plan_critical_s = 0.0
+    orch.telemetry.commit_conflicts = 0
+    orch.telemetry.shards = {}
+    orch.run()
+    n_events = len(orch.telemetry.records) - warm_records
+    trace = sorted(
+        (r.name, r.trajectory_id, round(r.submit, 9), round(r.start, 9),
+         round(r.finish, 9), tuple(sorted(r.units.items())), r.failed)
+        for r in orch.telemetry.records
+    )
+    return {
+        "sched_us_per_event": orch.telemetry.sched_wall_s / max(1, n_events) * 1e6,
+        "events": n_events,
+        "rounds": orch.stats["rounds"],
+        "sharded_rounds": orch.stats["sharded_rounds"],
+        "mean_act": orch.telemetry.mean_act(),
+        "trace": trace,
+        "summary": orch.telemetry.shard_summary(),
+    }
+
+
+def run_shards(scale: float = 1.0, shards: int = 4) -> List[Dict[str, object]]:
+    """Sharded-round rows: serial vs ``--shards N`` decision latency on
+    the queue-128 fleet churn, the speedup, trace identity, and shard
+    balance.  The sharded latency is the modeled critical path (max
+    per-shard plan + commit — what a fleet of per-shard workers pays);
+    the real in-process plan wall is reported alongside, never
+    conflated."""
+    queue = 128
+    waves = max(6, int(16 * scale))
+    serial = _run_shard_churn(None, queue=queue, waves=waves)
+    sharded = _run_shard_churn(shards, queue=queue, waves=waves)
+    identical = serial["trace"] == sharded["trace"]
+    speedup = serial["sched_us_per_event"] / max(
+        1e-9, sharded["sched_us_per_event"]
+    )
+    summ = sharded["summary"]
+    rows: List[Dict[str, object]] = [
+        {
+            "name": f"shard_churn_queue{queue}_serial",
+            "us_per_call": serial["sched_us_per_event"],
+            "mean_act": serial["mean_act"],
+            "derived": f"queue={queue};events={serial['events']};rounds={serial['rounds']}",
+        },
+        {
+            "name": f"shard_churn_queue{queue}_shards{shards}",
+            "us_per_call": sharded["sched_us_per_event"],
+            "mean_act": sharded["mean_act"],
+            "derived": (
+                f"queue={queue};events={sharded['events']};"
+                f"sharded_rounds={sharded['sharded_rounds']};"
+                f"plan_wall_s={summ.get('plan_wall_s', 0.0):.4f};"
+                f"imbalance={summ.get('imbalance', 1.0):.3f};"
+                f"conflicts={summ.get('commit_conflicts', 0.0):.0f}"
+            ),
+        },
+        {
+            "name": f"shard_churn_queue{queue}_speedup",
+            "us_per_call": speedup,
+            "mean_act": "",
+            "derived": f"x_serial_over_shards{shards};critical-path model",
+        },
+        {
+            "name": f"shard_churn_queue{queue}_traces_identical",
+            "us_per_call": 1.0 if identical else 0.0,
+            "mean_act": "",
+            "derived": "1=launch traces bit-identical to the serial round loop",
+        },
+    ]
+    return rows
+
+
+def check_shards(rows: List[Dict[str, object]], shards: int = 4) -> None:
+    """CI shard-smoke gates on the queue-128 fleet churn: (a) sharded
+    launch traces bit-identical to the serial round loop (the workload
+    is conflict-free by construction); (b) critical-path decision
+    latency >= 1.5x better than serial."""
+    by_name = {r["name"]: float(r["us_per_call"]) for r in rows}  # type: ignore[arg-type]
+    speedup = by_name["shard_churn_queue128_speedup"]
+    identical = by_name["shard_churn_queue128_traces_identical"]
+    print(f"# shard check: speedup={speedup:.2f}x traces_identical={identical:.0f}")
+    if identical != 1.0:
+        raise SystemExit("sharded fleet-churn launch trace diverged from serial")
+    if speedup < 1.5:
+        raise SystemExit(
+            f"sharded decision latency only {speedup:.2f}x better than serial (< 1.5x)"
+        )
+
+
+# ---------------------------------------------------------------------------
 # Multi-tenant fairness scenario (2 heavy + 2 light tasks, wave arrivals)
 # ---------------------------------------------------------------------------
 
@@ -479,9 +649,14 @@ def write_json(rows: List[Dict[str, object]], path: str) -> None:
     for r in rows:
         us = float(r["us_per_call"])  # type: ignore[arg-type]
         name = str(r["name"])
-        # fairness_* rows carry dimensionless metrics (shares, flags,
-        # ratios), not latencies — keep them out of the ns_per_op trend.
-        is_ratio = "speedup" in name or name.startswith("fairness_")
+        # fairness_* rows and flag rows carry dimensionless metrics
+        # (shares, flags, ratios), not latencies — keep them out of the
+        # ns_per_op trend.
+        is_ratio = (
+            "speedup" in name
+            or name.startswith("fairness_")
+            or name.endswith("_traces_identical")
+        )
         scenarios[name] = {
             "ns_per_op": None if is_ratio else us * 1e3,
             "us_per_call": None if is_ratio else us,
@@ -515,14 +690,22 @@ def check_dense_fast_path(rows: List[Dict[str, object]]) -> None:
         )
 
 
+_SUITE_JSON = {
+    "latency": "BENCH_scheduler.json",
+    "fairness": "BENCH_fairness.json",
+    "shards": "BENCH_shards.json",
+}
+
+
 def main(
     scale: float = 1.0,
     json_path: Optional[str] = None,
     check: bool = False,
     suite: str = "latency",
+    shards: int = 4,
 ) -> None:
     if json_path is None:
-        json_path = "BENCH_fairness.json" if suite == "fairness" else "BENCH_scheduler.json"
+        json_path = _SUITE_JSON[suite]
     if suite == "fairness":
         fairness_rows = run_fairness(scale)
         emit(fairness_rows, "multi-tenant fairness (WFQ vs FCFS ablation)")
@@ -531,12 +714,22 @@ def main(
         if check:
             check_fairness(fairness_rows)
         return
+    if suite == "shards":
+        shard_rows = run_shards(scale, shards=shards)
+        emit(shard_rows, "sharded plan/commit rounds vs the serial round loop")
+        if json_path:
+            write_json(shard_rows, json_path)
+        if check:
+            check_shards(shard_rows, shards=shards)
+        return
     sched_rows = run(scale)
     emit(sched_rows, "scheduler decision latency (dense vs reference DP)")
     churn_rows = run_churn(scale)
     emit(churn_rows, "steady-state churn decision latency (warm orchestrator)")
+    shard_rows = run_shards(scale, shards=shards)
+    emit(shard_rows, "sharded plan/commit rounds vs the serial round loop")
     if json_path:
-        write_json(sched_rows + churn_rows, json_path)
+        write_json(sched_rows + churn_rows + shard_rows, json_path)
     if check:
         check_dense_fast_path(sched_rows)
 
@@ -552,16 +745,21 @@ if __name__ == "__main__":
                          "BENCH_fairness.json for the fairness suite)")
     ap.add_argument("--check", action="store_true",
                     help="fail the suite's CI gate: dense-DP parity on "
-                         f"{CHECK_SCENARIO} (latency suite) or the weighted-"
-                         "share / single-task-equivalence gates (fairness)")
-    ap.add_argument("--suite", choices=("latency", "fairness"), default="latency",
+                         f"{CHECK_SCENARIO} (latency suite), the weighted-"
+                         "share / single-task-equivalence gates (fairness), "
+                         "or the >=1.5x-speedup / trace-identity gates "
+                         "(shards)")
+    ap.add_argument("--suite", choices=("latency", "fairness", "shards"),
+                    default="latency",
                     help="latency = decision-latency scenarios (default); "
-                         "fairness = multi-tenant weighted-share scenario")
+                         "fairness = multi-tenant weighted-share scenario; "
+                         "shards = sharded plan/commit rounds vs serial")
+    ap.add_argument("--shards", type=int, default=4,
+                    help="shard count for the fleet-churn scenario (the "
+                         "plan/commit engine's parallel planners)")
     args = ap.parse_args()
     if args.json is None:
-        # per-suite defaults keep the fairness run from overwriting the
-        # tracked latency baseline (and vice versa)
-        args.json = (
-            "BENCH_fairness.json" if args.suite == "fairness" else "BENCH_scheduler.json"
-        )
-    main(args.scale, args.json, args.check, args.suite)
+        # per-suite defaults keep any suite from overwriting another
+        # suite's tracked baseline
+        args.json = _SUITE_JSON[args.suite]
+    main(args.scale, args.json, args.check, args.suite, args.shards)

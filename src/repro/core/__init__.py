@@ -8,6 +8,7 @@ The paper's contribution, as a composable library:
 * :mod:`repro.core.managers`   — Basic / CPU(AOE) / GPU(EOE) managers (§5)
 * :mod:`repro.core.orchestrator` — event-driven control plane: partitioned
   queues, incremental rounds, policies, action lifecycle
+* :mod:`repro.core.shards`     — sharded plan/commit scheduling rounds
 * :mod:`repro.core.tangram`    — the system facade (§3)
 * :mod:`repro.core.baselines`  — k8s / SGLang / ServerlessLLM baselines (§6.1)
 * :mod:`repro.core.simulator`  — discrete-event engine
@@ -47,6 +48,7 @@ from repro.core.orchestrator import (
     SchedulingPolicy,
 )
 from repro.core.scheduler import ElasticScheduler
+from repro.core.shards import PartitionPlan, RoundExecutor
 from repro.core.simulator import EventLoop, SimClock
 from repro.core.tangram import Tangram
 from repro.core.telemetry import Telemetry
@@ -72,7 +74,9 @@ __all__ = [
     "GpuManager",
     "LinearElasticity",
     "Orchestrator",
+    "PartitionPlan",
     "ResourceRequest",
+    "RoundExecutor",
     "SchedulingPolicy",
     "ServiceSpec",
     "SimClock",

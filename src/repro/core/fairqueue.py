@@ -92,6 +92,18 @@ class FairSharePolicy:
         return float(self.quota.get(task_id, math.inf))
 
 
+@dataclass
+class TaskShard:
+    """A detached per-task sub-queue in transit between partition
+    replicas (see :meth:`PartitionQueue.detach_task`).  Tags are
+    self-contained — merging needs only a monotone virtual-clock sync."""
+
+    task_id: str
+    entries: List[Tuple[Tuple[float, int], Action]]
+    finish_tag: float  # the task's virtual finish chain at detach
+    vtime: float  # the source partition's clock at detach
+
+
 def default_cost(action: Action, rtype: Optional[str]) -> float:
     """SFQ service cost in resource-seconds the action will actually
     occupy at its minimum allocation: min units of the partition's
@@ -217,15 +229,101 @@ class PartitionQueue:
         key = self._key.pop(uid)
         if served and self.fair:
             self._vtime = max(self._vtime, key[0])
+        if self.fair and not self._uid_task:
+            self._end_busy_period()
         self._stale += 1
         if self._stale > max(16, len(self._order) // 2):
             self._compact()
         return action
 
+    def _end_busy_period(self) -> None:
+        """SFQ resume rule at a full drain (the last queued action left).
+
+        The virtual clock jumps (monotonically — never backward) to the
+        maximum finish tag any task was charged, and the per-task finish
+        chains reset: every debt is settled at the end of a busy period.
+        Without this, the drain freezes ``V`` at the last *start* tag
+        while stale ``F_task`` entries persist — after the refill, tasks
+        that never queued during the old busy period would be granted
+        stale (unfairly small) start tags ``S = V_old`` and slot in ahead
+        of a returning task still paying ``F_task > V_old`` for service
+        it received before the queue went idle.  After the rule, every
+        arrival in the new busy period starts level at the settled
+        clock."""
+        if self._task_finish:
+            self._vtime = max(
+                self._vtime, max(self._task_finish.values())
+            )
+            self._task_finish.clear()
+
     def _compact(self) -> None:
         self._order = [e for e in self._order if self._key.get(e[1].uid) == e[0]]
         self._stale = 0
         self.compactions += 1
+
+    # ------------------------------------------------------------------
+    # sub-queue detach / merge (the distribution seam: a shard owns whole
+    # per-task sub-queues and syncs only the partition virtual clock)
+    # ------------------------------------------------------------------
+    def sync_vtime(self, v: float) -> None:
+        """Advance the partition virtual clock to an external observation
+        (a peer shard's clock at merge).  Monotone by construction — the
+        clock can never leap backward."""
+        if self.fair:
+            self._vtime = max(self._vtime, float(v))
+
+    def detach_task(self, task_id: str) -> Optional["TaskShard"]:
+        """Detach ``task_id``'s whole sub-queue for remote ownership.
+
+        The shard is self-contained: it carries the queued actions with
+        their original ``(vstart, seq)`` tags, the task's virtual finish
+        tag, and this partition's clock at detach time — everything a
+        remote scheduler needs to keep draining the task fairly.  The
+        entries are tombstoned here (not served: the clock does NOT
+        advance, and a detach that empties the partition is not a
+        busy-period end — the work still exists, elsewhere)."""
+        sub = self._subs.pop(task_id, None)
+        if not sub:
+            return None
+        entries: List[Tuple[Tuple[float, int], Action]] = []
+        for uid, action in sub.items():
+            self._uid_task.pop(uid, None)
+            entries.append((self._key.pop(uid), action))
+        self._stale += len(entries)
+        if self._stale > max(16, len(self._order) // 2):
+            self._compact()
+        return TaskShard(
+            task_id=task_id,
+            entries=entries,
+            finish_tag=self._task_finish.pop(task_id, 0.0),
+            vtime=self._vtime,
+        )
+
+    def merge_shard(self, shard: "TaskShard") -> None:
+        """Re-adopt a detached sub-queue (possibly into a *different*
+        partition replica).  Tags are self-contained, so entries merge
+        with their original keys; only the virtual clock needs syncing —
+        monotone max, so neither side's clock moves backward — and the
+        task's finish chain resumes from the later of the two tags."""
+        self.sync_vtime(shard.vtime)
+        sub = self._subs.setdefault(shard.task_id, OrderedDict())
+        for key, action in shard.entries:
+            if action.uid in self._uid_task:
+                continue  # already re-queued locally; never double-admit
+            sub[action.uid] = action
+            self._uid_task[action.uid] = shard.task_id
+            self._key[action.uid] = key
+            # restoring the key re-validates a tombstone left by detach
+            # in THIS queue — only insert when no entry already sits at
+            # (key, action), or ordered() would yield the action twice
+            if self._resurrect(key, action):
+                self._stale = max(0, self._stale - 1)
+            else:
+                insort(self._order, (key, action), key=lambda e: e[0])
+            self._seq = max(self._seq, key[1])
+        self._task_finish[shard.task_id] = max(
+            self._task_finish.get(shard.task_id, 0.0), shard.finish_tag
+        )
 
     # ------------------------------------------------------------------
     def ordered(self) -> List[Action]:
@@ -256,6 +354,17 @@ class PartitionQueue:
             if times:
                 out[t] = min(times)
         return out
+
+    def _resurrect(self, key: Tuple[float, int], action: Action) -> bool:
+        """True iff ``_order`` already holds the exact (key, action)
+        entry — a tombstone this queue's own detach left behind, now
+        valid again because the key was restored."""
+        i = bisect_left(self._order, key, key=lambda e: e[0])
+        while i < len(self._order) and self._order[i][0] == key:
+            if self._order[i][1] is action:
+                return True
+            i += 1
+        return False
 
     # bisect helper exposed for tests: rank of a hypothetical key
     def _rank(self, key: Tuple[float, int]) -> int:

@@ -18,6 +18,7 @@ scheduling algorithm".  The scheduler only ever calls:
 
 from __future__ import annotations
 
+import copy
 from dataclasses import dataclass, field
 from typing import Dict, Hashable, List, Optional, Sequence
 
@@ -143,6 +144,16 @@ class ResourceManager:
         consumption (quota tokens) or cleanup costs may override."""
         self.release(action, allocation)
 
+    def release_unlaunched(self, action: Action, allocation: Allocation) -> None:
+        """Release an allocation whose action NEVER started: the rollback
+        of a partial multi-resource acquisition (one manager in the
+        vector refused) or of a commit-phase conflict in the sharded
+        round engine.  Distinct from :meth:`release_on_failure` because
+        the work was never attempted — managers with consumable state
+        (quota tokens) must refund it here, where a mid-execution
+        failure legitimately consumed it."""
+        self.release(action, allocation)
+
     # ------------------------------------------------------------------
     # multi-tenant share accounting (fed by the orchestrator's launch /
     # release choke points; read by the fairness-aware scheduler)
@@ -164,6 +175,49 @@ class ResourceManager:
         release semantics (quota managers consume tokens on release, but
         the task is still no longer occupying them)."""
         return self._task_use
+
+    def held_units(self) -> int:
+        """Total units currently occupied by running actions.  Must equal
+        ``sum(task_usage().values())`` at every event boundary — the
+        occupancy invariant :meth:`check_occupancy` asserts.  Subclasses
+        whose ``available`` is not ``capacity - held`` (quota managers:
+        availability is tokens, not free slots) must override."""
+        return self._in_use
+
+    def check_occupancy(self) -> None:
+        """Assert the multi-tenant occupancy invariant: the per-task
+        usage ledger (fed by the orchestrator's launch/release choke
+        points) sums exactly to the units the manager itself says are
+        held.  A violation means some release path skipped
+        ``note_released`` (or double-noted) — the leak that permanently
+        inflates quota charging for the leaked task."""
+        noted = sum(self._task_use.values())
+        held = self.held_units()
+        assert noted == held, (
+            f"{self.rtype}: occupancy leak — task_usage sums to {noted} "
+            f"but {held} unit(s) are held ({dict(self._task_use)})"
+        )
+
+    # ------------------------------------------------------------------
+    # plan-phase snapshots (sharded scheduling rounds)
+    # ------------------------------------------------------------------
+    def snapshot(self) -> "ResourceManager":
+        """Cheap copy-on-snapshot free-state view for shard planning.
+
+        The returned object supports the full *read/plan* surface the
+        scheduling policy touches — ``available``/``capacity``,
+        ``begin_admission``/``admit_one``, ``dp_operator``/
+        ``dp_cache_key``, ``partition``, ``task_usage``, ``min_units`` —
+        without any locking against the live manager: mutations a plan
+        makes (admission cursors, the CPU manager's trajectory binding)
+        land on the snapshot and are discarded.  Placement
+        (``try_allocate``/``release``/``note_*``) must NEVER be called
+        on a snapshot; it belongs to the single-threaded commit phase
+        against the live manager.  Subclasses with deeper mutable state
+        (nodes, chunk allocators, token buckets) extend this."""
+        clone = copy.copy(self)
+        clone._task_use = dict(self._task_use)
+        return clone
 
     # ------------------------------------------------------------------
     # lifetime hooks

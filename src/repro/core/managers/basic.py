@@ -67,12 +67,32 @@ class BasicResourceManager(ResourceManager):
             if units > self._tokens:
                 return None
             self._tokens -= units
+            # occupancy is tracked separately from tokens: the occupancy
+            # invariant (task_usage sums to held units) must hold even
+            # though availability is the token count, not free slots
+            self._in_use += units
             return Allocation(self.rtype, units, detail={"mode": "quota"})
         return super().try_allocate(action, units)
 
     def release(self, action: Action, allocation: Allocation) -> None:
         if self.mode == "quota":
-            return  # tokens are consumed, not returned — refill restores them
+            # tokens are consumed, not returned — refill restores them —
+            # but the units are no longer *occupied* by a running action
+            self._in_use -= allocation.units
+            assert self._in_use >= 0, f"{self.rtype}: negative occupancy"
+            return
+        super().release(action, allocation)
+
+    def release_unlaunched(self, action: Action, allocation: Allocation) -> None:
+        """Rollback of an acquisition whose action never started (partial
+        multi-resource failure, sharded commit conflict): the API call
+        was never made, so the tokens are REFUNDED — the plain release
+        path would silently burn quota for work that never ran."""
+        if self.mode == "quota":
+            self._in_use -= allocation.units
+            assert self._in_use >= 0, f"{self.rtype}: negative occupancy"
+            self._tokens = min(self.spec.quota, self._tokens + allocation.units)
+            return
         super().release(action, allocation)
 
     def time_to_next_refill(self) -> float:

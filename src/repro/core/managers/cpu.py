@@ -17,6 +17,7 @@ node (container residency), so the manager schedules **per node**.
 
 from __future__ import annotations
 
+import copy
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
@@ -75,6 +76,14 @@ class _NodeState:
         for c in cores:
             self.free_cores[c // per].add(c)
 
+    def clone(self) -> "_NodeState":
+        """Free-state copy for plan-phase snapshots (spec is shared —
+        it is a frozen dataclass)."""
+        c = copy.copy(self)
+        c.free_cores = [set(s) for s in self.free_cores]
+        c.trajectories = dict(self.trajectories)
+        return c
+
 
 class CpuManager(ResourceManager):
     rtype_mem = "cpu_mem"
@@ -91,6 +100,21 @@ class CpuManager(ResourceManager):
 
     def node_of(self, trajectory_id: str) -> Optional[str]:
         return self._binding.get(trajectory_id)
+
+    def held_units(self) -> int:
+        return self.capacity - self.available
+
+    def snapshot(self) -> "CpuManager":
+        """Plan-phase view: per-node free cores/memory, trajectory
+        bindings, and the share ledger are copied, so ``partition()``'s
+        trajectory binding during a shard's arrange mutates only the
+        snapshot — the live binding happens at commit via
+        ``try_allocate``."""
+        clone = copy.copy(self)
+        clone._task_use = dict(self._task_use)
+        clone._binding = dict(self._binding)
+        clone.nodes = {name: st.clone() for name, st in self.nodes.items()}
+        return clone
 
     # ------------------------------------------------------------------
     # trajectory lifetime: bind node + pin memory (Breakdown keeps state)

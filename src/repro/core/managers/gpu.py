@@ -25,6 +25,7 @@ a "node" is a v5e tray and chunks are ICI-contiguous slices.
 
 from __future__ import annotations
 
+import copy
 import math
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Set, Tuple
@@ -207,6 +208,14 @@ class ChunkAllocator:
             svc, _ = self.cache[key]
             self.cache[key] = (svc, now)
 
+    def clone(self) -> "ChunkAllocator":
+        """Free-state copy for plan-phase snapshots."""
+        c = copy.copy(self)
+        c.free = {lvl: set(s) for lvl, s in self.free.items()}
+        c.busy = set(self.busy)
+        c.cache = dict(self.cache)
+        return c
+
     # -- invariants (property-tested) -----------------------------------
     def check_invariants(self) -> None:
         covered: Set[int] = set()
@@ -247,6 +256,35 @@ class GpuManager(ResourceManager):
     @property
     def available(self) -> int:
         return sum(a.free_capacity for a in self.allocators.values())
+
+    def held_units(self) -> int:
+        return self.capacity - self.available
+
+    def check_occupancy(self) -> None:
+        """Chunk-granular variant of the occupancy invariant: a busy
+        chunk rounds an allocation up to a power of two, so held devices
+        may exceed the noted units — but never the reverse (noted units
+        outliving their chunks is exactly the note_released leak), and
+        the ledger must empty when the last chunk frees."""
+        noted = sum(self._task_use.values())
+        held = self.held_units()
+        assert noted <= held, (
+            f"{self.rtype}: occupancy leak — task_usage sums to {noted} "
+            f"but only {held} device(s) are held ({dict(self._task_use)})"
+        )
+        assert (noted == 0) == (held == 0), (
+            f"{self.rtype}: occupancy leak — noted {noted} vs held {held}"
+        )
+
+    def snapshot(self) -> "GpuManager":
+        """Plan-phase view: chunk allocators (free/busy/cache tags) and
+        the share ledger are copied; specs/services are shared
+        (immutable).  ``stats`` stays shared — planning never calls
+        ``try_allocate``, the only mutator of it."""
+        clone = copy.copy(self)
+        clone._task_use = dict(self._task_use)
+        clone.allocators = {n: a.clone() for n, a in self.allocators.items()}
+        return clone
 
     # ------------------------------------------------------------------
     def begin_admission(self) -> object:

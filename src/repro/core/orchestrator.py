@@ -46,6 +46,14 @@ Set ``incremental=False`` to force full rescheduling every round (every
 partition dirty, no DP memo, the policy's own window scan) — the
 equivalence tests run both modes over identical workloads and assert
 identical launch traces.
+
+``shards=N`` turns the round loop into the **plan/commit engine**
+(:mod:`repro.core.shards`): dirty partitions are planned concurrently
+over manager free-state snapshots and committed serially against live
+state, with conflicts re-dirtied onto the ordinary retry rail.
+``shards=None`` (default) keeps the serial loop bit-identical to the
+pre-shard code; on conflict-free workloads the two produce identical
+launch traces (tests/test_shards.py).
 """
 
 from __future__ import annotations
@@ -53,7 +61,7 @@ from __future__ import annotations
 import math
 import time
 from functools import partial
-from typing import Dict, Iterable, List, Optional, Protocol, Sequence, Set, Tuple
+from typing import Dict, Iterable, List, Mapping, Optional, Protocol, Sequence, Set, Tuple
 
 from repro.core.action import (
     TERMINAL_STATES,
@@ -69,6 +77,7 @@ from repro.core.scheduler import (
     ScheduleResult,
     candidate_window,
 )
+from repro.core.shards import PartitionPlan, RoundExecutor
 from repro.core.simulator import EventLoop, Future
 from repro.core.telemetry import ActionRecord, Telemetry
 
@@ -137,6 +146,8 @@ class Orchestrator:
         charge_real_sched_latency: bool = False,
         incremental: bool = True,
         fair_share: Optional[FairSharePolicy] = None,
+        shards: Optional[int] = None,
+        plan_mode: str = "inline",
     ) -> None:
         self.loop = loop or EventLoop()
         self.history = DurationHistory()
@@ -175,6 +186,16 @@ class Orchestrator:
         self._round_scheduled = False
         self._refill_wake_at = math.inf
         self._stall_retries = 0  # consecutive no-event retry ticks
+        # Sharded plan/commit rounds (None = the serial loop, bit-
+        # identical to the pre-shard engine).  shards=1 still exercises
+        # the snapshot plan/commit machinery — the equivalence tests'
+        # control arm.  plan_mode: "inline" (exact critical-path
+        # accounting) or "threads" (in-process pool) — plans are
+        # identical either way.
+        self.shards = shards
+        self._executor = (
+            RoundExecutor(self, shards, plan_mode) if shards is not None else None
+        )
         self.stats: Dict[str, int] = {
             "rounds": 0,
             "partition_runs": 0,
@@ -182,6 +203,7 @@ class Orchestrator:
             "events_coalesced": 0,
             "launch_failures": 0,
             "quota_deferrals": 0,
+            "sharded_rounds": 0,
         }
 
     # ------------------------------------------------------------------
@@ -346,31 +368,82 @@ class Orchestrator:
         self.stats["rounds"] += 1
         self.telemetry.sched_invocations += 1
 
-        t0 = time.perf_counter()
+        if self._executor is not None:
+            any_failed = self._sharded_fixpoint()
+        else:
+            t0 = time.perf_counter()
+            any_failed = False
+            # fixpoint: launching may re-expose an admissible head (the
+            # classification in _commit_partition re-dirties such
+            # partitions); every extra pass strictly consumes resources,
+            # so this terminates within the round's virtual instant.
+            while True:
+                keys = sorted(k for k in self._dirty if self._queues.get(k))
+                self._dirty.clear()
+                if not keys:
+                    break
+                for key in keys:
+                    any_failed |= self._run_partition(key)
+            self.telemetry.sched_wall_s += time.perf_counter() - t0
+
+        self._post_round(any_failed)
+
+    def _sharded_fixpoint(self) -> bool:
+        """The plan/commit round loop (shards=N): plan all dirty
+        partitions in parallel over free-state snapshots, then commit
+        serially in the same sorted order the serial loop walks.  A
+        commit whose allocation no longer fits live state rolls back
+        (``release_unlaunched``) and leaves its partition watched — the
+        same rail ordinary ``try_allocate`` refusals ride — so the next
+        round replans it against fresh state.
+
+        Decision latency charged per plan/commit pass is the critical
+        path ``max(per-shard plan CPU) + commit wall`` — what a fleet of
+        per-shard workers pays; the real in-process plan wall clock is
+        recorded separately (``Telemetry.plan_wall_s``)."""
         any_failed = False
-        # fixpoint: launching may re-expose an admissible head (the
-        # classification in _run_partition re-dirties such partitions);
-        # every extra pass strictly consumes resources, so this
-        # terminates within the round's virtual instant.
         while True:
             keys = sorted(k for k in self._dirty if self._queues.get(k))
             self._dirty.clear()
             if not keys:
-                break
-            for key in keys:
-                any_failed |= self._run_partition(key)
-        self.telemetry.sched_wall_s += time.perf_counter() - t0
-
-        self._post_round(any_failed)
+                return any_failed
+            if len(keys) == 1:
+                # one dirty partition has no parallelism to exploit: the
+                # serial runner (live-state planning, no snapshot cost)
+                # is cheaper and trivially plan/commit-equivalent
+                t0 = time.perf_counter()
+                any_failed |= self._run_partition(keys[0])
+                self.telemetry.sched_wall_s += time.perf_counter() - t0
+                continue
+            self.stats["sharded_rounds"] += 1
+            plans, critical = self._executor.plan_round(keys)
+            t0 = time.perf_counter()
+            conflicts = 0
+            for plan in plans:
+                conflicts += self._commit_partition(plan)
+            if conflicts:
+                any_failed = True
+                self.telemetry.commit_conflicts += conflicts
+            self.telemetry.sched_wall_s += critical + (time.perf_counter() - t0)
 
     def _run_partition(self, part: str) -> bool:
-        """One policy pass over a partition; returns True if any launch
-        failed (decision made but allocation refused)."""
+        """One serial policy pass over a partition (plan against LIVE
+        managers, commit immediately); returns True if any launch failed
+        (decision made but allocation refused)."""
+        return self._commit_partition(self._plan_partition(part, self.managers)) > 0
+
+    def _plan_partition(
+        self, part: str, managers: Mapping[str, ResourceManager], shard: int = 0
+    ) -> PartitionPlan:
+        """Arrange one partition against ``managers`` (live for the
+        serial loop, free-state snapshots for a shard) WITHOUT touching
+        shared orchestrator state — safe to run from a plan thread.  The
+        only writes it performs land on the given managers (the CPU
+        manager's trajectory binding), per-action metadata owned by this
+        partition, and the policy's lock-guarded caches."""
         queue = self._queues.get(part)
         if not queue:
-            self._watch.discard(part)
-            return False
-        self.stats["partition_runs"] += 1
+            return PartitionPlan(part, planned=False, shard=shard)
         # WFQ service order: FCFS within a task, min-virtual-start-tag
         # across tasks — so the candidate window below is drawn
         # round-robin-by-virtual-time across tasks.  With fair_share=None
@@ -378,32 +451,47 @@ class Orchestrator:
         waiting = queue.ordered()
         held = 0
         if self.fair_share is not None and self.fair_share.quota:
-            waiting, held = self._apply_quota(part, waiting)
-            self.stats["quota_deferrals"] += held
+            waiting, held = self._apply_quota(part, waiting, managers)
             if not waiting:
-                self._watch.discard(part)
-                if held:
-                    self._watch.add(part)
-                return False
+                return PartitionPlan(part, result=None, held=held, shard=shard)
         executing = list(self._executing.values())
 
         t0 = time.perf_counter()
         if self.incremental:
             limit = getattr(self.policy, "candidate_limit", 128)
-            candidates = candidate_window(waiting, self.managers, limit)
+            candidates = candidate_window(waiting, managers, limit)
             result = self.policy.arrange(
-                candidates, waiting[len(candidates) :], executing, self.managers, self.now
+                candidates, waiting[len(candidates) :], executing, managers, self.now
             )
         else:
-            candidates = None
-            result = self.policy.schedule(waiting, executing, self.managers, self.now)
+            result = self.policy.schedule(waiting, executing, managers, self.now)
         wall = time.perf_counter() - t0
-        overhead = wall if self.charge_real_sched_latency else SCHED_TICK_S
+        return PartitionPlan(part, result=result, held=held, wall_s=wall, shard=shard)
 
-        any_failed = False
-        for decision in result.decisions:
-            if not self._launch(decision, overhead):
-                any_failed = True
+    def _commit_partition(self, plan: PartitionPlan) -> int:
+        """Validate-and-launch one partition's intents against LIVE
+        manager state (single-threaded), then classify the partition;
+        returns the number of refused launches (decisions made but
+        allocation refused)."""
+        part = plan.part
+        queue = self._queues.get(part)
+        if not plan.planned or not queue:
+            self._watch.discard(part)
+            return 0
+        self.stats["partition_runs"] += 1
+        self.stats["quota_deferrals"] += plan.held
+        if plan.result is None:
+            # the quota gate held the entire window
+            self._watch.discard(part)
+            if plan.held:
+                self._watch.add(part)
+            return 0
+        overhead = plan.wall_s if self.charge_real_sched_latency else SCHED_TICK_S
+        quota_pending = self._quota_reservations(plan.result.decisions)
+        failed = 0
+        for decision in plan.result.decisions:
+            if not self._launch(decision, overhead, quota_pending):
+                failed += 1
         # cleanliness: a partition may only go clean in states that are
         # no-ops until the next event.  Deliberate deferrals (eviction,
         # quota holds) and refused allocations are time/state-dependent —
@@ -414,22 +502,24 @@ class Orchestrator:
         # are covered by the refill wake), else it re-enters the dirty
         # set so this round's fixpoint loop reschedules it.
         self._watch.discard(part)
-        if queue and (result.evicted or any_failed or held):
+        if queue and (plan.result.evicted or failed or plan.held):
             self._watch.add(part)
         elif queue:
             head = queue.head()
             if head is not None and candidate_window([head], self.managers, 1):
                 self._dirty.add(part)
-        return any_failed
+        return failed
 
     def _apply_quota(
-        self, part: str, waiting: List[Action]
+        self, part: str, waiting: List[Action], managers: Mapping[str, ResourceManager]
     ) -> Tuple[List[Action], int]:
         """Hard share caps: withhold from this round's window the actions
         of tasks at/above their quota fraction of the partition
         manager's capacity.  Held actions stay queued (the partition
-        stays watched); a completion releasing units re-dirties it."""
-        manager = self.managers.get(part)
+        stays watched); a completion releasing units re-dirties it.
+        ``managers`` is the planning view — live for the serial loop, a
+        shard's snapshots otherwise."""
+        manager = managers.get(part)
         fs = self.fair_share
         if manager is None or fs is None or manager.capacity <= 0:
             return waiting, 0
@@ -464,11 +554,46 @@ class Orchestrator:
                 held += 1
         return eligible, held
 
-    def _quota_clamp(self, action: Action, rtype: str, units: int) -> int:
+    def _quota_reservations(
+        self, decisions: Sequence[Decision]
+    ) -> Optional[Dict[Tuple[str, str], int]]:
+        """Min-unit budget reservations per (quota'd task, rtype) over a
+        commit batch.  Admission (:meth:`_apply_quota`) guaranteed every
+        admitted action its *min* units within the task's budget; an
+        elastic grant scaled beyond min must therefore be clamped
+        against the budget MINUS the min-unit reservations of the
+        batch's not-yet-launched sibling actions — otherwise the first
+        scalable launch eats the whole budget and the siblings' min-unit
+        progress rail pushes the task past its cap mid-flight (the
+        ROADMAP's "exact quota for scalable scale-up" item)."""
+        fs = self.fair_share
+        if fs is None or not fs.quota:
+            return None
+        pending: Dict[Tuple[str, str], int] = {}
+        for d in decisions:
+            if math.isinf(fs.quota_of(d.action.task_id)):
+                continue
+            for rtype in d.units:
+                req = d.action.cost.get(rtype)
+                if req is None or rtype not in self.managers:
+                    continue
+                key = (d.action.task_id, rtype)
+                pending[key] = pending.get(key, 0) + req.min_units
+        return pending or None
+
+    def _quota_clamp(
+        self,
+        action: Action,
+        rtype: str,
+        units: int,
+        pending: Optional[Dict[Tuple[str, str], int]] = None,
+    ) -> int:
         """Cap an elastic grant against the task's remaining quota budget
         on ``rtype``: snap down to the largest feasible unit count within
-        the budget, but never below min units (the progress rail —
-        admission already decided this action may run)."""
+        the budget — net of the min-unit reservations still ``pending``
+        for the task's other actions in this commit batch — but never
+        below min units (the progress rail — admission already decided
+        this action may run)."""
         fs = self.fair_share
         if fs is None:
             return units
@@ -480,6 +605,8 @@ class Orchestrator:
         if manager is None or req is None or units <= req.min_units:
             return units
         allowed = q * manager.capacity - manager.task_usage().get(action.task_id, 0)
+        if pending:
+            allowed -= pending.get((action.task_id, rtype), 0)
         if units <= allowed:
             return units
         return max(
@@ -529,14 +656,30 @@ class Orchestrator:
     # ------------------------------------------------------------------
     # execution
     # ------------------------------------------------------------------
-    def _launch(self, decision: Decision, sched_overhead: float) -> bool:
+    def _launch(
+        self,
+        decision: Decision,
+        sched_overhead: float,
+        quota_pending: Optional[Dict[Tuple[str, str], int]] = None,
+    ) -> bool:
         action = decision.action
+        if quota_pending is not None:
+            # this action's own min-unit reservation no longer binds its
+            # siblings' clamp once it reaches the front of the batch —
+            # released BEFORE the withdrawn-action early-out below, or a
+            # withdrawn sibling's reservation would over-clamp the rest
+            # of the batch against budget nobody is going to use
+            for rtype in decision.units:
+                key = (action.task_id, rtype)
+                req = action.cost.get(rtype)
+                if req is not None and key in quota_pending:
+                    quota_pending[key] = max(0, quota_pending[key] - req.min_units)
         if action.state is not ActionState.QUEUED:
             return False  # withdrawn between arrange and launch
         # elastic grants are capped against the task's quota budget up
         # front so the charged duration matches the actual allocation
         units = {
-            rtype: self._quota_clamp(action, rtype, u)
+            rtype: self._quota_clamp(action, rtype, u, quota_pending)
             for rtype, u in decision.units.items()
         }
         allocs: List[Allocation] = []
@@ -546,8 +689,12 @@ class Orchestrator:
                 continue
             alloc = manager.try_allocate(action, units[rtype])
             if alloc is None:
-                for a in allocs:  # rollback partial acquisition
-                    self.managers[a.rtype].release(action, a)
+                # rollback a partial acquisition (or a sharded commit
+                # whose plan no longer fits live state): the action
+                # never started, so consumable state (quota tokens) is
+                # refunded — distinct from a mid-execution failure
+                for a in allocs:
+                    self.managers[a.rtype].release_unlaunched(action, a)
                 return False
             allocs.append(alloc)
 

@@ -36,6 +36,7 @@ from __future__ import annotations
 import heapq
 import itertools
 import math
+import threading
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Dict, Hashable, List, Optional, Sequence, Tuple
@@ -131,6 +132,13 @@ class ElasticScheduler:
         self._dp_cache: "OrderedDict[Hashable, List[Optional[DPResult]]]" = OrderedDict()
         self.dp_cache_hits = 0
         self.dp_cache_misses = 0
+        # Sharded rounds run arrange() concurrently from a thread pool;
+        # the two LRU caches below are the only cross-partition mutable
+        # state the policy touches during planning, so they are guarded
+        # by one small lock (never held across a DP compute — concurrent
+        # misses on the same key recompute deterministically and the
+        # last write wins).
+        self._cache_lock = threading.Lock()
         # Dense DPArrange (PR 2): run the DP as vectorized array sweeps
         # over precomputed operator transition tables instead of the
         # dict-of-dicts reference.  Tables are pure functions of the
@@ -545,16 +553,18 @@ class ElasticScheduler:
             return compute()
         # weights scale the memoized objectives, so they are part of the key
         key = (mkey, tuple(tasks), weights)
-        hit = self._dp_cache.get(key)
-        if hit is not None:
-            self.dp_cache_hits += 1
-            self._dp_cache.move_to_end(key)
-            return hit
-        self.dp_cache_misses += 1
+        with self._cache_lock:
+            hit = self._dp_cache.get(key)
+            if hit is not None:
+                self.dp_cache_hits += 1
+                self._dp_cache.move_to_end(key)
+                return hit
+            self.dp_cache_misses += 1
         prefixes = compute()
-        self._dp_cache[key] = prefixes
-        if len(self._dp_cache) > self.dp_cache_max:
-            self._dp_cache.popitem(last=False)
+        with self._cache_lock:
+            self._dp_cache[key] = prefixes
+            if len(self._dp_cache) > self.dp_cache_max:
+                self._dp_cache.popitem(last=False)
         return prefixes
 
     # ------------------------------------------------------------------
@@ -579,15 +589,17 @@ class ElasticScheduler:
         if mkey is None:
             return operator.transition_table(ks)
         key = (mkey, ks)
-        if key in self._table_cache:
-            self.table_cache_hits += 1
-            self._table_cache.move_to_end(key)
-            return self._table_cache[key]
-        self.table_cache_misses += 1
+        with self._cache_lock:
+            if key in self._table_cache:
+                self.table_cache_hits += 1
+                self._table_cache.move_to_end(key)
+                return self._table_cache[key]
+            self.table_cache_misses += 1
         table = operator.transition_table(ks)
-        self._table_cache[key] = table
-        if len(self._table_cache) > self.table_cache_max:
-            self._table_cache.popitem(last=False)
+        with self._cache_lock:
+            self._table_cache[key] = table
+            if len(self._table_cache) > self.table_cache_max:
+                self._table_cache.popitem(last=False)
         return table
 
     # ------------------------------------------------------------------

@@ -1,0 +1,230 @@
+"""Sharded scheduling rounds: parallel per-partition planning, serialized
+validated commit (the ROADMAP's async-rounds item, step one).
+
+The serial round loop re-arranges every dirty partition in one thread,
+mutating manager state as it walks — decision latency grows linearly
+with the number of dirty partitions, which is the control-plane scale
+wall once the external fleet (and therefore the partition count) grows.
+This module converts the round's core invariant from "a round mutates
+managers as it walks partitions" into **plan-then-commit**:
+
+* the dirty set is split into **shards** — each shard owns *whole*
+  partitions (and with it, whole per-task WFQ sub-queues: a
+  :class:`~repro.core.fairqueue.PartitionQueue` never straddles
+  shards), assigned by deterministic striping over the sorted keys;
+* each shard snapshots the managers' free state
+  (:meth:`ResourceManager.snapshot`) and runs ``policy.arrange`` for
+  its partitions concurrently on a thread pool, producing
+  **launch intents** (:class:`PartitionPlan`) without touching live
+  state;
+* a single-threaded **commit phase** replays the intents in global
+  sorted partition order against *live* managers.  A plan that no
+  longer fits (another shard's commit took the capacity, a trajectory
+  bound elsewhere) fails ``try_allocate``, rolls back through
+  ``release_unlaunched``, and re-dirties its partition — exactly the
+  retry rail ordinary ``try_allocate`` refusals already ride — so
+  conflicts cost one extra round, never a lost or double-launched
+  action.
+
+Snapshot contract — what a shard may read while planning:
+
+* the **manager snapshots** handed to it: ``available``/``capacity``,
+  ``begin_admission``/``admit_one``, ``dp_operator``/``dp_cache_key``,
+  ``partition`` (the CPU manager's trajectory binding mutates only the
+  snapshot), ``task_usage``, ``min_units``.
+* **off-snapshot (live) state that is frozen during a round's plan
+  phase** and therefore safe to read: the partition queues it owns
+  (``ordered()``/``head()``), the orchestrator's executing map, policy
+  configuration, and the virtual clock — no event callback runs while
+  plans are outstanding.
+* **never off-snapshot**: ``try_allocate``/``release*``/``note_*`` and
+  any manager internals behind the snapshot (free cores, chunk
+  allocators, token buckets).  Placement is commit-phase only, against
+  live managers, on the orchestrator thread.
+
+Decision-latency accounting: the round is charged
+``max(per-shard plan cost) + commit wall`` — the **critical path** a
+fleet of per-shard workers (the multi-process managers this engine is
+the prerequisite for) would pay.  Two plan modes measure it:
+
+* ``plan_mode="inline"`` (default): shards are planned back-to-back on
+  the orchestrator thread, each timed with ``perf_counter`` free of any
+  interference — exact per-shard costs, no pool dispatch overhead.
+  This is the DES benchmarking mode: plans are deterministic and
+  identical in every mode, so only the latency *accounting* needs the
+  critical-path model.
+* ``plan_mode="threads"``: shards are dispatched to a process-wide
+  thread pool — real in-process concurrency for deployments where plan
+  cost lives in GIL-releasing code (the dense-DP NumPy sweeps, large
+  state spaces).  Per-shard timings then include GIL waits, so the
+  charged critical path is conservative (an upper bound).
+
+The real plan-phase wall clock is always recorded in
+``Telemetry.plan_wall_s`` alongside the modeled critical path
+(``Telemetry.plan_critical_s``), so the two are never conflated.
+
+``shards=None`` on the :class:`~repro.core.orchestrator.Orchestrator`
+keeps the serial loop bit-identical; ``shards=N`` must produce identical
+launch traces on conflict-free workloads (partitions whose actions touch
+disjoint resource types — the equivalence suites), proven by
+``tests/test_shards.py`` and gated in CI by the shard-smoke benchmark.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.scheduler import ScheduleResult
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard (typing only)
+    from repro.core.orchestrator import Orchestrator
+
+
+@dataclass
+class PartitionPlan:
+    """One partition's launch intents, planned off-snapshot.
+
+    ``result is None`` with ``planned=True`` means the quota gate held
+    the whole window (``held`` actions stay queued, partition stays
+    watched); ``planned=False`` means the queue was already empty at
+    plan time (nothing to commit beyond watch-list cleanup)."""
+
+    part: str
+    result: Optional[ScheduleResult] = None
+    held: int = 0
+    wall_s: float = 0.0  # this partition's arrange wall time
+    shard: int = 0
+    planned: bool = True
+
+
+class SnapshotMap:
+    """Lazy manager-snapshot view handed to a shard's plan pass.
+
+    Looks like the orchestrator's ``managers`` mapping, but the first
+    access to an rtype snapshots that manager — a shard owning two of
+    sixteen pools copies two free states, not sixteen.  Read-only from
+    the caller's perspective (the snapshots themselves absorb the plan's
+    mutations, e.g. CPU trajectory binding)."""
+
+    __slots__ = ("_live", "_snaps")
+
+    def __init__(self, managers: Dict[str, object]) -> None:
+        self._live = managers
+        self._snaps: Dict[str, object] = {}
+
+    def __getitem__(self, rtype: str):
+        snap = self._snaps.get(rtype)
+        if snap is None:
+            snap = self._snaps[rtype] = self._live[rtype].snapshot()
+        return snap
+
+    def get(self, rtype: str, default=None):
+        if rtype not in self._live:
+            return default
+        return self[rtype]
+
+    def __contains__(self, rtype: str) -> bool:
+        return rtype in self._live
+
+    def __len__(self) -> int:
+        return len(self._live)
+
+    def keys(self):
+        return self._live.keys()
+
+
+# Process-wide plan pools, shared across orchestrators (tests build
+# dozens; per-instance pools would leak idle threads).  Keyed by size;
+# workers are daemonic-by-default executor threads that die with the
+# process.
+_POOLS: Dict[int, ThreadPoolExecutor] = {}
+_POOLS_LOCK = threading.Lock()
+
+
+def _pool(workers: int) -> ThreadPoolExecutor:
+    with _POOLS_LOCK:
+        pool = _POOLS.get(workers)
+        if pool is None:
+            pool = _POOLS[workers] = ThreadPoolExecutor(
+                max_workers=workers, thread_name_prefix=f"shard-plan-{workers}"
+            )
+        return pool
+
+
+class RoundExecutor:
+    """Plans a round's dirty partitions across ``shards`` workers and
+    hands the orchestrator an ordered commit list."""
+
+    def __init__(
+        self, orch: "Orchestrator", shards: int, plan_mode: str = "inline"
+    ) -> None:
+        if shards < 1:
+            raise ValueError(f"shards must be >= 1, got {shards}")
+        if plan_mode not in ("inline", "threads"):
+            raise ValueError(f"unknown plan_mode {plan_mode!r}")
+        self.orch = orch
+        self.shards = int(shards)
+        self.plan_mode = plan_mode
+
+    # ------------------------------------------------------------------
+    def assign(self, keys: Sequence[str]) -> List[List[str]]:
+        """Deterministic shard ownership: stripe the sorted partition
+        keys round-robin.  Whole partitions only — and therefore whole
+        WFQ sub-queues, since a PartitionQueue's per-task sub-queues
+        never leave their partition."""
+        ordered = sorted(keys)
+        n = max(1, min(self.shards, len(ordered)))
+        return [ordered[i::n] for i in range(n)]
+
+    # ------------------------------------------------------------------
+    def plan_round(self, keys: Sequence[str]) -> Tuple[List[PartitionPlan], float]:
+        """Plan every partition in ``keys``; returns the plans in global
+        sorted partition order (the commit order — identical to the
+        serial loop's walk) plus the round's critical-path plan cost:
+        the maximum per-shard plan time."""
+        groups = self.assign(keys)
+        telemetry = self.orch.telemetry
+        t_wall = time.perf_counter()
+        if len(groups) == 1 or self.plan_mode == "inline":
+            results = [self._plan_shard(i, g) for i, g in enumerate(groups)]
+        else:
+            pool = _pool(self.shards)
+            futs = [
+                pool.submit(self._plan_shard, i, group)
+                for i, group in enumerate(groups)
+            ]
+            results = [f.result() for f in futs]
+        telemetry.plan_wall_s += time.perf_counter() - t_wall
+
+        plans: List[PartitionPlan] = []
+        critical = 0.0
+        for shard_idx, (shard_plans, plan_s) in enumerate(results):
+            critical = max(critical, plan_s)
+            telemetry.note_shard_round(shard_idx, len(shard_plans), plan_s)
+            plans.extend(shard_plans)
+        telemetry.plan_critical_s += critical
+        plans.sort(key=lambda p: p.part)
+        return plans, critical
+
+    # ------------------------------------------------------------------
+    def _plan_shard(
+        self, shard_idx: int, keys: Sequence[str]
+    ) -> Tuple[List[PartitionPlan], float]:
+        """One shard's work unit: snapshot the managers' free state once,
+        then arrange each owned partition against the snapshots.  May
+        run on a pool thread; must only touch snapshot state and this
+        shard's own partitions (see the module docstring's contract).
+        The returned cost is this shard's plan wall time — exact in
+        ``inline`` mode (nothing else runs), an upper bound (includes
+        GIL waits) in ``threads`` mode."""
+        t0 = time.perf_counter()
+        snapshots = SnapshotMap(self.orch.managers)
+        plans = [
+            self.orch._plan_partition(part, snapshots, shard=shard_idx)
+            for part in keys
+        ]
+        return plans, time.perf_counter() - t0

@@ -47,6 +47,7 @@ class Tangram(Orchestrator):
         charge_real_sched_latency: bool = False,
         incremental: bool = True,
         fair_share: Optional[FairSharePolicy] = None,
+        shards: Optional[int] = None,
     ) -> None:
         super().__init__(
             managers,
@@ -55,6 +56,7 @@ class Tangram(Orchestrator):
             charge_real_sched_latency=charge_real_sched_latency,
             incremental=incremental,
             fair_share=fair_share,
+            shards=shards,
         )
 
     # historical name for the policy slot (pre-refactor callers assign a

@@ -35,6 +35,20 @@ class ActionRecord:
 
 
 @dataclass
+class ShardStats:
+    """Per-shard plan-phase accounting for the sharded round engine.
+
+    ``plan_s`` is the shard's own plan time — the cost a dedicated
+    per-shard worker pays.  Exact when shards are planned inline
+    (nothing else runs while one is measured); an upper bound (includes
+    GIL waits) under the in-process thread pool."""
+
+    rounds: int = 0
+    partitions: int = 0
+    plan_s: float = 0.0
+
+
+@dataclass
 class Telemetry:
     records: List[ActionRecord] = field(default_factory=list)
     sched_invocations: int = 0
@@ -43,9 +57,40 @@ class Telemetry:
     timeouts: int = 0  # deadline expiries (each retry re-arms the deadline)
     retries: int = 0  # re-queues at the FCFS head after a timeout
     cancellations: int = 0
+    # -- sharded-round counters (RoundExecutor-maintained) ------------------
+    shards: Dict[int, ShardStats] = field(default_factory=dict)
+    plan_wall_s: float = 0.0  # real wall clock of parallel plan phases
+    plan_critical_s: float = 0.0  # sum of per-round max shard plan CPU
+    # planned launches refused by live state during a sharded (plan/
+    # commit) round's commit phase; refusals in serial-path rounds show
+    # up only in the orchestrator's launch_failures stat
+    commit_conflicts: int = 0
 
     def record(self, rec: ActionRecord) -> None:
         self.records.append(rec)
+
+    def note_shard_round(self, shard: int, partitions: int, plan_s: float) -> None:
+        st = self.shards.setdefault(shard, ShardStats())
+        st.rounds += 1
+        st.partitions += partitions
+        st.plan_s += plan_s
+
+    def shard_summary(self) -> Dict[str, float]:
+        """Aggregate shard balance: total/critical plan cost and the
+        imbalance ratio (max shard plan time over the mean — 1.0 is a
+        perfectly balanced fleet)."""
+        if not self.shards:
+            return {}
+        costs = [s.plan_s for s in self.shards.values()]
+        mean = statistics.fmean(costs)
+        return {
+            "shards": float(len(costs)),
+            "plan_total_s": sum(costs),
+            "plan_critical_s": self.plan_critical_s,
+            "plan_wall_s": self.plan_wall_s,
+            "imbalance": max(costs) / mean if mean > 0 else 1.0,
+            "commit_conflicts": float(self.commit_conflicts),
+        }
 
     # -- aggregates ---------------------------------------------------------
     def mean_act(self, task_id: Optional[str] = None) -> float:

@@ -56,14 +56,17 @@ def build_orchestrator(
     loop: Optional[EventLoop] = None,
     incremental: bool = True,
     fair_share: Optional[FairSharePolicy] = None,
+    shards: Optional[int] = None,
 ) -> Orchestrator:
     """One orchestrator, swappable policy (ElasticScheduler by default,
     or the FCFS/static baseline policies for ablations).  ``fair_share``
-    turns on multi-tenant weighted queueing across task_ids."""
+    turns on multi-tenant weighted queueing across task_ids; ``shards``
+    switches the round loop to the plan/commit engine (repro.core.shards)
+    with that many parallel planners."""
     managers, loop = build_managers(cluster, services, service_state_gb, loop)
     return Orchestrator(
         managers, loop=loop, policy=policy, incremental=incremental,
-        fair_share=fair_share,
+        fair_share=fair_share, shards=shards,
     )
 
 

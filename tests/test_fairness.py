@@ -122,6 +122,178 @@ class TestPartitionQueue:
 
 
 # ---------------------------------------------------------------------------
+# WFQ virtual-clock monotonicity across drain/refill (busy-period rule)
+# ---------------------------------------------------------------------------
+
+
+class TestDrainRefill:
+    def _drain_all_served(self, q):
+        while True:
+            head = q.head()
+            if head is None:
+                return
+            q.remove(head.uid, served=True)
+
+    def test_busy_period_end_settles_clock_at_max_finish(self):
+        """When the last sub-queue empties, V jumps to the largest finish
+        tag charged (monotone) and the finish chains reset."""
+        w = {"A": 1.0, "B": 1.0}
+        q = PartitionQueue(fair=True, weight_of=lambda a: w[a.task_id],
+                           cost_of=lambda a: 10.0)
+        for i in range(3):
+            q.push(_action("A", name=f"A{i}"))
+        self._drain_all_served(q)
+        # A was charged F=30; serving only advanced V to A2's START (20)
+        # — the busy-period rule must settle the remaining debt
+        assert q.vtime == pytest.approx(30.0)
+        assert q._task_finish == {}
+
+    def test_refill_after_drain_starts_level(self):
+        """Post-drain arrivals start level: a task that burst heavily in
+        the PREVIOUS busy period is not still paying its old finish
+        chain, and a fresh task cannot back-date to the stale V and
+        starve the returning one."""
+        w = {"A": 1.0, "B": 1.0}
+        q = PartitionQueue(fair=True, weight_of=lambda a: w[a.task_id],
+                           cost_of=lambda a: 10.0)
+        for i in range(3):
+            q.push(_action("A", name=f"A{i}"))
+        self._drain_all_served(q)
+        v_settled = q.vtime
+        a_return = _action("A", name="A-return")
+        b_fresh = _action("B", name="B-fresh")
+        q.push(a_return)
+        q.push(b_fresh)
+        sa, sb = q.tag_of(a_return.uid)[0], q.tag_of(b_fresh.uid)[0]
+        assert sa == pytest.approx(v_settled)  # debt forgiven at idle
+        assert sb == pytest.approx(v_settled)  # no stale back-dated tag
+        # FCFS tie-break: the earlier arrival drains first
+        assert [a.name for a in q.ordered()] == ["A-return", "B-fresh"]
+
+    def test_vtime_never_leaps_backward_randomized(self):
+        """Property test: under random pushes / serves / unserved drops /
+        full drains across tasks, the virtual clock is monotone and every
+        post-drain arrival's start tag is >= the settled clock."""
+        rng = random.Random(42)
+        weights = {"a": 2.0, "b": 1.0, "c": 0.5}
+        q = PartitionQueue(
+            fair=True,
+            weight_of=lambda x: weights[x.task_id],
+            cost_of=lambda x: x.base_duration,
+        )
+        live = []
+        last_v = 0.0
+        for step in range(600):
+            op = rng.random()
+            if op < 0.5 or not live:
+                a = _action(rng.choice(list(weights)), name=f"s{step}",
+                            dur=rng.uniform(0.1, 5.0))
+                was_empty = len(q) == 0
+                q.push(a)
+                live.append(a)
+                if was_empty:
+                    # resume rule: nobody may start before the settled clock
+                    assert q.tag_of(a.uid)[0] >= last_v - 1e-12
+            elif op < 0.85:
+                a = live.pop(rng.randrange(len(live)))
+                q.remove(a.uid, served=True)
+            else:
+                a = live.pop(rng.randrange(len(live)))
+                q.remove(a.uid, served=False)  # cancel/withdraw path
+            assert q.vtime >= last_v - 1e-12, "virtual clock leapt backward"
+            last_v = q.vtime
+        assert len(q) == len(live)
+
+    def test_single_task_fcfs_survives_drain_cycles(self):
+        """The busy-period rule must not disturb single-tenant FCFS
+        order (the bit-equivalence rail)."""
+        q = PartitionQueue(fair=True, cost_of=lambda a: 1.0)
+        order = []
+        for cycle in range(3):
+            acts = [_action("t", name=f"c{cycle}-{i}") for i in range(4)]
+            for a in acts:
+                q.push(a)
+            while q.head() is not None:
+                order.append(q.head().name)
+                q.remove(q.head().uid, served=True)
+        assert order == [f"c{c}-{i}" for c in range(3) for i in range(4)]
+
+
+# ---------------------------------------------------------------------------
+# sub-queue detach / merge + virtual-clock sync (the distribution seam)
+# ---------------------------------------------------------------------------
+
+
+class TestDetachMerge:
+    def _mk(self):
+        w = {"A": 2.0, "B": 1.0}
+        return PartitionQueue(fair=True, weight_of=lambda a: w[a.task_id],
+                              cost_of=lambda a: 1.0)
+
+    def test_detach_merge_round_trip_preserves_order(self):
+        q = self._mk()
+        acts = []
+        for i in range(6):
+            a = _action("A" if i % 2 == 0 else "B", name=f"x{i}")
+            acts.append(a)
+            q.push(a)
+        before = [a.name for a in q.ordered()]
+        shard = q.detach_task("A")
+        assert shard is not None and len(shard.entries) == 3
+        assert all(a.name not in ("x0", "x2", "x4")
+                   for a in q.ordered())
+        q.merge_shard(shard)
+        assert [a.name for a in q.ordered()] == before
+        # the finish chain survived: a new A arrival continues it
+        a_new = _action("A", name="x-new")
+        q.push(a_new)
+        assert q.tag_of(a_new.uid)[0] >= shard.finish_tag - 1e-12
+
+    def test_merge_into_fresh_replica_syncs_clock(self):
+        src = self._mk()
+        for i in range(4):
+            src.push(_action("A", name=f"a{i}"))
+        src.remove(src.head().uid, served=True)
+        src.remove(src.head().uid, served=True)
+        shard = src.detach_task("A")
+        dst = self._mk()
+        dst.merge_shard(shard)
+        # clock synced monotonically; tags carried verbatim
+        assert dst.vtime >= shard.vtime - 1e-12
+        assert [a.name for a in dst.ordered()] == ["a2", "a3"]
+        # a local arrival on the replica cannot back-date behind the
+        # merged sub-queue's virtual position
+        b = _action("B", name="b0")
+        dst.push(b)
+        assert dst.tag_of(b.uid)[0] >= dst.vtime - 1e-12
+
+    def test_detach_missing_or_empty_task(self):
+        q = self._mk()
+        assert q.detach_task("nope") is None
+        a = _action("A")
+        q.push(a)
+        q.remove(a.uid, served=True)
+        assert q.detach_task("A") is None
+
+    def test_merge_never_double_admits(self):
+        q = self._mk()
+        a = _action("A", name="dup")
+        q.push(a)
+        shard = q.detach_task("A")
+        q.push(a)  # re-queued locally while the shard was in transit
+        q.merge_shard(shard)
+        assert len(q) == 1
+        assert [x.name for x in q.ordered()] == ["dup"]
+
+    def test_sync_vtime_is_monotone(self):
+        q = self._mk()
+        q.sync_vtime(5.0)
+        assert q.vtime == 5.0
+        q.sync_vtime(2.0)  # never backward
+        assert q.vtime == 5.0
+
+
+# ---------------------------------------------------------------------------
 # orchestrator equivalence: fairness must be a no-op for one tenant, and
 # incremental rounds must stay equivalent to full rescheduling under WFQ
 # ---------------------------------------------------------------------------
@@ -481,6 +653,43 @@ class TestQuota:
         orch.run()
         (rec,) = orch.telemetry.records
         assert rec.units["cpu"] <= 4
+
+    @pytest.mark.parametrize("shards", [None, 2])
+    def test_quota_exact_under_concurrent_scale_up(self, shards):
+        """Exact quota for scalable scale-up (ROADMAP item): several
+        co-scheduled DoP-8-scalable actions of one quota'd tenant must
+        never jointly exceed the cap mid-flight.  Before the fix, the
+        first launch ate the whole budget and its siblings' min-unit
+        progress rail pushed the task past the cap."""
+        loop = EventLoop()
+        mgr = CpuManager([CpuNodeSpec("n0", cores=16)])
+        orch = Orchestrator(
+            {"cpu": mgr}, loop=loop,
+            fair_share=FairSharePolicy(quota={"t": 0.5}),  # cap = 8 units
+            shards=shards,
+        )
+        peak = [0]
+        orig = mgr.note_allocated
+
+        def spy(task_id, units):
+            orig(task_id, units)
+            peak[0] = max(peak[0], mgr.task_usage().get("t", 0))
+
+        mgr.note_allocated = spy
+        futs = [
+            orch.submit(
+                Action(name=f"r{i}",
+                       cost={"cpu": ResourceRequest("cpu", (1, 2, 4, 8))},
+                       key_resource="cpu", elasticity=AmdahlElasticity(0.05),
+                       base_duration=6.0, task_id="t", trajectory_id=f"t{i}")
+            )
+            for i in range(3)
+        ]
+        orch.run()
+        assert all(f.done() for f in futs)
+        assert peak[0] <= 8, f"quota cap exceeded mid-flight: {peak[0]} > 8"
+        assert peak[0] >= 4  # the budget is still being used, not starved
+        mgr.check_occupancy()
 
 
 # ---------------------------------------------------------------------------
