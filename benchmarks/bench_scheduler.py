@@ -14,7 +14,13 @@ system.  This harness measures the Python control-plane directly:
   round), the serial round loop vs the sharded plan/commit engine
   (``--shards N``): critical-path decision latency, speedup, and the
   launch-trace identity bit (``--suite shards`` + ``--check`` is the CI
-  shard-smoke gate).
+  shard-smoke gate);
+* ``remote_churn_*`` — the same fleet churn with the plan phase running
+  in shard workers over the wire codecs (``--suite remote``):
+  trace identity vs serial, the modeled critical path, and the
+  serialization bill (encode+decode us/event, bytes/round) reported as
+  its own rows — wire overhead is never folded into decision latency
+  (``--check`` is the CI remote-smoke gate).
 
 ``main`` additionally writes ``BENCH_scheduler.json`` (per-scenario
 ns/op + mean ACT, machine-readable for CI trending) and, with
@@ -315,6 +321,7 @@ def _fleet_action(pool: int, wave: int, i: int) -> Action:
 def _run_shard_churn(
     shards: Optional[int], queue: int = 128, waves: int = 16,
     cores: int = 8, period_s: float = 4.0,
+    plan_mode: str = "inline", transport: str = "loopback",
 ):
     """Steady-state churn over ``SHARD_POOLS`` independent pools, each
     smaller than its demand so a deep backlog persists: every wave
@@ -323,7 +330,10 @@ def _run_shard_churn(
     every round is a genuinely multi-partition round.  ``shards=None``
     is the serial round loop; ``shards=N`` the plan/commit engine, whose
     charged decision latency is the critical path (max per-shard plan +
-    serialized commit — see repro.core.shards)."""
+    serialized commit — see repro.core.shards).  ``plan_mode="remote"``
+    sends the plan phase through the wire codecs to shard workers
+    (``transport``: "loopback" = in-process workers behind the full
+    encode/decode path, "process" = real worker OS processes)."""
     from repro.core.simulator import EventLoop
 
     per_pool = max(1, queue // SHARD_POOLS)
@@ -333,7 +343,7 @@ def _run_shard_churn(
     }
     orch = Orchestrator(
         managers, loop=loop, policy=ElasticScheduler(), incremental=True,
-        shards=shards,
+        shards=shards, plan_mode=plan_mode, transport=transport,
     )
     wave_no = [0]
 
@@ -357,6 +367,11 @@ def _run_shard_churn(
     orch.telemetry.plan_critical_s = 0.0
     orch.telemetry.commit_conflicts = 0
     orch.telemetry.shards = {}
+    orch.telemetry.wire_encode_s = 0.0
+    orch.telemetry.wire_decode_s = 0.0
+    orch.telemetry.wire_transport_s = 0.0
+    orch.telemetry.wire_bytes = 0
+    orch.telemetry.wire_rounds = 0
     orch.run()
     n_events = len(orch.telemetry.records) - warm_records
     trace = sorted(
@@ -364,6 +379,7 @@ def _run_shard_churn(
          round(r.finish, 9), tuple(sorted(r.units.items())), r.failed)
         for r in orch.telemetry.records
     )
+    orch.close()
     return {
         "sched_us_per_event": orch.telemetry.sched_wall_s / max(1, n_events) * 1e6,
         "events": n_events,
@@ -372,6 +388,7 @@ def _run_shard_churn(
         "mean_act": orch.telemetry.mean_act(),
         "trace": trace,
         "summary": orch.telemetry.shard_summary(),
+        "wire": orch.telemetry.wire_summary(),
     }
 
 
@@ -424,6 +441,91 @@ def run_shards(scale: float = 1.0, shards: int = 4) -> List[Dict[str, object]]:
         },
     ]
     return rows
+
+
+def run_remote(
+    scale: float = 1.0, shards: int = 4, transport: str = "loopback"
+) -> List[Dict[str, object]]:
+    """Remote-plan rows on the queue-128 fleet churn: plan-over-wire vs
+    the serial loop, trace identity, and the wire bill.  Serialization
+    overhead (client encode + client/worker codec + transport wall) is
+    charged to its own rows, never into the modeled critical-path
+    decision latency — the two costs answer different questions (what a
+    worker fleet's decisions cost vs what shipping them costs)."""
+    queue = 128
+    waves = max(6, int(16 * scale))
+    serial = _run_shard_churn(None, queue=queue, waves=waves)
+    remote = _run_shard_churn(
+        shards, queue=queue, waves=waves, plan_mode="remote", transport=transport
+    )
+    identical = serial["trace"] == remote["trace"]
+    wire = remote["wire"] or {
+        "rounds": 0.0, "encode_s": 0.0, "decode_s": 0.0,
+        "transport_s": 0.0, "bytes": 0.0,
+    }
+    events = max(1, remote["events"])
+    wire_us_per_event = (wire["encode_s"] + wire["decode_s"]) / events * 1e6
+    rows: List[Dict[str, object]] = [
+        {
+            "name": f"remote_churn_queue{queue}_serial",
+            "us_per_call": serial["sched_us_per_event"],
+            "mean_act": serial["mean_act"],
+            "derived": f"queue={queue};events={serial['events']};rounds={serial['rounds']}",
+        },
+        {
+            "name": f"remote_churn_queue{queue}_shards{shards}_{transport}",
+            "us_per_call": remote["sched_us_per_event"],
+            "mean_act": remote["mean_act"],
+            "derived": (
+                f"queue={queue};events={remote['events']};"
+                f"sharded_rounds={remote['sharded_rounds']};"
+                f"wire_rounds={wire['rounds']:.0f};critical-path model "
+                f"(wire overhead charged separately)"
+            ),
+        },
+        {
+            "name": f"remote_churn_queue{queue}_wire_overhead",
+            "us_per_call": wire_us_per_event,
+            "mean_act": "",
+            "derived": (
+                f"us/event of encode+decode (codec both sides);"
+                f"transport_wall_s={wire['transport_s']:.4f};"
+                f"bytes_per_round={wire['bytes'] / max(1.0, wire['rounds']):.0f}"
+            ),
+        },
+        {
+            "name": f"remote_churn_queue{queue}_traces_identical",
+            "us_per_call": 1.0 if identical else 0.0,
+            "mean_act": "",
+            "derived": "1=remote-plan launch traces bit-identical to serial",
+        },
+    ]
+    return rows
+
+
+def check_remote(rows: List[Dict[str, object]]) -> None:
+    """CI remote-smoke gates on the queue-128 fleet churn: (a) remote-
+    plan launch traces bit-identical to the serial round loop; (b) the
+    wire was actually exercised (a refactor that silently stops
+    sharding rounds must not pass vacuously)."""
+    by_name = {str(r["name"]): r for r in rows}
+    identical_row = by_name["remote_churn_queue128_traces_identical"]
+    identical = float(identical_row["us_per_call"])  # type: ignore[arg-type]
+    overhead_row = by_name["remote_churn_queue128_wire_overhead"]
+    wire_rounds = 0.0
+    for r in rows:
+        derived = str(r.get("derived", ""))
+        if "wire_rounds=" in derived:
+            wire_rounds = float(derived.split("wire_rounds=")[1].split(";")[0])
+    print(
+        f"# remote check: traces_identical={identical:.0f} "
+        f"wire_rounds={wire_rounds:.0f} "
+        f"wire_overhead={float(overhead_row['us_per_call']):.1f}us/event"  # type: ignore[arg-type]
+    )
+    if identical != 1.0:
+        raise SystemExit("remote-plan fleet-churn launch trace diverged from serial")
+    if wire_rounds <= 0:
+        raise SystemExit("remote suite never exercised the wire (no sharded rounds)")
 
 
 def check_shards(rows: List[Dict[str, object]], shards: int = 4) -> None:
@@ -694,6 +796,7 @@ _SUITE_JSON = {
     "latency": "BENCH_scheduler.json",
     "fairness": "BENCH_fairness.json",
     "shards": "BENCH_shards.json",
+    "remote": "BENCH_remote.json",
 }
 
 
@@ -703,9 +806,18 @@ def main(
     check: bool = False,
     suite: str = "latency",
     shards: int = 4,
+    transport: str = "loopback",
 ) -> None:
     if json_path is None:
         json_path = _SUITE_JSON[suite]
+    if suite == "remote":
+        remote_rows = run_remote(scale, shards=shards, transport=transport)
+        emit(remote_rows, "remote plan-over-wire vs the serial round loop")
+        if json_path:
+            write_json(remote_rows, json_path)
+        if check:
+            check_remote(remote_rows)
+        return
     if suite == "fairness":
         fairness_rows = run_fairness(scale)
         emit(fairness_rows, "multi-tenant fairness (WFQ vs FCFS ablation)")
@@ -747,19 +859,28 @@ if __name__ == "__main__":
                     help="fail the suite's CI gate: dense-DP parity on "
                          f"{CHECK_SCENARIO} (latency suite), the weighted-"
                          "share / single-task-equivalence gates (fairness), "
-                         "or the >=1.5x-speedup / trace-identity gates "
-                         "(shards)")
-    ap.add_argument("--suite", choices=("latency", "fairness", "shards"),
+                         "the >=1.5x-speedup / trace-identity gates "
+                         "(shards), or the trace-identity / wire-exercised "
+                         "gates (remote)")
+    ap.add_argument("--suite", choices=("latency", "fairness", "shards", "remote"),
                     default="latency",
                     help="latency = decision-latency scenarios (default); "
                          "fairness = multi-tenant weighted-share scenario; "
-                         "shards = sharded plan/commit rounds vs serial")
+                         "shards = sharded plan/commit rounds vs serial; "
+                         "remote = plan-over-wire shard workers vs serial, "
+                         "with serialization overhead reported separately")
     ap.add_argument("--shards", type=int, default=4,
                     help="shard count for the fleet-churn scenario (the "
                          "plan/commit engine's parallel planners)")
+    ap.add_argument("--transport", choices=("loopback", "process"),
+                    default="loopback",
+                    help="remote suite: loopback = in-process workers behind "
+                         "the full wire codec path (deterministic, the CI "
+                         "gate); process = real worker OS processes")
     args = ap.parse_args()
     if args.json is None:
         # per-suite defaults keep any suite from overwriting another
         # suite's tracked baseline
         args.json = _SUITE_JSON[args.suite]
-    main(args.scale, args.json, args.check, args.suite, args.shards)
+    main(args.scale, args.json, args.check, args.suite, args.shards,
+         args.transport)

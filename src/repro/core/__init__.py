@@ -9,6 +9,9 @@ The paper's contribution, as a composable library:
 * :mod:`repro.core.orchestrator` — event-driven control plane: partitioned
   queues, incremental rounds, policies, action lifecycle
 * :mod:`repro.core.shards`     — sharded plan/commit scheduling rounds
+* :mod:`repro.core.wire`       — versioned wire codecs (plans/snapshots/
+  sub-queues across process boundaries, no pickle)
+* :mod:`repro.core.remote`     — out-of-process shard workers + transports
 * :mod:`repro.core.tangram`    — the system facade (§3)
 * :mod:`repro.core.baselines`  — k8s / SGLang / ServerlessLLM baselines (§6.1)
 * :mod:`repro.core.simulator`  — discrete-event engine
@@ -38,6 +41,7 @@ from repro.core.dparrange import (
     dp_arrange_ref,
 )
 from repro.core.baselines import FcfsPolicy, StaticDopPolicy
+from repro.core.fairqueue import FairSharePolicy, PartitionQueue, TaskShard
 from repro.core.managers import BasicResourceManager, CpuManager, GpuManager
 from repro.core.managers.gpu import ChunkAllocator, ServiceSpec
 from repro.core.orchestrator import (
@@ -46,6 +50,12 @@ from repro.core.orchestrator import (
     ActionTimeout,
     Orchestrator,
     SchedulingPolicy,
+)
+from repro.core.remote import (
+    LoopbackTransport,
+    ProcessTransport,
+    RemoteShardWorker,
+    ShardTransport,
 )
 from repro.core.scheduler import ElasticScheduler
 from repro.core.shards import PartitionPlan, RoundExecutor
@@ -69,20 +79,27 @@ __all__ = [
     "Elasticity",
     "ElasticScheduler",
     "EventLoop",
+    "FairSharePolicy",
     "FcfsPolicy",
     "GpuChunkDPOperator",
     "GpuManager",
     "LinearElasticity",
+    "LoopbackTransport",
     "Orchestrator",
     "PartitionPlan",
+    "PartitionQueue",
+    "ProcessTransport",
+    "RemoteShardWorker",
     "ResourceRequest",
     "RoundExecutor",
     "SchedulingPolicy",
     "ServiceSpec",
+    "ShardTransport",
     "SimClock",
     "StaticDopPolicy",
     "Tangram",
     "TableElasticity",
+    "TaskShard",
     "Telemetry",
     "TransitionTable",
     "brute_force_arrange",

@@ -96,7 +96,26 @@ class FairSharePolicy:
 class TaskShard:
     """A detached per-task sub-queue in transit between partition
     replicas (see :meth:`PartitionQueue.detach_task`).  Tags are
-    self-contained — merging needs only a monotone virtual-clock sync."""
+    self-contained — merging needs only a monotone virtual-clock sync
+    — and the payload is wire-serializable
+    (:func:`repro.core.wire.encode_task_shard`), so a sub-queue can
+    move between processes, not just between queues.
+
+    >>> from repro.core.action import Action, fixed
+    >>> src = PartitionQueue(fair=True)
+    >>> dst = PartitionQueue(fair=True)
+    >>> a = Action(name="x", cost={"r": fixed("r")}, task_id="mover",
+    ...            trajectory_id="t0")
+    >>> src.push(a)
+    >>> shard = src.detach_task("mover")
+    >>> (len(src), shard.task_id, len(shard.entries))
+    (0, 'mover', 1)
+    >>> dst.merge_shard(shard)
+    >>> [x.name for x in dst.ordered()]
+    ['x']
+    >>> dst.vtime >= shard.vtime  # clock sync is monotone
+    True
+    """
 
     task_id: str
     entries: List[Tuple[Tuple[float, int], Action]]

@@ -38,7 +38,29 @@ class Allocation:
 
 
 class ResourceManager:
-    """Base class; also usable directly for simple fungible resources."""
+    """Base class; also usable directly for simple fungible resources.
+
+    The scheduler-facing contract (what every manager family must keep
+    honest) is the method set documented below: admission
+    (:meth:`can_accommodate` / the :meth:`begin_admission` cursor), the
+    DP hooks (:meth:`dp_operator` / :meth:`dp_cache_key` /
+    :meth:`partition`), placement (:meth:`try_allocate` /
+    :meth:`release` and the two failure-path releases), share
+    accounting (:meth:`note_allocated` / :meth:`note_released` /
+    :meth:`task_usage` / :meth:`check_occupancy`), and the plan-phase
+    snapshot surface (:meth:`snapshot`, plus the wire codecs
+    :meth:`snapshot_state` / :meth:`restore_snapshot` used by
+    :mod:`repro.core.wire` when plans leave the process).  See
+    ``docs/architecture.md`` ("Managers") and ``examples/remote_round.py``
+    for a worked end-to-end use.
+    """
+
+    #: Wire-codec family tag (see :func:`repro.core.wire.encode_snapshot`).
+    #: Subclasses of a library manager inherit their family's codec; a
+    #: new manager family that adds plan-relevant state must define its
+    #: own tag + ``snapshot_state``/``restore_snapshot`` pair and
+    #: register it in :mod:`repro.core.wire`.
+    wire_impl = "pool"
 
     def __init__(self, rtype: str, capacity: int) -> None:
         self.rtype = rtype
@@ -54,9 +76,13 @@ class ResourceManager:
     # ------------------------------------------------------------------
     @property
     def available(self) -> int:
+        """Units currently grantable (for quota managers: remaining
+        tokens, which is why :meth:`held_units` is a separate notion)."""
         return self.capacity - self._in_use
 
     def min_units(self, action: Action) -> int:
+        """The action's minimum requirement on this resource (0 when
+        its cost vector does not touch this rtype)."""
         req = action.cost.get(self.rtype)
         return req.min_units if req is not None else 0
 
@@ -129,12 +155,20 @@ class ResourceManager:
     # placement
     # ------------------------------------------------------------------
     def try_allocate(self, action: Action, units: int) -> Optional[Allocation]:
+        """Concrete placement: grant ``units`` (returning an opaque
+        :class:`Allocation` carrying any per-allocation system overhead)
+        or return None WITHOUT side effects — a refusal must leave the
+        manager exactly as it was, because the orchestrator retries
+        refused launches on the ordinary round rail.  Live managers
+        only: plan-phase snapshots never place."""
         if units > self.available:
             return None
         self._in_use += units
         return Allocation(self.rtype, units)
 
     def release(self, action: Action, allocation: Allocation) -> None:
+        """Return a completed action's allocation.  Must accept exactly
+        the Allocation ``try_allocate`` returned, once."""
         self._in_use -= allocation.units
         assert self._in_use >= 0, f"{self.rtype}: negative usage"
 
@@ -220,16 +254,57 @@ class ResourceManager:
         return clone
 
     # ------------------------------------------------------------------
+    # wire snapshots (out-of-process plan phase, repro.core.wire)
+    # ------------------------------------------------------------------
+    def snapshot_state(self) -> Dict[str, object]:
+        """Plain-dict (JSON-able) encoding of the plan-phase free state.
+
+        Together with :meth:`restore_snapshot` this is the wire twin of
+        :meth:`snapshot`: ``restore_snapshot(snapshot_state())`` must
+        yield an object whose *plan surface* (``available``, admission
+        cursor, ``dp_operator``/``dp_cache_key``, ``partition``,
+        ``task_usage``, ``min_units``) behaves identically to an
+        in-process snapshot — that equivalence is what makes remote
+        plans bit-identical to inline ones.  Subclasses with deeper
+        state override both methods (and keep them in sync)."""
+        return {
+            "rtype": self.rtype,
+            "capacity": self.capacity,
+            "in_use": self._in_use,
+            "task_use": dict(self._task_use),
+        }
+
+    @classmethod
+    def restore_snapshot(cls, state: Dict[str, object]) -> "ResourceManager":
+        """Rebuild a plan-capable snapshot from :meth:`snapshot_state`.
+
+        The result is for PLANNING only — committing against it would
+        mutate a copy nobody owns.  Placement always happens on the live
+        manager, in the orchestrator's single-threaded commit phase."""
+        m = ResourceManager(str(state["rtype"]), int(state["capacity"]))  # type: ignore[arg-type]
+        m._in_use = int(state.get("in_use", 0))  # type: ignore[arg-type]
+        task_use = dict(state.get("task_use", {}))  # type: ignore[arg-type]
+        m._task_use = {str(k): int(v) for k, v in task_use.items()}
+        return m
+
+    # ------------------------------------------------------------------
     # lifetime hooks
     # ------------------------------------------------------------------
     def trajectory_start(self, trajectory_id: str, metadata: Dict[str, object]) -> bool:
+        """Admit (or veto) a new trajectory.  Called once per trajectory
+        before any of its actions are scheduled; managers that pin
+        per-trajectory state (the CPU manager's memory binding) hook
+        this.  Returning False rejects the trajectory."""
         return True
 
     def trajectory_end(self, trajectory_id: str) -> None:
+        """Release any per-trajectory state pinned by
+        :meth:`trajectory_start` (idempotent for unknown ids)."""
         pass
 
     # ------------------------------------------------------------------
     def utilization(self) -> float:
+        """Fraction of capacity currently held by running actions."""
         return self._in_use / self.capacity if self.capacity else 0.0
 
     def __repr__(self) -> str:

@@ -19,10 +19,12 @@ from typing import Optional
 from repro.core.action import Action
 from repro.core.cluster import ApiResourceSpec
 from repro.core.managers.base import Allocation, ResourceManager
-from repro.core.simulator import Clock
+from repro.core.simulator import Clock, FrozenClock
 
 
 class BasicResourceManager(ResourceManager):
+    wire_impl = "api"
+
     def __init__(self, spec: ApiResourceSpec, clock: Clock) -> None:
         self.spec = spec
         self.mode = spec.mode
@@ -96,7 +98,54 @@ class BasicResourceManager(ResourceManager):
         super().release(action, allocation)
 
     def time_to_next_refill(self) -> float:
+        """Seconds until the next quota refill (inf for concurrency
+        mode) — the orchestrator's post-round refill wake reads this."""
         if self.mode != "quota":
             return math.inf
         now = self._clock.now()
         return self._period_start + self.spec.period_s - now
+
+    # ------------------------------------------------------------------
+    # wire snapshots (see the ResourceManager base contract)
+    # ------------------------------------------------------------------
+    def snapshot_state(self) -> dict:
+        """Wire twin of ``snapshot()``: spec + token/occupancy state,
+        with the quota refill settled at the governing clock's current
+        instant so the remote side can pin its clock there
+        (:class:`~repro.core.simulator.FrozenClock`) and read the same
+        ``available`` the in-process snapshot would."""
+        if self.mode == "quota":
+            self._refill()
+        state = {
+            "spec": {
+                "name": self.spec.name,
+                "mode": self.spec.mode,
+                "max_concurrency": self.spec.max_concurrency,
+                "quota": self.spec.quota,
+                "period_s": self.spec.period_s,
+            },
+            "now": self._clock.now(),
+            "in_use": self._in_use,
+            "task_use": dict(self._task_use),
+        }
+        if self.mode == "quota":
+            state["tokens"] = self._tokens
+            state["period_start"] = self._period_start
+        return state
+
+    @classmethod
+    def restore_snapshot(cls, state: dict) -> "BasicResourceManager":
+        spec = ApiResourceSpec(
+            name=str(state["spec"]["name"]),
+            mode=str(state["spec"]["mode"]),
+            max_concurrency=int(state["spec"]["max_concurrency"]),
+            quota=int(state["spec"]["quota"]),
+            period_s=float(state["spec"]["period_s"]),
+        )
+        m = BasicResourceManager(spec, FrozenClock(float(state.get("now", 0.0))))
+        if m.mode == "quota":
+            m._tokens = int(state.get("tokens", spec.quota))
+            m._period_start = float(state.get("period_start", 0.0))
+        m._in_use = int(state.get("in_use", 0))
+        m._task_use = {str(k): int(v) for k, v in state.get("task_use", {}).items()}
+        return m

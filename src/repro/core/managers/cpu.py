@@ -87,6 +87,7 @@ class _NodeState:
 
 class CpuManager(ResourceManager):
     rtype_mem = "cpu_mem"
+    wire_impl = "cpu"
 
     def __init__(self, nodes: Sequence[CpuNodeSpec]) -> None:
         super().__init__("cpu", sum(n.cores for n in nodes))
@@ -115,6 +116,52 @@ class CpuManager(ResourceManager):
         clone._binding = dict(self._binding)
         clone.nodes = {name: st.clone() for name, st in self.nodes.items()}
         return clone
+
+    def snapshot_state(self) -> dict:
+        """Wire twin of :meth:`snapshot` (see the base contract): node
+        specs + per-NUMA free core ids + free memory + trajectory
+        bindings, everything ``partition()``'s load-balanced ``_bind``
+        and the admission cursor read.  Node ORDER is part of the state
+        — ``_bind`` breaks free-memory ties by insertion order."""
+        return {
+            "nodes": [
+                {
+                    "spec": {
+                        "name": st.spec.name,
+                        "cores": st.spec.cores,
+                        "numa_nodes": st.spec.numa_nodes,
+                        "memory_gb": st.spec.memory_gb,
+                    },
+                    "free_cores": [sorted(s) for s in st.free_cores],
+                    "free_mem_gb": st.free_mem_gb,
+                    "trajectories": dict(st.trajectories),
+                }
+                for st in self.nodes.values()
+            ],
+            "binding": dict(self._binding),
+            "task_use": dict(self._task_use),
+        }
+
+    @classmethod
+    def restore_snapshot(cls, state: dict) -> "CpuManager":
+        specs = [
+            CpuNodeSpec(
+                name=str(n["spec"]["name"]),
+                cores=int(n["spec"]["cores"]),
+                numa_nodes=int(n["spec"]["numa_nodes"]),
+                memory_gb=float(n["spec"]["memory_gb"]),
+            )
+            for n in state["nodes"]
+        ]
+        m = CpuManager(specs)
+        for n in state["nodes"]:
+            st = m.nodes[str(n["spec"]["name"])]
+            st.free_cores = [set(int(c) for c in dom) for dom in n["free_cores"]]
+            st.free_mem_gb = float(n["free_mem_gb"])
+            st.trajectories = {str(t): float(v) for t, v in n["trajectories"].items()}
+        m._binding = {str(t): str(node) for t, node in state.get("binding", {}).items()}
+        m._task_use = {str(k): int(v) for k, v in state.get("task_use", {}).items()}
+        return m
 
     # ------------------------------------------------------------------
     # trajectory lifetime: bind node + pin memory (Breakdown keeps state)

@@ -234,6 +234,8 @@ class ChunkAllocator:
 
 
 class GpuManager(ResourceManager):
+    wire_impl = "gpu"
+
     def __init__(self, nodes: Sequence[GpuNodeSpec], services: Sequence[ServiceSpec]) -> None:
         super().__init__("gpu", sum(n.devices for n in nodes))
         self.node_specs = {n.name: n for n in nodes}
@@ -285,6 +287,79 @@ class GpuManager(ResourceManager):
         clone._task_use = dict(self._task_use)
         clone.allocators = {n: a.clone() for n, a in self.allocators.items()}
         return clone
+
+    def snapshot_state(self) -> dict:
+        """Wire twin of :meth:`snapshot` (see the base contract): node +
+        service specs and each allocator's free/busy chunk sets and
+        service-cache tags (the DP feasibility callback and admission
+        read the free sets; cache tags matter only for commit-side
+        placement but round-trip so the codec is lossless)."""
+        return {
+            "nodes": [
+                {
+                    "name": n.name,
+                    "devices": n.devices,
+                    "device_memory_gb": n.device_memory_gb,
+                    "host_memory_gb": n.host_memory_gb,
+                    "restore_bw_gbps": n.restore_bw_gbps,
+                }
+                for n in self.node_specs.values()
+            ],
+            "services": [
+                {"name": s.name, "state_gb": s.state_gb, "dops": list(s.dops)}
+                for s in self.services.values()
+            ],
+            "allocators": {
+                name: {
+                    "free": {str(lvl): sorted(starts) for lvl, starts in a.free.items()},
+                    "busy": [[s, l] for s, l in sorted(a.busy)],
+                    "cache": [
+                        [s, l, svc[0], svc[1], t]
+                        for (s, l), (svc, t) in sorted(a.cache.items())
+                    ],
+                }
+                for name, a in self.allocators.items()
+            },
+            "now": self._now,
+            "task_use": dict(self._task_use),
+        }
+
+    @classmethod
+    def restore_snapshot(cls, state: dict) -> "GpuManager":
+        nodes = [
+            GpuNodeSpec(
+                name=str(n["name"]),
+                devices=int(n["devices"]),
+                device_memory_gb=float(n["device_memory_gb"]),
+                host_memory_gb=float(n["host_memory_gb"]),
+                restore_bw_gbps=float(n["restore_bw_gbps"]),
+            )
+            for n in state["nodes"]
+        ]
+        services = [
+            ServiceSpec(
+                name=str(s["name"]),
+                state_gb=float(s["state_gb"]),
+                dops=tuple(int(d) for d in s["dops"]),
+            )
+            for s in state["services"]
+        ]
+        m = GpuManager(nodes, services)
+        for name, st in state["allocators"].items():
+            alloc = m.allocators[str(name)]
+            alloc.free = {
+                lvl: set(int(s) for s in st["free"].get(str(lvl), []))
+                for lvl in range(alloc.max_level + 1)
+            }
+            alloc.busy = {(int(s), int(l)) for s, l in st["busy"]}
+            alloc.cache = {
+                (int(s), int(l)): ((str(svc), int(dop)), float(t))
+                for s, l, svc, dop, t in st["cache"]
+            }
+            alloc._level_counts = None
+        m._now = float(state.get("now", 0.0))
+        m._task_use = {str(k): int(v) for k, v in state.get("task_use", {}).items()}
+        return m
 
     # ------------------------------------------------------------------
     def begin_admission(self) -> object:

@@ -68,6 +68,7 @@ from repro.core.action import (
     Action,
     ActionState,
     DurationHistory,
+    ResourceRequest,
 )
 from repro.core.fairqueue import FairSharePolicy, PartitionQueue, default_cost
 from repro.core.managers.base import Allocation, ResourceManager
@@ -77,7 +78,7 @@ from repro.core.scheduler import (
     ScheduleResult,
     candidate_window,
 )
-from repro.core.shards import PartitionPlan, RoundExecutor
+from repro.core.shards import PartitionPlan, RoundExecutor, plan_partition
 from repro.core.simulator import EventLoop, Future
 from repro.core.telemetry import ActionRecord, Telemetry
 
@@ -136,7 +137,18 @@ class SchedulingPolicy(Protocol):
 
 
 class Orchestrator:
-    """Event-driven control plane: queues, rounds, lifecycle, telemetry."""
+    """Event-driven control plane: queues, rounds, lifecycle, migration,
+    telemetry.
+
+    Public surface (contract-level docs on each method): ``submit`` /
+    ``cancel`` drive the action lifecycle; ``trajectory_start`` /
+    ``trajectory_end`` bracket per-trajectory manager state; ``run``
+    drains the loop; ``migrate_task`` / ``rebalance`` move WFQ
+    sub-queues between partition replicas; ``queue_depth`` /
+    ``in_flight`` / ``starvation_ages`` / ``telemetry`` observe; and
+    ``close`` releases out-of-process workers.  See
+    ``docs/architecture.md`` for how the pieces compose and
+    ``examples/remote_round.py`` for a runnable end-to-end round."""
 
     def __init__(
         self,
@@ -148,6 +160,7 @@ class Orchestrator:
         fair_share: Optional[FairSharePolicy] = None,
         shards: Optional[int] = None,
         plan_mode: str = "inline",
+        transport: str = "loopback",
     ) -> None:
         self.loop = loop or EventLoop()
         self.history = DurationHistory()
@@ -190,11 +203,17 @@ class Orchestrator:
         # identical to the pre-shard engine).  shards=1 still exercises
         # the snapshot plan/commit machinery — the equivalence tests'
         # control arm.  plan_mode: "inline" (exact critical-path
-        # accounting) or "threads" (in-process pool) — plans are
-        # identical either way.
+        # accounting), "threads" (in-process pool), "auto" (per-round
+        # pick from the measured plan-cost EWMA), or "remote" (each
+        # shard's plan phase in a separate worker process behind the
+        # ``transport`` — "loopback" plans in-process through the full
+        # wire codecs, "process" spawns real workers).  Plans are
+        # identical in every mode.
         self.shards = shards
         self._executor = (
-            RoundExecutor(self, shards, plan_mode) if shards is not None else None
+            RoundExecutor(self, shards, plan_mode, transport=transport)
+            if shards is not None
+            else None
         )
         self.stats: Dict[str, int] = {
             "rounds": 0,
@@ -210,6 +229,13 @@ class Orchestrator:
     # public API
     # ------------------------------------------------------------------
     def submit(self, action: Action, delay: float = 0.0) -> Future:
+        """Submit an action for scheduling after ``delay`` virtual
+        seconds (0 = this instant, coalesced with same-timestamp
+        events into one round).  Returns a :class:`Future` resolved
+        with the action's execution duration on completion, or with an
+        :class:`ActionError` subclass on timeout/cancellation.  The
+        action must be freshly constructed (PENDING); resubmitting a
+        live or terminal action is undefined."""
         fut = Future()
         self._futures[action.uid] = fut
         self._pending_ev[action.uid] = self.loop.call_after(
@@ -233,11 +259,14 @@ class Orchestrator:
         return True
 
     def trajectory_start(self, trajectory_id: str, metadata: Optional[dict] = None) -> None:
+        """Announce a trajectory to every manager (lifetime hooks, e.g.
+        the CPU manager's memory pinning) before its actions arrive."""
         for m in self.managers.values():
             m.trajectory_start(trajectory_id, metadata or {})
         self._mark_all_dirty()
 
     def trajectory_end(self, trajectory_id: str) -> None:
+        """Release per-trajectory manager state (idempotent)."""
         for m in self.managers.values():
             m.trajectory_end(trajectory_id)
         # freed trajectory memory may unblock admission
@@ -245,16 +274,27 @@ class Orchestrator:
         self._request_round()
 
     def run(self, until: Optional[float] = None) -> float:
+        """Drain the event loop (optionally up to virtual time
+        ``until``); returns the clock after the last event."""
         return self.loop.run(until=until)
+
+    def close(self) -> None:
+        """Release out-of-process resources (remote shard workers).
+        Idempotent; a no-op for in-process plan modes."""
+        if self._executor is not None:
+            self._executor.close()
 
     @property
     def now(self) -> float:
+        """Current virtual time (the event loop's clock)."""
         return self.loop.clock.now()
 
     def queue_depth(self) -> int:
+        """Actions currently queued across all partitions."""
         return sum(len(q) for q in self._queues.values())
 
     def in_flight(self) -> int:
+        """Actions currently executing (holding allocations)."""
         return len(self._executing)
 
     def starvation_ages(self) -> Dict[str, float]:
@@ -268,6 +308,126 @@ class Orchestrator:
                 if age > ages.get(task, -math.inf):
                     ages[task] = age
         return ages
+
+    # ------------------------------------------------------------------
+    # sub-queue migration between partition replicas (the "sub-queue is
+    # the shard unit" seam: PartitionQueue.detach_task / merge_shard /
+    # sync_vtime, wired into live orchestration)
+    # ------------------------------------------------------------------
+    def migrate_task(self, task_id: str, src: str, dst: str) -> int:
+        """Move ``task_id``'s queued sub-queue from partition ``src`` to
+        the replica partition ``dst``; returns the number of migrated
+        actions (0 when the task has nothing queued on ``src``).
+
+        ``src`` and ``dst`` must be *replicas*: equivalent resource
+        pools (same unit semantics — e.g. the symmetric per-pool
+        managers of a fleet), both with live managers.  Each migrated
+        action's cost vector is retargeted from ``src`` to ``dst``
+        (unit sets preserved); actions whose cost touches other
+        resource types keep those dimensions untouched, but the move
+        must land the action in ``dst``'s partition — a cost vector
+        that would re-partition elsewhere raises ``ValueError`` before
+        anything is mutated.
+
+        WFQ semantics ride along for free (the detach/merge seam's
+        whole point): the detached :class:`~repro.core.fairqueue.TaskShard`
+        carries its actions' original virtual-time tags plus the source
+        clock, merging syncs ``dst``'s clock monotonically, and the
+        task's finish chain resumes from the later of the two tags — so
+        fair ordering is preserved and no queue's clock ever moves
+        backward.  Actions already RUNNING on ``src`` are not touched
+        (they hold ``src`` allocations until they complete).
+        """
+        if src == dst:
+            return 0
+        if src not in self.managers or dst not in self.managers:
+            raise ValueError(f"migrate_task: unknown partition {src!r} or {dst!r}")
+        src_q = self._queues.get(src)
+        if src_q is None:
+            return 0
+        # validate the replica contract BEFORE detaching: every queued
+        # action of the task must re-partition onto dst after retarget
+        for a in src_q.ordered():
+            if a.task_id != task_id:
+                continue
+            kr = dst if a.key_resource == src else a.key_resource
+            cost_keys = {dst if r == src else r for r in a.cost}
+            part = kr if kr is not None else (min(cost_keys) if cost_keys else "*")
+            if part != dst:
+                raise ValueError(
+                    f"migrate_task: {a.name}#{a.uid} would re-partition onto "
+                    f"{part!r}, not {dst!r} — {src!r}/{dst!r} are not replicas "
+                    f"for its cost vector {sorted(a.cost)}"
+                )
+        t0 = time.perf_counter()
+        shard = src_q.detach_task(task_id)
+        if shard is None:
+            return 0
+        for _key, action in shard.entries:
+            self._index_remove(src, action)
+            self._retarget(action, src, dst)
+            self._index_add(dst, action)
+        dst_q = self._queues.get(dst)
+        if dst_q is None:
+            dst_q = self._queues[dst] = self._make_queue(dst)
+        dst_q.merge_shard(shard)
+        n = len(shard.entries)
+        self.telemetry.note_migration(n, time.perf_counter() - t0)
+        self._dirty.add(src)
+        self._dirty.add(dst)
+        self._request_round()
+        return n
+
+    @staticmethod
+    def _retarget(action: Action, src: str, dst: str) -> None:
+        """Rewrite one action's cost vector from the ``src`` resource to
+        its ``dst`` replica (unit sets preserved)."""
+        req = action.cost.pop(src, None)
+        if req is not None:
+            action.cost[dst] = ResourceRequest(dst, req.units)
+        if action.key_resource == src:
+            action.key_resource = dst
+        # derived per-resource caches keyed on the old rtype are stale
+        action.metadata.pop("_dp_durs", None)
+
+    def rebalance(
+        self, replicas: Sequence[str], max_gap: int = 1
+    ) -> int:
+        """Even out queued backlog across a replica group by migrating
+        whole task sub-queues from the most- to the least-loaded
+        partition until the depth gap is at most ``max_gap`` (or no
+        single sub-queue move improves it).  Returns the number of
+        migrated actions.  Deterministic: ties break on sorted
+        partition/task names — a rebalance at the same state always
+        makes the same moves.  This is the hook a deployment's
+        rebalancer (or a test) drives; migration cost and counts land
+        in ``Telemetry.migrations``/``migrated_actions``/
+        ``migration_wall_s``."""
+        moved = 0
+        while True:
+            depths = {p: len(self._queues.get(p) or ()) for p in replicas}
+            hi = max(sorted(depths), key=lambda p: depths[p])
+            lo = min(sorted(depths), key=lambda p: depths[p])
+            gap = depths[hi] - depths[lo]
+            if gap <= max_gap:
+                return moved
+            src_q = self._queues.get(hi)
+            backlog = src_q.backlog() if src_q is not None else {}
+            # moving n actions turns the pair's gap into |gap - 2n|, so
+            # the best single move is the sub-queue whose size is
+            # closest to gap/2 — anything larger inverts the imbalance
+            # and anything is only worth moving if the gap strictly
+            # shrinks (ties break on fewer migrated actions, then task
+            # name, for determinism)
+            candidates = [
+                (abs(gap - 2 * n), n, t)
+                for t, n in sorted(backlog.items())
+                if 0 < n and abs(gap - 2 * n) < gap
+            ]
+            if not candidates:
+                return moved
+            _, _, task = min(candidates)
+            moved += self.migrate_task(task, hi, lo)
 
     # ------------------------------------------------------------------
     # queue + index plumbing (all O(1))
@@ -438,9 +598,10 @@ class Orchestrator:
         """Arrange one partition against ``managers`` (live for the
         serial loop, free-state snapshots for a shard) WITHOUT touching
         shared orchestrator state — safe to run from a plan thread.  The
-        only writes it performs land on the given managers (the CPU
-        manager's trajectory binding), per-action metadata owned by this
-        partition, and the policy's lock-guarded caches."""
+        plan core itself (:func:`repro.core.shards.plan_partition`) is a
+        free function shared verbatim with the out-of-process
+        :class:`~repro.core.remote.RemoteShardWorker`, which is what
+        keeps remote plans bit-identical to inline ones."""
         queue = self._queues.get(part)
         if not queue:
             return PartitionPlan(part, planned=False, shard=shard)
@@ -448,25 +609,17 @@ class Orchestrator:
         # across tasks — so the candidate window below is drawn
         # round-robin-by-virtual-time across tasks.  With fair_share=None
         # (or a single task) this IS plain arrival order.
-        waiting = queue.ordered()
-        held = 0
-        if self.fair_share is not None and self.fair_share.quota:
-            waiting, held = self._apply_quota(part, waiting, managers)
-            if not waiting:
-                return PartitionPlan(part, result=None, held=held, shard=shard)
-        executing = list(self._executing.values())
-
-        t0 = time.perf_counter()
-        if self.incremental:
-            limit = getattr(self.policy, "candidate_limit", 128)
-            candidates = candidate_window(waiting, managers, limit)
-            result = self.policy.arrange(
-                candidates, waiting[len(candidates) :], executing, managers, self.now
-            )
-        else:
-            result = self.policy.schedule(waiting, executing, managers, self.now)
-        wall = time.perf_counter() - t0
-        return PartitionPlan(part, result=result, held=held, wall_s=wall, shard=shard)
+        return plan_partition(
+            part,
+            queue.ordered(),
+            list(self._executing.values()),
+            managers,
+            self.policy,
+            self.fair_share,
+            self.now,
+            self.incremental,
+            shard=shard,
+        )
 
     def _commit_partition(self, plan: PartitionPlan) -> int:
         """Validate-and-launch one partition's intents against LIVE
@@ -510,55 +663,12 @@ class Orchestrator:
                 self._dirty.add(part)
         return failed
 
-    def _apply_quota(
-        self, part: str, waiting: List[Action], managers: Mapping[str, ResourceManager]
-    ) -> Tuple[List[Action], int]:
-        """Hard share caps: withhold from this round's window the actions
-        of tasks at/above their quota fraction of the partition
-        manager's capacity.  Held actions stay queued (the partition
-        stays watched); a completion releasing units re-dirties it.
-        ``managers`` is the planning view — live for the serial loop, a
-        shard's snapshots otherwise."""
-        manager = managers.get(part)
-        fs = self.fair_share
-        if manager is None or fs is None or manager.capacity <= 0:
-            return waiting, 0
-        usage = manager.task_usage()
-        # remaining min-unit budget per capped task THIS round: quota
-        # fraction of capacity minus units already held.  Walking the
-        # window in service order keeps the cap exact for rigid actions;
-        # scalable grants beyond min units are clamped against the same
-        # budget at launch time (:meth:`_quota_clamp`).  Progress rail:
-        # a task holding NOTHING always gets its first window action even
-        # when its min units exceed the configured cap — a sub-min quota
-        # must degrade to "one action at a time", never to a silent
-        # permanent hold.
-        budget: Dict[str, float] = {}
-        eligible: List[Action] = []
-        held = 0
-        for a in waiting:
-            t = a.task_id
-            q = fs.quota_of(t)
-            if math.isinf(q):
-                eligible.append(a)
-                continue
-            first = t not in budget
-            if first:
-                budget[t] = q * manager.capacity - usage.get(t, 0)
-            req = a.cost.get(part)
-            need = req.min_units if req is not None else 1
-            if need <= budget[t] or (first and usage.get(t, 0) == 0):
-                budget[t] -= need
-                eligible.append(a)
-            else:
-                held += 1
-        return eligible, held
-
     def _quota_reservations(
         self, decisions: Sequence[Decision]
     ) -> Optional[Dict[Tuple[str, str], int]]:
         """Min-unit budget reservations per (quota'd task, rtype) over a
-        commit batch.  Admission (:meth:`_apply_quota`) guaranteed every
+        commit batch.  Admission (:func:`repro.core.shards.apply_quota`)
+        guaranteed every
         admitted action its *min* units within the task's budget; an
         elastic grant scaled beyond min must therefore be clamped
         against the budget MINUS the min-unit reservations of the

@@ -1,0 +1,530 @@
+"""Out-of-process shard workers: the plan phase over the wire.
+
+The sharded round engine (:mod:`repro.core.shards`) proved a round can
+be split into side-effect-free per-shard *plan* phases over manager
+snapshots plus one serialized validated *commit*.  This module moves the
+plan phase out of the orchestrator's process:
+
+* :class:`RemoteShardWorker` — the worker side: decodes a plan request
+  (policy config, manager snapshots, queue contents), runs the **same**
+  plan core the in-process engine runs
+  (:func:`repro.core.shards.plan_partition` — one implementation, zero
+  drift), and returns serialized :class:`~repro.core.shards.PartitionPlan`
+  payloads.  Stateless across requests except for caches keyed by
+  content fingerprint (snapshot deltas, policy config, duration
+  history) — a worker can be restarted at any time and the next request
+  re-primes it.
+* :class:`ShardTransport` — the byte-level boundary, deliberately tiny
+  (``submit``/``recv``/``close`` over UTF-8 JSON): anything that can
+  move bytes (a pipe, a socket, an RPC stack) can carry shards.
+  :class:`LoopbackTransport` runs the worker in-process but pushes every
+  payload through the full encode/decode path — the determinism rail
+  proving wire fidelity without process overhead;
+  :class:`ProcessTransport` runs the worker in a real OS process over a
+  ``multiprocessing`` pipe.
+* :class:`RemoteRoundClient` — the orchestrator side: builds per-shard
+  requests (suppressing unchanged snapshots/policy/history as
+  ``{"ref": fingerprint}`` deltas), dispatches to every worker, gathers,
+  and re-binds decoded decisions to the **live** Action objects for the
+  unchanged single-threaded commit.  Conflict rollback and the retry
+  rail are exactly the in-process ones — the commit phase cannot tell
+  where a plan was computed.
+
+Accounting is honest by construction: the modeled critical-path
+decision latency stays ``max(per-shard plan) + commit`` with per-shard
+plan cost *measured on the worker* (what a dedicated worker pays), and
+every serialization cost — client encode, client decode + worker codec,
+transport wall, bytes — is recorded separately in
+``Telemetry.wire_*`` so wire overhead is never laundered into decision
+latency (``bench_scheduler --suite remote`` reports both, side by
+side).
+
+No pickle crosses the boundary: requests and responses are
+:func:`repro.core.wire.dumps` strings (Python-dialect JSON), moved as
+UTF-8 bytes.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import TYPE_CHECKING, Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.core import wire
+from repro.core.action import Action
+from repro.core.shards import PartitionPlan, plan_partition
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.core.orchestrator import Orchestrator
+
+
+# ---------------------------------------------------------------------------
+# the worker side
+# ---------------------------------------------------------------------------
+
+
+class RemoteShardWorker:
+    """Executes serialized plan requests; lives wherever the transport
+    puts it (the orchestrator's process for loopback, a separate OS
+    process for :class:`ProcessTransport`, a remote host once an RPC
+    transport exists).
+
+    Per-request inputs arrive either in full or as ``{"ref": fp}``
+    references to content the worker already holds (snapshot states,
+    policy config, duration history).  Snapshot *states* are cached,
+    but a fresh plan-capable manager is rebuilt from the cached state on
+    every request — planning mutates its managers (admission cursors,
+    the CPU manager's trajectory binding), so decoded snapshots are
+    single-use exactly like in-process ones.
+    """
+
+    def __init__(self) -> None:
+        self._policy: Optional[Any] = None
+        self._policy_fp: Optional[str] = None
+        self._fair_share: Optional[Any] = None
+        self._fair_share_fp: Optional[str] = None
+        self._history_fp: Optional[str] = None
+        self._history_avg: Dict[str, float] = {}
+        self._snap_cache: Dict[str, Tuple[str, Dict[str, Any]]] = {}
+        # dumps() cost of the previous response, folded into the NEXT
+        # response's codec_s (we cannot time a serialization inside the
+        # payload it produces; carrying it forward keeps the aggregate
+        # wire bill honest without double-serializing)
+        self._carry_dump_s = 0.0
+
+    # ------------------------------------------------------------------
+    def handle(self, request: str) -> str:
+        """One plan round-trip: wire string in, wire string out.  Any
+        :class:`~repro.core.wire.WireError` (or other failure) is
+        returned as an ``error`` payload rather than raised — the
+        transport stays alive and the client decides what to do."""
+        try:
+            t0 = time.perf_counter()
+            payload = wire.loads(request)
+            parse_s = time.perf_counter() - t0
+            body = self._handle(payload, parse_s)
+            t1 = time.perf_counter()
+            blob = wire.dumps(body)
+            self._carry_dump_s += time.perf_counter() - t1
+            return blob
+        except Exception as e:  # noqa: BLE001 - protocol boundary
+            return wire.dumps(
+                wire.envelope("error", {"error": f"{type(e).__name__}: {e}"})
+            )
+
+    def _handle(self, payload: Any, parse_s: float = 0.0) -> Dict[str, Any]:
+        req = wire.expect(payload, "plan_request")
+        t_codec = time.perf_counter()
+
+        if req.get("policy") is not None:
+            self._policy = wire.decode_policy(req["policy"])
+            self._policy_fp = wire.fingerprint(req["policy"])
+        if self._policy is None:
+            raise wire.WireError("plan_request before any policy was sent")
+
+        fs = req.get("fair_share", {"ref": self._fair_share_fp})
+        if not (isinstance(fs, dict) and "ref" in fs):
+            self._fair_share = wire.decode_fair_share(fs)
+            self._fair_share_fp = wire.fingerprint(fs)
+        elif fs["ref"] != self._fair_share_fp:
+            raise wire.WireError("fair_share ref does not match cached state")
+
+        hist = req.get("history")
+        if hist is not None:
+            if isinstance(hist, dict) and "ref" in hist:
+                if hist["ref"] != self._history_fp:
+                    raise wire.WireError("history ref does not match cached state")
+            else:
+                self._history_avg = {
+                    str(k): float(v) for k, v in hist.get("avg", {}).items()
+                }
+                self._history_fp = wire.fingerprint(hist)
+            # apply the cached table even on a ref hit: a policy refresh
+            # above rebuilt a FRESH policy (empty history), and an
+            # unchanged-history ref must still repopulate it — otherwise
+            # unprofiled actions price at the default and remote plans
+            # silently diverge from serial ones
+            history = getattr(self._policy, "history", None)
+            if history is not None:
+                history._avg = dict(self._history_avg)
+
+        managers: Dict[str, Any] = {}
+        for rtype, snap in req.get("snapshots", {}).items():
+            if isinstance(snap, dict) and "ref" in snap:
+                cached = self._snap_cache.get(rtype)
+                if cached is None or cached[0] != snap["ref"]:
+                    raise wire.WireError(
+                        f"snapshot ref for {rtype!r} does not match cached state"
+                    )
+                snap = cached[1]
+            else:
+                self._snap_cache[rtype] = (wire.fingerprint(snap), snap)
+            managers[str(rtype)] = wire.decode_snapshot(snap)
+
+        executing = [wire.decode_action(a) for a in req.get("executing", [])]
+        waiting_by_part: Dict[str, List[Action]] = {
+            str(p["part"]): [wire.decode_action(a) for a in p.get("waiting", [])]
+            for p in req.get("partitions", [])
+        }
+        codec_s = time.perf_counter() - t_codec
+
+        now = float(req.get("now", 0.0))
+        incremental = bool(req.get("incremental", True))
+        shard = int(req.get("shard", 0))
+
+        t_plan = time.perf_counter()
+        plans = [
+            plan_partition(
+                part,
+                waiting,
+                executing,
+                managers,
+                self._policy,
+                self._fair_share,
+                now,
+                incremental,
+                shard=shard,
+            )
+            for part, waiting in waiting_by_part.items()
+        ]
+        plan_s = time.perf_counter() - t_plan
+
+        t_enc = time.perf_counter()
+        plan_payloads = [wire.encode_plan(p) for p in plans]
+        codec_s += parse_s + self._carry_dump_s + (time.perf_counter() - t_enc)
+        self._carry_dump_s = 0.0
+        body = {
+            "shard": shard,
+            "plans": plan_payloads,
+            "plan_s": plan_s,
+            "codec_s": codec_s,
+        }
+        return wire.envelope("plan_response", body)
+
+
+# ---------------------------------------------------------------------------
+# transports
+# ---------------------------------------------------------------------------
+
+
+class ShardTransport:
+    """Byte-boundary to one shard worker.
+
+    The contract is a single in-flight request per transport:
+    ``submit(request)`` hands the worker a wire string, ``recv()``
+    blocks for its response.  The client overlaps workers by submitting
+    to all transports before receiving from any.  Implementations move
+    UTF-8 JSON only — never pickled objects — so an RPC transport can
+    slot in without touching the protocol."""
+
+    def submit(self, request: str) -> None:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def recv(self) -> str:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def close(self) -> None:  # pragma: no cover - interface
+        pass
+
+
+class LoopbackTransport(ShardTransport):
+    """In-process worker behind the full wire codec path.
+
+    Every request and response crosses :func:`repro.core.wire.dumps` /
+    :func:`~repro.core.wire.loads` exactly as over a real transport —
+    loopback proves plan-over-wire fidelity (and measures serialization
+    cost) deterministically, without process scheduling noise.  The
+    worker computes during :meth:`submit`; :meth:`recv` just returns."""
+
+    def __init__(self) -> None:
+        self._worker = RemoteShardWorker()
+        self._response: Optional[str] = None
+
+    def submit(self, request: str) -> None:
+        self._response = self._worker.handle(request)
+
+    def recv(self) -> str:
+        resp, self._response = self._response, None
+        if resp is None:
+            raise RuntimeError("recv() without a submitted request")
+        return resp
+
+
+def _worker_main(conn) -> None:
+    """Entry point of a :class:`ProcessTransport` worker process: serve
+    plan requests off the pipe until the empty shutdown frame (or EOF).
+    Module-level so it is importable under any multiprocessing start
+    method (spawn pickles the callable by reference, never by value)."""
+    worker = RemoteShardWorker()
+    while True:
+        try:
+            blob = conn.recv_bytes()
+        except (EOFError, OSError):
+            break
+        if not blob:
+            break
+        conn.send_bytes(worker.handle(blob.decode("utf-8")).encode("utf-8"))
+    conn.close()
+
+
+class ProcessTransport(ShardTransport):
+    """A shard worker in a separate OS process over a multiprocessing
+    pipe.  Frames are UTF-8 wire strings (``send_bytes``/``recv_bytes``
+    — no object pickling); an empty frame is the shutdown signal.
+    Workers are daemonic: they can never outlive the orchestrator."""
+
+    def __init__(self, start_method: Optional[str] = None) -> None:
+        import multiprocessing as mp
+
+        if start_method is None:
+            start_method = (
+                "fork" if "fork" in mp.get_all_start_methods() else "spawn"
+            )
+        ctx = mp.get_context(start_method)
+        self._conn, child = ctx.Pipe()
+        self._proc = ctx.Process(target=_worker_main, args=(child,), daemon=True)
+        self._proc.start()
+        child.close()
+
+    def submit(self, request: str) -> None:
+        self._conn.send_bytes(request.encode("utf-8"))
+
+    def recv(self) -> str:
+        return self._conn.recv_bytes().decode("utf-8")
+
+    def close(self) -> None:
+        try:
+            self._conn.send_bytes(b"")
+            self._conn.close()
+        except (OSError, ValueError):
+            pass
+        self._proc.join(timeout=5)
+        if self._proc.is_alive():  # pragma: no cover - defensive
+            self._proc.terminate()
+
+
+_TRANSPORTS = {"loopback": LoopbackTransport, "process": ProcessTransport}
+
+
+# ---------------------------------------------------------------------------
+# the orchestrator side
+# ---------------------------------------------------------------------------
+
+
+class RemoteRoundClient:
+    """Drives one remote plan phase per sharded round.
+
+    Owns one transport (one worker) per shard index, created lazily.
+    Tracks, per worker, the fingerprints of the policy config, fairness
+    config, duration history, and each manager snapshot it last sent, so
+    unchanged payloads travel as ``{"ref": fp}`` deltas — the worker
+    rebuilds from its cache and the wire carries only what moved."""
+
+    def __init__(self, orch: "Orchestrator", transport: str = "loopback") -> None:
+        factory = _TRANSPORTS.get(transport)
+        if factory is None:
+            raise ValueError(
+                f"unknown transport {transport!r} (have {sorted(_TRANSPORTS)})"
+            )
+        self.orch = orch
+        self.transport_kind = transport
+        self._factory = factory
+        self._transports: List[ShardTransport] = []
+        self._sent: List[Dict[str, Any]] = []  # per-worker fingerprint state
+
+    # ------------------------------------------------------------------
+    def close(self) -> None:
+        for t in self._transports:
+            t.close()
+        self._transports.clear()
+        self._sent.clear()
+
+    def _transport(self, i: int) -> ShardTransport:
+        while len(self._transports) <= i:
+            self._transports.append(self._factory())
+            self._sent.append({"snaps": {}})
+        return self._transports[i]
+
+    # ------------------------------------------------------------------
+    def plan_round(
+        self, groups: Sequence[Sequence[str]]
+    ) -> Tuple[List[PartitionPlan], float]:
+        """Plan every shard's partitions on its worker; returns the
+        decoded plans (decisions re-bound to live actions) plus the
+        round's critical-path plan cost: the max worker-measured plan
+        time.  Dispatch is pipelined — every request is submitted before
+        any response is awaited, so worker compute overlaps."""
+        orch = self.orch
+        telemetry = orch.telemetry
+        # worker startup (process fork/spawn) happens here, outside the
+        # serialization accounting — it is a deployment cost paid once,
+        # not a per-round wire cost
+        for shard_idx in range(len(groups)):
+            self._transport(shard_idx)
+        t_round = time.perf_counter()
+
+        # ---- encode phase (client-side serialization cost) ------------
+        t_enc = time.perf_counter()
+        plans: List[PartitionPlan] = []
+        by_uid: Dict[int, Action] = {}
+        shard_parts: List[Tuple[int, List[Dict[str, Any]], set]] = []
+        union_rtypes: set = set()
+        executing = list(orch._executing.values())
+        executing_payload = [wire.encode_action(a) for a in executing]
+        nbytes = 0
+        for shard_idx, group in enumerate(groups):
+            parts: List[Dict[str, Any]] = []
+            rtypes: set = set()
+            for part in group:
+                queue = orch._queues.get(part)
+                if not queue:
+                    # nothing to plan — resolved client-side, off the wire
+                    plans.append(
+                        PartitionPlan(part, planned=False, shard=shard_idx)
+                    )
+                    continue
+                waiting = queue.ordered()
+                for a in waiting:
+                    by_uid[a.uid] = a
+                    rtypes.update(r for r in a.cost if r in orch.managers)
+                if part in orch.managers:
+                    rtypes.add(part)
+                parts.append(
+                    {
+                        "part": part,
+                        "waiting": [wire.encode_action(a) for a in waiting],
+                    }
+                )
+            if parts:
+                shard_parts.append((shard_idx, parts, rtypes))
+                union_rtypes |= rtypes
+        # shard-independent payloads (policy config, fairness, history,
+        # manager snapshots) are encoded + fingerprinted ONCE per round
+        # and shared across every worker's request — only the per-worker
+        # ref-vs-full decision differs
+        shared = self._encode_shared(union_rtypes)
+        requests: List[Tuple[int, str]] = [
+            (shard_idx,
+             wire.dumps(self._request(shard_idx, parts, rtypes,
+                                      executing_payload, shared)))
+            for shard_idx, parts, rtypes in shard_parts
+        ]
+        encode_s = time.perf_counter() - t_enc
+
+        # ---- dispatch + gather (worker compute overlaps) --------------
+        t_tx = time.perf_counter()
+        for shard_idx, blob in requests:
+            nbytes += len(blob)
+            self._transport(shard_idx).submit(blob)
+        responses: List[Tuple[int, str]] = [
+            (shard_idx, self._transport(shard_idx).recv())
+            for shard_idx, _ in requests
+        ]
+        transport_s = time.perf_counter() - t_tx
+
+        # ---- decode phase (client-side + worker-reported codec cost) --
+        t_dec = time.perf_counter()
+        critical = 0.0
+        decode_s = 0.0
+        for shard_idx, blob in responses:
+            nbytes += len(blob)
+            payload = wire.loads(blob)
+            if isinstance(payload, dict) and payload.get("kind") == "error":
+                raise RuntimeError(
+                    f"remote shard worker {shard_idx} failed: "
+                    f"{payload.get('error')}"
+                )
+            resp = wire.expect(payload, "plan_response")
+            plan_s = float(resp.get("plan_s", 0.0))
+            decode_s += float(resp.get("codec_s", 0.0))
+            shard_plans = [wire.decode_plan(p, by_uid) for p in resp["plans"]]
+            critical = max(critical, plan_s)
+            telemetry.note_shard_round(shard_idx, len(shard_plans), plan_s)
+            plans.extend(shard_plans)
+        decode_s += time.perf_counter() - t_dec
+
+        telemetry.plan_critical_s += critical
+        telemetry.plan_wall_s += time.perf_counter() - t_round
+        telemetry.note_wire_round(encode_s, transport_s, decode_s, nbytes)
+        return plans, critical
+
+    # ------------------------------------------------------------------
+    def _encode_shared(self, rtypes: set) -> Dict[str, Any]:
+        """Encode + fingerprint the shard-independent request inputs
+        once per round: the policy / fairness / history configs and one
+        snapshot per needed resource type.  ``_request`` then only makes
+        the per-worker full-vs-``{"ref": fp}`` call against each
+        worker's sent-state."""
+        orch = self.orch
+        policy_payload = wire.encode_policy(orch.policy)
+        fs_payload = wire.encode_fair_share(orch.fair_share)
+        hist = getattr(orch.policy, "history", None)
+        hist_payload = None if hist is None else {"avg": dict(hist._avg)}
+        snaps: Dict[str, Tuple[Dict[str, Any], str]] = {}
+        for rtype in sorted(rtypes):
+            snap = wire.encode_snapshot(orch.managers[rtype])
+            snaps[rtype] = (snap, wire.fingerprint(snap))
+        return {
+            "policy": (policy_payload, wire.fingerprint(policy_payload)),
+            "fair_share": (fs_payload, wire.fingerprint(fs_payload)),
+            "history": (
+                None
+                if hist_payload is None
+                else (hist_payload, wire.fingerprint(hist_payload))
+            ),
+            "snaps": snaps,
+        }
+
+    def _request(
+        self,
+        shard_idx: int,
+        parts: List[Dict[str, Any]],
+        rtypes: set,
+        executing_payload: List[Dict[str, Any]],
+        shared: Dict[str, Any],
+    ) -> Dict[str, Any]:
+        """One worker's plan request, with unchanged policy/fairness/
+        history/snapshot payloads replaced by fingerprint references."""
+        orch = self.orch
+        sent = self._sent[shard_idx]
+
+        policy_payload, policy_fp = shared["policy"]
+        policy = None if sent.get("policy") == policy_fp else policy_payload
+        sent["policy"] = policy_fp
+
+        fs_payload, fs_fp = shared["fair_share"]
+        fair_share: Any = (
+            {"ref": fs_fp} if sent.get("fair_share") == fs_fp else fs_payload
+        )
+        sent["fair_share"] = fs_fp
+
+        history: Any = None
+        if shared["history"] is not None:
+            hist_payload, hist_fp = shared["history"]
+            history = (
+                {"ref": hist_fp} if sent.get("history") == hist_fp else hist_payload
+            )
+            sent["history"] = hist_fp
+
+        snapshots: Dict[str, Any] = {}
+        for rtype in sorted(rtypes):
+            snap, fp = shared["snaps"][rtype]
+            if sent["snaps"].get(rtype) == fp:
+                snapshots[rtype] = {"ref": fp}
+            else:
+                snapshots[rtype] = snap
+                sent["snaps"][rtype] = fp
+
+        return wire.envelope(
+            "plan_request",
+            {
+                "shard": shard_idx,
+                "now": orch.now,
+                "incremental": orch.incremental,
+                "policy": policy,
+                "fair_share": fair_share,
+                "history": history,
+                "snapshots": snapshots,
+                "executing": executing_payload,
+                "partitions": parts,
+            },
+        )

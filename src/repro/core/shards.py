@@ -72,13 +72,16 @@ disjoint resource types — the equivalence suites), proven by
 
 from __future__ import annotations
 
+import math
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
-from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple
+from typing import TYPE_CHECKING, Dict, List, Mapping, Optional, Sequence, Tuple
 
-from repro.core.scheduler import ScheduleResult
+from repro.core.action import Action
+from repro.core.fairqueue import FairSharePolicy
+from repro.core.scheduler import ScheduleResult, candidate_window
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard (typing only)
     from repro.core.orchestrator import Orchestrator
@@ -99,6 +102,98 @@ class PartitionPlan:
     wall_s: float = 0.0  # this partition's arrange wall time
     shard: int = 0
     planned: bool = True
+
+
+# ---------------------------------------------------------------------------
+# The plan core — shared verbatim by the serial loop, the in-process
+# sharded plan phase, AND the out-of-process RemoteShardWorker
+# (repro.core.remote).  Keeping it a free function over explicit inputs
+# is what guarantees remote plans are bit-identical to inline ones:
+# there is exactly one implementation to diverge from.
+# ---------------------------------------------------------------------------
+
+
+def apply_quota(
+    part: str,
+    waiting: List[Action],
+    managers: Mapping[str, object],
+    fair_share: FairSharePolicy,
+) -> Tuple[List[Action], int]:
+    """Hard share caps: withhold from this round's window the actions of
+    tasks at/above their quota fraction of the partition manager's
+    capacity.  Held actions stay queued (the partition stays watched); a
+    completion releasing units re-dirties it.  ``managers`` is the
+    planning view — live for the serial loop, snapshots otherwise.
+
+    The per-task budget walk admits min-unit requirements in service
+    order (exact for rigid actions; scalable grants beyond min units are
+    clamped against the same budget at launch).  Progress rail: a task
+    holding NOTHING always gets its first window action even when its
+    min units exceed the configured cap — a sub-min quota must degrade
+    to "one action at a time", never to a silent permanent hold."""
+    manager = managers.get(part)
+    if manager is None or manager.capacity <= 0:
+        return waiting, 0
+    usage = manager.task_usage()
+    budget: Dict[str, float] = {}
+    eligible: List[Action] = []
+    held = 0
+    for a in waiting:
+        t = a.task_id
+        q = fair_share.quota_of(t)
+        if math.isinf(q):
+            eligible.append(a)
+            continue
+        first = t not in budget
+        if first:
+            budget[t] = q * manager.capacity - usage.get(t, 0)
+        req = a.cost.get(part)
+        need = req.min_units if req is not None else 1
+        if need <= budget[t] or (first and usage.get(t, 0) == 0):
+            budget[t] -= need
+            eligible.append(a)
+        else:
+            held += 1
+    return eligible, held
+
+
+def plan_partition(
+    part: str,
+    waiting: List[Action],
+    executing: Sequence[Action],
+    managers: Mapping[str, object],
+    policy: object,
+    fair_share: Optional[FairSharePolicy],
+    now: float,
+    incremental: bool,
+    shard: int = 0,
+) -> PartitionPlan:
+    """Arrange one partition against ``managers`` WITHOUT touching any
+    shared orchestrator state — safe to run from a plan thread or a
+    separate process.  The only writes it performs land on the given
+    managers (the CPU manager's trajectory binding — snapshots absorb
+    them off the live path), per-action metadata owned by this
+    partition, and the policy's lock-guarded caches.
+
+    ``waiting`` must already be in the partition queue's service order
+    (WFQ: FCFS within a task, min-virtual-start-tag across tasks; plain
+    arrival order with ``fair_share=None`` or a single task)."""
+    held = 0
+    if fair_share is not None and fair_share.quota:
+        waiting, held = apply_quota(part, waiting, managers, fair_share)
+        if not waiting:
+            return PartitionPlan(part, result=None, held=held, shard=shard)
+    t0 = time.perf_counter()
+    if incremental:
+        limit = getattr(policy, "candidate_limit", 128)
+        candidates = candidate_window(waiting, managers, limit)
+        result = policy.arrange(
+            candidates, waiting[len(candidates):], executing, managers, now
+        )
+    else:
+        result = policy.schedule(waiting, executing, managers, now)
+    wall = time.perf_counter() - t0
+    return PartitionPlan(part, result=result, held=held, wall_s=wall, shard=shard)
 
 
 class SnapshotMap:
@@ -155,20 +250,68 @@ def _pool(workers: int) -> ThreadPoolExecutor:
         return pool
 
 
+#: Estimated per-shard plan cost (seconds) above which ``plan_mode=
+#: "auto"`` dispatches to the thread pool: below it the pool's dispatch
+#: + wakeup overhead (~100-500 us/shard) outweighs any overlap, and plan
+#: cost that small is dict work that holds the GIL anyway.  Above it the
+#: plan phase is dominated by the dense-DP NumPy sweeps, which release
+#: the GIL — the regime the ROADMAP's profiling item identified as the
+#: only one where pooled planning pays.
+AUTO_THREADS_CUTOVER_S = 2e-3
+
+#: EWMA smoothing for the measured per-partition plan cost that drives
+#: the auto plan-mode decision.
+AUTO_EWMA_ALPHA = 0.2
+
+
 class RoundExecutor:
     """Plans a round's dirty partitions across ``shards`` workers and
-    hands the orchestrator an ordered commit list."""
+    hands the orchestrator an ordered commit list.
+
+    ``plan_mode``:
+
+    * ``"inline"`` — shards planned back-to-back on the orchestrator
+      thread (exact contention-free critical-path accounting);
+    * ``"threads"`` — shards dispatched to a process-wide thread pool;
+    * ``"auto"`` — pick between the two per round from a measured
+      per-partition plan-cost EWMA (see :data:`AUTO_THREADS_CUTOVER_S`);
+      every decision is logged in ``Telemetry.plan_mode_rounds``;
+    * ``"remote"`` — each shard's plan phase runs in a
+      :class:`~repro.core.remote.RemoteShardWorker` behind a
+      :class:`~repro.core.remote.ShardTransport` (snapshots and plans
+      cross a serialization boundary; see :mod:`repro.core.remote`).
+
+    Plans are deterministic — identical in every mode."""
+
+    PLAN_MODES = ("inline", "threads", "auto", "remote")
 
     def __init__(
-        self, orch: "Orchestrator", shards: int, plan_mode: str = "inline"
+        self,
+        orch: "Orchestrator",
+        shards: int,
+        plan_mode: str = "inline",
+        transport: str = "loopback",
     ) -> None:
         if shards < 1:
             raise ValueError(f"shards must be >= 1, got {shards}")
-        if plan_mode not in ("inline", "threads"):
+        if plan_mode not in self.PLAN_MODES:
             raise ValueError(f"unknown plan_mode {plan_mode!r}")
         self.orch = orch
         self.shards = int(shards)
         self.plan_mode = plan_mode
+        # measured per-partition plan cost (seconds), EWMA — drives the
+        # "auto" inline-vs-threads pick and is exported to telemetry
+        self.plan_cost_ewma: Optional[float] = None
+        self._remote = None
+        if plan_mode == "remote":
+            from repro.core.remote import RemoteRoundClient
+
+            self._remote = RemoteRoundClient(orch, transport)
+
+    def close(self) -> None:
+        """Shut down any out-of-process shard workers (idempotent)."""
+        if self._remote is not None:
+            self._remote.close()
 
     # ------------------------------------------------------------------
     def assign(self, keys: Sequence[str]) -> List[List[str]]:
@@ -188,8 +331,18 @@ class RoundExecutor:
         the maximum per-shard plan time."""
         groups = self.assign(keys)
         telemetry = self.orch.telemetry
+        if self._remote is not None:
+            plans, critical = self._remote.plan_round(groups)
+            plans.sort(key=lambda p: p.part)
+            self._note_plan_costs(plans)
+            return plans, critical
+
+        mode = self.plan_mode
+        if mode == "auto":
+            mode = self._auto_mode(groups)
+            telemetry.note_plan_mode(mode, self.plan_cost_ewma)
         t_wall = time.perf_counter()
-        if len(groups) == 1 or self.plan_mode == "inline":
+        if len(groups) == 1 or mode == "inline":
             results = [self._plan_shard(i, g) for i, g in enumerate(groups)]
         else:
             pool = _pool(self.shards)
@@ -208,7 +361,36 @@ class RoundExecutor:
             plans.extend(shard_plans)
         telemetry.plan_critical_s += critical
         plans.sort(key=lambda p: p.part)
+        self._note_plan_costs(plans)
         return plans, critical
+
+    # ------------------------------------------------------------------
+    def _auto_mode(self, groups: List[List[str]]) -> str:
+        """The per-round inline-vs-threads pick: dispatch to the pool
+        only when the measured plan-cost EWMA predicts a per-shard plan
+        phase expensive enough to amortize pool dispatch (and there is
+        more than one shard to overlap).  Before any measurement exists
+        the round plans inline — the measurement itself is free there."""
+        if len(groups) <= 1 or self.plan_cost_ewma is None:
+            return "inline"
+        est_shard_cost = self.plan_cost_ewma * max(len(g) for g in groups)
+        return "threads" if est_shard_cost >= AUTO_THREADS_CUTOVER_S else "inline"
+
+    def _note_plan_costs(self, plans: Sequence[PartitionPlan]) -> None:
+        """Fold this round's measured per-partition plan walls into the
+        EWMA that drives (and is reported beside) the auto decision."""
+        ewma = self.plan_cost_ewma
+        for p in plans:
+            if not p.planned:
+                continue
+            ewma = (
+                p.wall_s
+                if ewma is None
+                else AUTO_EWMA_ALPHA * p.wall_s + (1.0 - AUTO_EWMA_ALPHA) * ewma
+            )
+        self.plan_cost_ewma = ewma
+        if ewma is not None:
+            self.orch.telemetry.plan_cost_ewma_s = ewma
 
     # ------------------------------------------------------------------
     def _plan_shard(

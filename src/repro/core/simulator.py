@@ -30,6 +30,20 @@ class RealClock(Clock):
         return time.monotonic() - self._t0
 
 
+class FrozenClock(Clock):
+    """A clock pinned at one instant — the governing clock of manager
+    snapshots rebuilt from the wire.  Planning happens at a fixed
+    virtual ``now`` (no event callback runs while plans are
+    outstanding), so a remote snapshot's time-dependent state (quota
+    refills) must read exactly the instant the snapshot was taken."""
+
+    def __init__(self, at: float) -> None:
+        self._at = float(at)
+
+    def now(self) -> float:
+        return self._at
+
+
 @dataclass(order=True)
 class _Event:
     when: float

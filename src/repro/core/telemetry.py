@@ -65,9 +65,64 @@ class Telemetry:
     # commit) round's commit phase; refusals in serial-path rounds show
     # up only in the orchestrator's launch_failures stat
     commit_conflicts: int = 0
+    # -- auto plan-mode decisions (plan_mode="auto") -------------------------
+    # per-round inline/threads picks from the measured plan-cost EWMA;
+    # the EWMA itself is exported so the decision is auditable
+    plan_mode_rounds: Dict[str, int] = field(default_factory=dict)
+    plan_cost_ewma_s: float = 0.0  # last per-partition plan-cost EWMA
+    # -- wire counters (remote plan mode, repro.core.remote) -----------------
+    # serialization overhead is accounted SEPARATELY from the modeled
+    # critical-path decision latency so the two are never conflated:
+    # encode/decode are orchestrator-side wall, bytes count both
+    # directions, transport_s is the full dispatch->gather wall of
+    # remote plan phases (worker compute + IPC + codec, overlapped
+    # across workers)
+    wire_encode_s: float = 0.0
+    wire_decode_s: float = 0.0
+    wire_transport_s: float = 0.0
+    wire_bytes: int = 0
+    wire_rounds: int = 0
+    # -- sub-queue migration (Orchestrator.migrate_task/rebalance) -----------
+    migrations: int = 0  # detach->merge moves between partition replicas
+    migrated_actions: int = 0
+    migration_wall_s: float = 0.0  # control-plane cost of the moves
 
     def record(self, rec: ActionRecord) -> None:
         self.records.append(rec)
+
+    def note_plan_mode(self, mode: str, ewma_s: Optional[float]) -> None:
+        """Log one auto plan-mode decision (and the EWMA that drove it)."""
+        self.plan_mode_rounds[mode] = self.plan_mode_rounds.get(mode, 0) + 1
+        if ewma_s is not None:
+            self.plan_cost_ewma_s = ewma_s
+
+    def note_migration(self, actions: int, wall_s: float) -> None:
+        self.migrations += 1
+        self.migrated_actions += actions
+        self.migration_wall_s += wall_s
+
+    def note_wire_round(
+        self, encode_s: float, transport_s: float, decode_s: float, nbytes: int
+    ) -> None:
+        """One remote plan round's serialization accounting."""
+        self.wire_rounds += 1
+        self.wire_encode_s += encode_s
+        self.wire_transport_s += transport_s
+        self.wire_decode_s += decode_s
+        self.wire_bytes += nbytes
+
+    def wire_summary(self) -> Dict[str, float]:
+        """Aggregate wire overhead of remote plan phases ({} when the
+        round engine never left the process)."""
+        if not self.wire_rounds:
+            return {}
+        return {
+            "rounds": float(self.wire_rounds),
+            "encode_s": self.wire_encode_s,
+            "decode_s": self.wire_decode_s,
+            "transport_s": self.wire_transport_s,
+            "bytes": float(self.wire_bytes),
+        }
 
     def note_shard_round(self, shard: int, partitions: int, plan_s: float) -> None:
         st = self.shards.setdefault(shard, ShardStats())

@@ -1,0 +1,543 @@
+"""Versioned wire serialization for the distributed round engine.
+
+The plan/commit engine (:mod:`repro.core.shards`) made arrangement
+side-effect-free over manager snapshots; this module is what lets those
+plans leave the process: plain ``dataclass <-> dict`` codecs — **no
+pickle anywhere** — for every object that crosses the plan/commit
+boundary:
+
+* :class:`~repro.core.action.Action` (and its nested
+  :class:`~repro.core.action.ResourceRequest` /
+  :class:`~repro.core.action.Elasticity` models),
+* :class:`~repro.core.scheduler.ScheduleResult` /
+  :class:`~repro.core.scheduler.Decision` — decisions travel as
+  ``(uid, units)`` pairs and are re-bound to the *live* Action objects
+  at decode (the commit phase never trusts a remote object graph),
+* :class:`~repro.core.shards.PartitionPlan`,
+* :class:`~repro.core.fairqueue.TaskShard` (sub-queue migration),
+* manager ``snapshot()`` payloads for all four manager families
+  (``snapshot_state``/``restore_snapshot`` on the managers; this module
+  owns the envelope + the impl registry),
+* scheduling-policy and :class:`~repro.core.fairqueue.FairSharePolicy`
+  configuration (so a remote worker can construct an equivalent
+  policy).
+
+Schema and compatibility rules (see ``docs/wire-protocol.md``):
+
+* every top-level payload is an **envelope**
+  ``{"v": WIRE_VERSION, "kind": "<type>", ...fields}``;
+* decoders reject a payload whose ``v`` differs from their own
+  :data:`WIRE_VERSION` or whose ``kind`` is not the expected one — a
+  version bump is a breaking change by definition;
+* decoders **ignore unknown fields** (additive evolution within a
+  version is compatible); encoders always emit every schema field;
+* a malformed payload raises :class:`WireError`, never a bare
+  ``KeyError``/``TypeError`` — schema violations are protocol errors.
+
+Doctest — an action survives the round trip identically:
+
+>>> from repro.core.action import Action, fixed
+>>> a = Action(name="tool", cost={"cpu": fixed("cpu", 2)},
+...            base_duration=1.5, task_id="t0", trajectory_id="tr0")
+>>> b = decode_action(encode_action(a))
+>>> (b.uid, b.name, b.cost["cpu"].units) == (a.uid, "tool", (2,))
+True
+>>> encode_action(b) == encode_action(a)
+True
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import math
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple, Type
+
+from repro.core.action import (
+    Action,
+    ActionState,
+    AmdahlElasticity,
+    Elasticity,
+    LinearElasticity,
+    ResourceRequest,
+    TableElasticity,
+)
+from repro.core.fairqueue import FairSharePolicy, TaskShard
+from repro.core.managers.base import ResourceManager
+from repro.core.scheduler import Decision, ScheduleResult
+
+#: Wire protocol version.  Decoders accept exactly this version; any
+#: breaking change to a payload schema must bump it.
+WIRE_VERSION = 1
+
+
+class WireError(ValueError):
+    """A payload violated the wire schema (wrong version/kind/field)."""
+
+
+# ---------------------------------------------------------------------------
+# envelope helpers
+# ---------------------------------------------------------------------------
+
+
+def envelope(kind: str, body: Dict[str, Any]) -> Dict[str, Any]:
+    """Wrap ``body`` in the versioned envelope all top-level payloads use."""
+    out = {"v": WIRE_VERSION, "kind": kind}
+    out.update(body)
+    return out
+
+
+def expect(payload: Any, kind: str) -> Dict[str, Any]:
+    """Validate the envelope of ``payload`` and return it.
+
+    Raises :class:`WireError` on a non-dict payload, a version mismatch,
+    or a kind mismatch — the three ways an incompatible peer shows up.
+    """
+    if not isinstance(payload, dict):
+        raise WireError(f"{kind}: payload must be a dict, got {type(payload).__name__}")
+    v = payload.get("v")
+    if v != WIRE_VERSION:
+        raise WireError(f"{kind}: wire version {v!r} != supported {WIRE_VERSION}")
+    got = payload.get("kind")
+    if got != kind:
+        raise WireError(f"expected kind {kind!r}, got {got!r}")
+    return payload
+
+
+def _field(payload: Mapping[str, Any], kind: str, name: str) -> Any:
+    try:
+        return payload[name]
+    except KeyError:
+        raise WireError(f"{kind}: missing required field {name!r}") from None
+
+
+def fingerprint(payload: Any) -> str:
+    """Stable content hash of a JSON-able payload (delta suppression:
+    a sender may replace an unchanged payload with ``{"ref": fp}``)."""
+    blob = json.dumps(payload, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha1(blob.encode()).hexdigest()
+
+
+def dumps(payload: Any) -> str:
+    """Serialize a payload to its wire string (Python-dialect JSON:
+    ``NaN``/``Infinity`` literals are legal — unprofiled durations and
+    unset timestamps travel as NaN)."""
+    return json.dumps(payload, separators=(",", ":"))
+
+
+def loads(blob: str) -> Any:
+    """Parse a wire string produced by :func:`dumps`."""
+    try:
+        return json.loads(blob)
+    except json.JSONDecodeError as e:
+        raise WireError(f"malformed wire payload: {e}") from None
+
+
+# ---------------------------------------------------------------------------
+# actions (nested: resource requests, elasticity models)
+# ---------------------------------------------------------------------------
+
+
+def encode_request(req: ResourceRequest) -> Dict[str, Any]:
+    return {"rtype": req.rtype, "units": list(req.units)}
+
+
+def decode_request(payload: Mapping[str, Any]) -> ResourceRequest:
+    if not isinstance(payload, Mapping):
+        raise WireError("resource request must be a dict")
+    return ResourceRequest(
+        str(_field(payload, "request", "rtype")),
+        tuple(int(u) for u in _field(payload, "request", "units")),
+    )
+
+
+def encode_elasticity(e: Elasticity) -> Dict[str, Any]:
+    """Elasticity models travel by *name*, never by code: only the three
+    library models are wire-legal.  A custom subclass must be registered
+    here (and versioned) before it can cross a process boundary."""
+    if isinstance(e, AmdahlElasticity):
+        return {"model": "amdahl", "serial": e.serial}
+    if isinstance(e, TableElasticity):
+        return {"model": "table", "knots": [[int(m), float(r)] for m, r in e.table]}
+    if isinstance(e, LinearElasticity):
+        return {"model": "linear"}
+    raise WireError(f"elasticity model {type(e).__name__} is not wire-serializable")
+
+
+def decode_elasticity(payload: Mapping[str, Any]) -> Elasticity:
+    model = _field(payload, "elasticity", "model")
+    if model == "amdahl":
+        return AmdahlElasticity(serial=float(_field(payload, "elasticity", "serial")))
+    if model == "table":
+        knots = _field(payload, "elasticity", "knots")
+        return TableElasticity(tuple((int(m), float(r)) for m, r in knots))
+    if model == "linear":
+        return LinearElasticity()
+    raise WireError(f"unknown elasticity model {model!r}")
+
+
+#: JSON-scalar types allowed in wire-transported action metadata.
+_SCALARS = (str, int, float, bool, type(None))
+
+
+def _wire_metadata(meta: Mapping[str, Any]) -> Dict[str, Any]:
+    """The JSON-scalar, non-private slice of an action's metadata.
+
+    Planning reads only scalar hints (``traj_mem_gb``); derived caches
+    (underscore keys, e.g. the ``_dp_durs`` duration memo) are local and
+    recomputed on the far side, and non-scalar payloads never cross."""
+    return {
+        k: v
+        for k, v in meta.items()
+        if not k.startswith("_") and isinstance(v, _SCALARS)
+    }
+
+
+def encode_action(a: Action) -> Dict[str, Any]:
+    """Encode the schedulable surface of an action.
+
+    Execution payloads (``fn``, ``duration_sampler``) are host-local by
+    design and do NOT cross — planning never calls them, and the commit
+    phase re-binds decisions to the live Action that still carries them.
+    """
+    return envelope(
+        "action",
+        {
+            "uid": a.uid,
+            "name": a.name,
+            "cost": {r: encode_request(req) for r, req in a.cost.items()},
+            "key_resource": a.key_resource,
+            "elasticity": None if a.elasticity is None else encode_elasticity(a.elasticity),
+            "base_duration": a.base_duration,
+            "task_id": a.task_id,
+            "trajectory_id": a.trajectory_id,
+            "weight": a.weight,
+            "service": a.service,
+            "timeout_s": a.timeout_s,
+            "max_retries": a.max_retries,
+            "state": a.state.value,
+            "submit_time": a.submit_time,
+            "start_time": a.start_time,
+            "finish_time": a.finish_time,
+            "sys_overhead": a.sys_overhead,
+            "attempts": a.attempts,
+            "metadata": _wire_metadata(a.metadata),
+        },
+    )
+
+
+def decode_action(payload: Mapping[str, Any]) -> Action:
+    p = expect(payload, "action")
+    cost = {
+        str(r): decode_request(req) for r, req in _field(p, "action", "cost").items()
+    }
+    el = p.get("elasticity")
+    a = Action(
+        name=str(_field(p, "action", "name")),
+        cost=cost,
+        key_resource=p.get("key_resource"),
+        elasticity=None if el is None else decode_elasticity(el),
+        base_duration=p.get("base_duration"),
+        task_id=str(p.get("task_id", "task0")),
+        trajectory_id=str(p.get("trajectory_id", "traj0")),
+        weight=p.get("weight"),
+        service=p.get("service"),
+        timeout_s=p.get("timeout_s"),
+        max_retries=int(p.get("max_retries", 0)),
+        metadata=dict(p.get("metadata", {})),
+        uid=int(_field(p, "action", "uid")),
+    )
+    try:
+        a.state = ActionState(p.get("state", "pending"))
+    except ValueError:
+        raise WireError(f"action: unknown state {p.get('state')!r}") from None
+    a.submit_time = float(p.get("submit_time", math.nan))
+    a.start_time = float(p.get("start_time", math.nan))
+    a.finish_time = float(p.get("finish_time", math.nan))
+    a.sys_overhead = float(p.get("sys_overhead", 0.0))
+    a.attempts = int(p.get("attempts", 0))
+    return a
+
+
+# ---------------------------------------------------------------------------
+# plans (decisions travel as uid references, re-bound at decode)
+# ---------------------------------------------------------------------------
+
+
+def encode_decision(d: Decision) -> Dict[str, Any]:
+    return {"uid": d.action.uid, "units": {r: int(u) for r, u in d.units.items()}}
+
+
+def encode_schedule_result(r: ScheduleResult) -> Dict[str, Any]:
+    return {
+        "decisions": [encode_decision(d) for d in r.decisions],
+        "objective": r.objective,
+        "evicted": r.evicted,
+    }
+
+
+def decode_schedule_result(
+    payload: Mapping[str, Any], by_uid: Mapping[int, Action]
+) -> ScheduleResult:
+    decisions: List[Decision] = []
+    for d in _field(payload, "schedule_result", "decisions"):
+        uid = int(_field(d, "decision", "uid"))
+        action = by_uid.get(uid)
+        if action is None:
+            raise WireError(f"decision references unknown action uid {uid}")
+        decisions.append(
+            Decision(action, {str(r): int(u) for r, u in d.get("units", {}).items()})
+        )
+    return ScheduleResult(
+        decisions=decisions,
+        objective=float(payload.get("objective", 0.0)),
+        evicted=int(payload.get("evicted", 0)),
+    )
+
+
+def encode_plan(plan: "Any") -> Dict[str, Any]:
+    """Encode a :class:`~repro.core.shards.PartitionPlan` (imported by
+    duck type to keep this module cycle-free with shards.py)."""
+    return envelope(
+        "partition_plan",
+        {
+            "part": plan.part,
+            "held": plan.held,
+            "wall_s": plan.wall_s,
+            "shard": plan.shard,
+            "planned": plan.planned,
+            "result": (
+                None if plan.result is None else encode_schedule_result(plan.result)
+            ),
+        },
+    )
+
+
+def decode_plan(payload: Mapping[str, Any], by_uid: Mapping[int, Action]) -> "Any":
+    from repro.core.shards import PartitionPlan
+
+    p = expect(payload, "partition_plan")
+    result = p.get("result")
+    return PartitionPlan(
+        part=str(_field(p, "partition_plan", "part")),
+        result=None if result is None else decode_schedule_result(result, by_uid),
+        held=int(p.get("held", 0)),
+        wall_s=float(p.get("wall_s", 0.0)),
+        shard=int(p.get("shard", 0)),
+        planned=bool(p.get("planned", True)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# sub-queue migration: TaskShard
+# ---------------------------------------------------------------------------
+
+
+def encode_task_shard(shard: TaskShard) -> Dict[str, Any]:
+    """A detached WFQ sub-queue in transit between partition replicas.
+
+    Entries keep their original ``(vstart, seq)`` tags — the whole point
+    of the detach/merge seam is that tags are self-contained, so the
+    receiving replica only needs a monotone clock sync to drain fairly.
+    """
+    return envelope(
+        "task_shard",
+        {
+            "task_id": shard.task_id,
+            "finish_tag": shard.finish_tag,
+            "vtime": shard.vtime,
+            "entries": [
+                {"key": [key[0], key[1]], "action": encode_action(a)}
+                for key, a in shard.entries
+            ],
+        },
+    )
+
+
+def decode_task_shard(payload: Mapping[str, Any]) -> TaskShard:
+    p = expect(payload, "task_shard")
+    entries: List[Tuple[Tuple[float, int], Action]] = []
+    for e in _field(p, "task_shard", "entries"):
+        key = _field(e, "task_shard entry", "key")
+        if not isinstance(key, (list, tuple)) or len(key) != 2:
+            raise WireError(f"task_shard: malformed tag {key!r}")
+        entries.append(
+            ((float(key[0]), int(key[1])), decode_action(_field(e, "task_shard entry", "action")))
+        )
+    return TaskShard(
+        task_id=str(_field(p, "task_shard", "task_id")),
+        entries=entries,
+        finish_tag=float(p.get("finish_tag", 0.0)),
+        vtime=float(p.get("vtime", 0.0)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# manager snapshots
+# ---------------------------------------------------------------------------
+
+#: Wire-impl registry: payload ``impl`` tag -> manager class that can
+#: rebuild a plan-capable snapshot from the state dict.  Populated
+#: lazily to avoid importing every manager at module load.
+_SNAPSHOT_IMPLS: Optional[Dict[str, Type[ResourceManager]]] = None
+
+
+def _snapshot_impls() -> Dict[str, Type[ResourceManager]]:
+    global _SNAPSHOT_IMPLS
+    if _SNAPSHOT_IMPLS is None:
+        from repro.core.managers.basic import BasicResourceManager
+        from repro.core.managers.cpu import CpuManager
+        from repro.core.managers.gpu import GpuManager
+
+        _SNAPSHOT_IMPLS = {
+            ResourceManager.wire_impl: ResourceManager,
+            CpuManager.wire_impl: CpuManager,
+            GpuManager.wire_impl: GpuManager,
+            BasicResourceManager.wire_impl: BasicResourceManager,
+        }
+    return _SNAPSHOT_IMPLS
+
+
+def encode_snapshot(manager: ResourceManager) -> Dict[str, Any]:
+    """Serialize a manager's plan-phase free state.
+
+    Dispatches on the manager's ``wire_impl`` tag; a custom subclass
+    inherits its family's codec, which round-trips exactly the plan
+    surface (:meth:`ResourceManager.snapshot` contract) — overridden
+    placement behaviour stays host-side, where placement happens.
+    """
+    impl = getattr(manager, "wire_impl", None)
+    if impl not in _snapshot_impls():
+        raise WireError(
+            f"manager {type(manager).__name__} has no wire snapshot impl"
+        )
+    return envelope(
+        "snapshot",
+        {"rtype": manager.rtype, "impl": impl, "state": manager.snapshot_state()},
+    )
+
+
+def decode_snapshot(payload: Mapping[str, Any]) -> ResourceManager:
+    """Rebuild a plan-capable manager snapshot from its wire payload.
+
+    The returned object supports the plan surface only (the same
+    contract as :meth:`ResourceManager.snapshot`); calling placement on
+    it is a programming error, exactly as for in-process snapshots.
+    """
+    p = expect(payload, "snapshot")
+    impl = _field(p, "snapshot", "impl")
+    cls = _snapshot_impls().get(impl)
+    if cls is None:
+        raise WireError(f"unknown snapshot impl {impl!r}")
+    return cls.restore_snapshot(_field(p, "snapshot", "state"))
+
+
+# ---------------------------------------------------------------------------
+# policy configuration (so a remote worker builds an equivalent policy)
+# ---------------------------------------------------------------------------
+
+
+def encode_fair_share(fs: Optional[FairSharePolicy]) -> Optional[Dict[str, Any]]:
+    if fs is None:
+        return None
+    return {
+        "weights": dict(fs.weights),
+        "default_weight": fs.default_weight,
+        "quota": dict(fs.quota),
+        "preempt_scalable": fs.preempt_scalable,
+        "share_slack": fs.share_slack,
+    }
+
+
+def decode_fair_share(payload: Optional[Mapping[str, Any]]) -> Optional[FairSharePolicy]:
+    if payload is None:
+        return None
+    return FairSharePolicy(
+        weights={str(k): float(v) for k, v in payload.get("weights", {}).items()},
+        default_weight=float(payload.get("default_weight", 1.0)),
+        quota={str(k): float(v) for k, v in payload.get("quota", {}).items()},
+        preempt_scalable=bool(payload.get("preempt_scalable", True)),
+        share_slack=float(payload.get("share_slack", 0.1)),
+    )
+
+
+def encode_policy(policy: Any) -> Dict[str, Any]:
+    """Policy config by *name + knobs* — code never crosses the wire.
+
+    Only the library policies are wire-legal; a custom policy must be
+    registered here before the remote plan phase can run it.
+    """
+    from repro.core.baselines import FcfsPolicy, StaticDopPolicy
+    from repro.core.scheduler import ElasticScheduler
+
+    if isinstance(policy, ElasticScheduler):
+        return envelope(
+            "policy",
+            {
+                "type": "elastic",
+                "depth": policy.depth,
+                "candidate_limit": policy.candidate_limit,
+                "estimate_units": policy.estimate_units,
+                "eviction_search": policy.eviction_search,
+                "cache_dp": policy.cache_dp,
+                "use_dense": policy.use_dense,
+                "dense_backend": policy.dense_backend,
+                "dop_floor": policy.dop_floor,
+                "floor_pressure": policy.floor_pressure,
+                # the policy's OWN fairness knobs (may be set even when
+                # the orchestrator runs plain FCFS queues)
+                "fair_share": encode_fair_share(policy.fair_share),
+            },
+        )
+    if isinstance(policy, StaticDopPolicy):  # subclass of Fcfs — test first
+        return envelope(
+            "policy",
+            {"type": "static_dop", "dop": policy.dop,
+             "candidate_limit": policy.candidate_limit},
+        )
+    if isinstance(policy, FcfsPolicy):
+        return envelope(
+            "policy", {"type": "fcfs", "candidate_limit": policy.candidate_limit}
+        )
+    raise WireError(f"policy {type(policy).__name__} is not wire-serializable")
+
+
+def decode_policy(payload: Mapping[str, Any]) -> Any:
+    from repro.core.baselines import FcfsPolicy, StaticDopPolicy
+    from repro.core.scheduler import ElasticScheduler
+
+    p = expect(payload, "policy")
+    ptype = _field(p, "policy", "type")
+    if ptype == "elastic":
+        policy = ElasticScheduler(
+            depth=int(p.get("depth", 2)),
+            candidate_limit=int(p.get("candidate_limit", 128)),
+            estimate_units=str(p.get("estimate_units", "min")),
+            cache_dp=p.get("cache_dp"),
+        )
+        policy.eviction_search = str(p.get("eviction_search", "greedy"))
+        policy.use_dense = bool(p.get("use_dense", True))
+        policy.dense_backend = p.get("dense_backend")
+        policy.dop_floor = p.get("dop_floor")
+        fp = p.get("floor_pressure", math.inf)
+        policy.floor_pressure = math.inf if fp is None else float(fp)
+        policy.fair_share = decode_fair_share(p.get("fair_share"))
+        return policy
+    if ptype == "static_dop":
+        return StaticDopPolicy(
+            dop=int(p.get("dop", 4)),
+            candidate_limit=int(p.get("candidate_limit", 128)),
+        )
+    if ptype == "fcfs":
+        return FcfsPolicy(candidate_limit=int(p.get("candidate_limit", 128)))
+    raise WireError(f"unknown policy type {ptype!r}")
+
+
+# ---------------------------------------------------------------------------
+# convenience: uid index over live actions (commit-side re-binding)
+# ---------------------------------------------------------------------------
+
+
+def uid_index(actions: Sequence[Action]) -> Dict[int, Action]:
+    """uid -> live Action map used to re-bind decoded decisions."""
+    return {a.uid: a for a in actions}

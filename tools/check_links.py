@@ -1,0 +1,87 @@
+"""Markdown link checker for the docs CI job (stdlib only).
+
+Scans the given Markdown files (default: docs/*.md, README.md,
+ROADMAP.md, CHANGES.md) for inline links and validates:
+
+* relative file links resolve to an existing file or directory
+  (anchors are checked against the target's headings when the target
+  is a Markdown file);
+* in-page ``#anchor`` links match a heading in the same file.
+
+External links (http/https/mailto) are recorded but NOT fetched — CI
+must not flake on the network.  Exit status 1 on any broken link, with
+a ``file:line`` report per failure.
+
+Run:  python tools/check_links.py [files...]
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug: lowercase, spaces to dashes, drop
+    punctuation (approximation good enough for our headings)."""
+    slug = heading.strip().lower()
+    slug = re.sub(r"[`*_~]", "", slug)
+    slug = re.sub(r"[^\w\- ]", "", slug)
+    return re.sub(r"\s+", "-", slug.strip())
+
+
+def anchors_of(md: Path) -> set:
+    return {slugify(h) for h in HEADING_RE.findall(md.read_text())}
+
+
+def check_file(md: Path, root: Path) -> list:
+    errors = []
+    text = md.read_text()
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        line = text[: m.start()].count("\n") + 1
+        if target.startswith(EXTERNAL):
+            continue
+        path_part, _, anchor = target.partition("#")
+        if not path_part:  # in-page anchor
+            if anchor and slugify(anchor) not in anchors_of(md):
+                errors.append((md, line, target, "no such heading"))
+            continue
+        dest = (md.parent / path_part).resolve()
+        if not dest.exists():
+            errors.append((md, line, target, "missing file"))
+            continue
+        if root not in dest.parents and dest != root:
+            errors.append((md, line, target, "escapes the repository"))
+            continue
+        if anchor and dest.suffix == ".md" and slugify(anchor) not in anchors_of(dest):
+            errors.append((md, line, target, f"no such heading in {dest.name}"))
+    return errors
+
+
+def main(argv: list) -> int:
+    root = Path(__file__).resolve().parent.parent
+    if argv:
+        files = [Path(a).resolve() for a in argv]
+    else:
+        files = sorted((root / "docs").glob("*.md"))
+        files += [root / n for n in ("README.md", "ROADMAP.md", "CHANGES.md")
+                  if (root / n).exists()]
+    errors = []
+    checked = 0
+    for md in files:
+        checked += 1
+        errors.extend(check_file(md, root))
+    for md, line, target, why in errors:
+        print(f"{md.relative_to(root)}:{line}: broken link {target!r} ({why})")
+    print(f"# link check: {checked} file(s), {len(errors)} broken link(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
