@@ -322,6 +322,7 @@ def _run_shard_churn(
     shards: Optional[int], queue: int = 128, waves: int = 16,
     cores: int = 8, period_s: float = 4.0,
     plan_mode: str = "inline", transport: str = "loopback",
+    wire_codec: str = "json",
 ):
     """Steady-state churn over ``SHARD_POOLS`` independent pools, each
     smaller than its demand so a deep backlog persists: every wave
@@ -344,6 +345,7 @@ def _run_shard_churn(
     orch = Orchestrator(
         managers, loop=loop, policy=ElasticScheduler(), incremental=True,
         shards=shards, plan_mode=plan_mode, transport=transport,
+        wire_codec=wire_codec,
     )
     wave_no = [0]
 
@@ -369,9 +371,11 @@ def _run_shard_churn(
     orch.telemetry.shards = {}
     orch.telemetry.wire_encode_s = 0.0
     orch.telemetry.wire_decode_s = 0.0
+    orch.telemetry.wire_worker_codec_s = 0.0
     orch.telemetry.wire_transport_s = 0.0
     orch.telemetry.wire_bytes = 0
     orch.telemetry.wire_rounds = 0
+    orch.telemetry.wire_fallbacks = 0
     orch.run()
     n_events = len(orch.telemetry.records) - warm_records
     trace = sorted(
@@ -443,28 +447,62 @@ def run_shards(scale: float = 1.0, shards: int = 4) -> List[Dict[str, object]]:
     return rows
 
 
+#: Committed bytes-per-round baseline for the queue-128 fleet-churn
+#: remote suite (deltas + interning + list deltas).  The CI remote-smoke
+#: gate fails a regression above this — the pre-delta protocol shipped
+#: ~174KB/round, so the ceiling also enforces the >=5x reduction (it sits
+#: at ~10x).  Measured steady state: ~13.1KB/round with the json codec,
+#: ~8.4KB with binary; the headroom absorbs machine noise in round
+#: coalescing, not protocol regressions.
+REMOTE_BYTES_PER_ROUND_BASELINE = 18_000
+
+#: CI ceiling on remote-suite wire overhead relative to the modeled
+#: critical-path decision latency (us/event vs us/event).  Coordination
+#: cost must stay comparable to decision cost, never a multiple of it.
+#: Measured: ~4.2-5x with the json codec (down from ~23x before the
+#: delta/interning protocol) against the *sharded* critical path — a
+#: denominator that shrinks with every worker added, so the ratio
+#: understates the win; against the serial decision cost the same wire
+#: bill is ~1.9x.  The 7x ceiling catches any regression toward
+#: full-payload traffic while absorbing CI timing jitter.
+REMOTE_WIRE_LATENCY_RATIO = 7.0
+
+
 def run_remote(
-    scale: float = 1.0, shards: int = 4, transport: str = "loopback"
+    scale: float = 1.0, shards: int = 4, transport: str = "loopback",
+    wire_codec: str = "json",
 ) -> List[Dict[str, object]]:
     """Remote-plan rows on the queue-128 fleet churn: plan-over-wire vs
     the serial loop, trace identity, and the wire bill.  Serialization
-    overhead (client encode + client/worker codec + transport wall) is
-    charged to its own rows, never into the modeled critical-path
-    decision latency — the two costs answer different questions (what a
-    worker fleet's decisions cost vs what shipping them costs)."""
+    overhead is charged to its own rows, never into the modeled
+    critical-path decision latency — the two costs answer different
+    questions (what a worker fleet's decisions cost vs what shipping
+    them costs).  The wire bill is reported per component — client
+    encode, client decode, worker codec (the worker's own parse+encode
+    bill), transport wall, bytes/round — so the two sides' codec costs
+    are separate rows and never conflated (the old single row summed
+    client codec AND the worker-reported codec bill, which is how
+    1.1ms/event of client codec read as 2.07ms/event of 'wire')."""
     queue = 128
     waves = max(6, int(16 * scale))
     serial = _run_shard_churn(None, queue=queue, waves=waves)
     remote = _run_shard_churn(
-        shards, queue=queue, waves=waves, plan_mode="remote", transport=transport
+        shards, queue=queue, waves=waves, plan_mode="remote",
+        transport=transport, wire_codec=wire_codec,
     )
     identical = serial["trace"] == remote["trace"]
     wire = remote["wire"] or {
         "rounds": 0.0, "encode_s": 0.0, "decode_s": 0.0,
-        "transport_s": 0.0, "bytes": 0.0,
+        "worker_codec_s": 0.0, "transport_s": 0.0, "bytes": 0.0,
+        "fallbacks": 0.0,
     }
     events = max(1, remote["events"])
-    wire_us_per_event = (wire["encode_s"] + wire["decode_s"]) / events * 1e6
+    encode_us = wire["encode_s"] / events * 1e6
+    decode_us = wire["decode_s"] / events * 1e6
+    worker_codec_us = wire.get("worker_codec_s", 0.0) / events * 1e6
+    transport_us = wire["transport_s"] / events * 1e6
+    wire_us_per_event = encode_us + decode_us + worker_codec_us
+    bytes_per_round = wire["bytes"] / max(1.0, wire["rounds"])
     rows: List[Dict[str, object]] = [
         {
             "name": f"remote_churn_queue{queue}_serial",
@@ -488,9 +526,37 @@ def run_remote(
             "us_per_call": wire_us_per_event,
             "mean_act": "",
             "derived": (
-                f"us/event of encode+decode (codec both sides);"
-                f"transport_wall_s={wire['transport_s']:.4f};"
-                f"bytes_per_round={wire['bytes'] / max(1.0, wire['rounds']):.0f}"
+                f"us/event of client encode+decode plus worker codec;"
+                f"codec={wire_codec};"
+                f"bytes_per_round={bytes_per_round:.0f};"
+                f"fallbacks={wire.get('fallbacks', 0.0):.0f}"
+            ),
+        },
+        {
+            "name": f"remote_churn_queue{queue}_wire_client_encode",
+            "us_per_call": encode_us,
+            "mean_act": "",
+            "derived": "us/event; client-side request serialization",
+        },
+        {
+            "name": f"remote_churn_queue{queue}_wire_client_decode",
+            "us_per_call": decode_us,
+            "mean_act": "",
+            "derived": "us/event; client-side response parse + plan re-bind",
+        },
+        {
+            "name": f"remote_churn_queue{queue}_wire_worker_codec",
+            "us_per_call": worker_codec_us,
+            "mean_act": "",
+            "derived": "us/event; worker-reported parse+encode bill",
+        },
+        {
+            "name": f"remote_churn_queue{queue}_wire_transport",
+            "us_per_call": transport_us,
+            "mean_act": "",
+            "derived": (
+                f"us/event; dispatch->gather wall (worker compute+IPC,"
+                f" overlapped);transport_wall_s={wire['transport_s']:.4f}"
             ),
         },
         {
@@ -507,25 +573,49 @@ def check_remote(rows: List[Dict[str, object]]) -> None:
     """CI remote-smoke gates on the queue-128 fleet churn: (a) remote-
     plan launch traces bit-identical to the serial round loop; (b) the
     wire was actually exercised (a refactor that silently stops
-    sharding rounds must not pass vacuously)."""
+    sharding rounds must not pass vacuously); (c) total wire overhead
+    stays within REMOTE_WIRE_LATENCY_RATIO of the modeled critical-path
+    decision latency; (d) bytes/round stays under the committed
+    REMOTE_BYTES_PER_ROUND_BASELINE."""
     by_name = {str(r["name"]): r for r in rows}
     identical_row = by_name["remote_churn_queue128_traces_identical"]
     identical = float(identical_row["us_per_call"])  # type: ignore[arg-type]
     overhead_row = by_name["remote_churn_queue128_wire_overhead"]
+    wire_us = float(overhead_row["us_per_call"])  # type: ignore[arg-type]
+    critical_us = 0.0
     wire_rounds = 0.0
+    bytes_per_round = 0.0
     for r in rows:
         derived = str(r.get("derived", ""))
         if "wire_rounds=" in derived:
             wire_rounds = float(derived.split("wire_rounds=")[1].split(";")[0])
+            critical_us = float(r["us_per_call"])  # type: ignore[arg-type]
+        if "bytes_per_round=" in derived:
+            bytes_per_round = float(
+                derived.split("bytes_per_round=")[1].split(";")[0]
+            )
     print(
         f"# remote check: traces_identical={identical:.0f} "
         f"wire_rounds={wire_rounds:.0f} "
-        f"wire_overhead={float(overhead_row['us_per_call']):.1f}us/event"  # type: ignore[arg-type]
+        f"wire_overhead={wire_us:.1f}us/event "
+        f"critical={critical_us:.1f}us/event "
+        f"bytes_per_round={bytes_per_round:.0f}"
     )
     if identical != 1.0:
         raise SystemExit("remote-plan fleet-churn launch trace diverged from serial")
     if wire_rounds <= 0:
         raise SystemExit("remote suite never exercised the wire (no sharded rounds)")
+    if wire_us > REMOTE_WIRE_LATENCY_RATIO * critical_us:
+        raise SystemExit(
+            f"wire overhead {wire_us:.1f}us/event exceeds "
+            f"{REMOTE_WIRE_LATENCY_RATIO:.0f}x the critical-path decision "
+            f"latency {critical_us:.1f}us/event"
+        )
+    if bytes_per_round > REMOTE_BYTES_PER_ROUND_BASELINE:
+        raise SystemExit(
+            f"bytes/round {bytes_per_round:.0f} regressed above the committed "
+            f"baseline {REMOTE_BYTES_PER_ROUND_BASELINE}"
+        )
 
 
 def check_shards(rows: List[Dict[str, object]], shards: int = 4) -> None:

@@ -178,6 +178,11 @@ class PartitionQueue:
         self._order: List[Tuple[Tuple[float, int], Action]] = []
         self._stale = 0
         self.compactions = 0  # telemetry: full rebuilds of the merge
+        # bumped on every membership mutation (push / remove / detach /
+        # merge).  Tags are fixed at admission, so an unchanged version
+        # means ordered() yields the identical sequence — callers may
+        # cache derived views (the wire encoder does) against it.
+        self.version = 0
 
     # ------------------------------------------------------------------
     def __len__(self) -> int:
@@ -201,6 +206,7 @@ class PartitionQueue:
 
     # ------------------------------------------------------------------
     def push(self, action: Action, at_head: bool = False) -> None:
+        self.version += 1
         task = action.task_id
         sub = self._subs.setdefault(task, OrderedDict())
         if not self.fair:
@@ -244,6 +250,7 @@ class PartitionQueue:
         task = self._uid_task.pop(uid, None)
         if task is None:
             return None
+        self.version += 1
         action = self._subs[task].pop(uid)
         key = self._key.pop(uid)
         if served and self.fair:
@@ -304,6 +311,7 @@ class PartitionQueue:
         sub = self._subs.pop(task_id, None)
         if not sub:
             return None
+        self.version += 1
         entries: List[Tuple[Tuple[float, int], Action]] = []
         for uid, action in sub.items():
             self._uid_task.pop(uid, None)
@@ -325,6 +333,7 @@ class PartitionQueue:
         monotone max, so neither side's clock moves backward — and the
         task's finish chain resumes from the later of the two tags."""
         self.sync_vtime(shard.vtime)
+        self.version += 1
         sub = self._subs.setdefault(shard.task_id, OrderedDict())
         for key, action in shard.entries:
             if action.uid in self._uid_task:

@@ -25,6 +25,10 @@ from typing import Dict, Hashable, List, Optional, Sequence
 from repro.core.action import Action
 from repro.core.dparrange import BasicDPOperator, DPOperator
 
+#: Sentinel distinguishing "key absent" from "key holds None" in
+#: snapshot_delta's per-key comparison.
+_MISSING = object()
+
 
 @dataclass
 class Allocation:
@@ -286,6 +290,45 @@ class ResourceManager:
         task_use = dict(state.get("task_use", {}))  # type: ignore[arg-type]
         m._task_use = {str(k): int(v) for k, v in task_use.items()}
         return m
+
+    # ------------------------------------------------------------------
+    # structural snapshot deltas (wire twins of snapshot_state)
+    # ------------------------------------------------------------------
+    @classmethod
+    def snapshot_delta(
+        cls, prev: Dict[str, object], cur: Dict[str, object]
+    ) -> Dict[str, object]:
+        """Structural diff between two :meth:`snapshot_state` payloads.
+
+        The base family diffs shallowly, per top-level key: ``set``
+        carries keys whose value changed (or appeared), ``del`` lists
+        keys that vanished.  Subclasses with deep state (per-node core
+        sets, per-allocator chunk maps) override this — and
+        :meth:`apply_delta` — so the wire carries what *changed*, not
+        the fleet.  Contract: ``apply_delta(prev, snapshot_delta(prev,
+        cur)) == cur`` exactly (the receiver fingerprint-verifies it)."""
+        delta: Dict[str, object] = {}
+        changed = {k: v for k, v in cur.items() if prev.get(k, _MISSING) != v}
+        gone = [k for k in prev if k not in cur]
+        if changed:
+            delta["set"] = changed
+        if gone:
+            delta["del"] = gone
+        return delta
+
+    @classmethod
+    def apply_delta(
+        cls, base: Dict[str, object], delta: Dict[str, object]
+    ) -> Dict[str, object]:
+        """Rebuild a full :meth:`snapshot_state` payload from a cached
+        base plus a :meth:`snapshot_delta` diff (pure — the base dict is
+        not mutated; an empty delta returns an equal copy)."""
+        state = dict(base)
+        for k, v in delta.get("set", {}).items():  # type: ignore[union-attr]
+            state[k] = v
+        for k in delta.get("del", []):  # type: ignore[union-attr]
+            state.pop(k, None)
+        return state
 
     # ------------------------------------------------------------------
     # lifetime hooks

@@ -164,6 +164,48 @@ class CpuManager(ResourceManager):
         return m
 
     # ------------------------------------------------------------------
+    # structural snapshot deltas (per-node: a round touches few nodes)
+    # ------------------------------------------------------------------
+    @classmethod
+    def snapshot_delta(cls, prev: dict, cur: dict) -> dict:
+        """Per-node diff: node ORDER is part of the state (``_bind``'s
+        tie-break), so nodes are addressed by position.  Each changed
+        node contributes only its changed keys (usually ``free_cores`` /
+        ``free_mem_gb`` / ``trajectories``); a topology change (node
+        count) falls back to shipping the full node list."""
+        pn, cn = prev.get("nodes", []), cur.get("nodes", [])
+        delta = super().snapshot_delta(
+            {k: v for k, v in prev.items() if k != "nodes"},
+            {k: v for k, v in cur.items() if k != "nodes"},
+        )
+        if len(pn) != len(cn):
+            delta.setdefault("set", {})["nodes"] = cn
+            return delta
+        nodes: dict = {}
+        for i, (p, c) in enumerate(zip(pn, cn)):
+            if p != c:
+                nodes[str(i)] = {k: v for k, v in c.items() if p.get(k) != v}
+        if nodes:
+            delta["nodes"] = nodes
+        return delta
+
+    @classmethod
+    def apply_delta(cls, base: dict, delta: dict) -> dict:
+        state = super().apply_delta(base, delta)
+        patches = delta.get("nodes")
+        if patches:
+            nodes = [dict(n) for n in state.get("nodes", [])]
+            for idx, patch in patches.items():
+                i = int(idx)
+                if not 0 <= i < len(nodes):
+                    from repro.core.wire import WireError
+
+                    raise WireError(f"cpu snapshot delta patches node {i} of {len(nodes)}")
+                nodes[i].update(patch)
+            state["nodes"] = nodes
+        return state
+
+    # ------------------------------------------------------------------
     # trajectory lifetime: bind node + pin memory (Breakdown keeps state)
     # ------------------------------------------------------------------
     def _bind(self, action: Action) -> Optional[str]:

@@ -362,6 +362,108 @@ class GpuManager(ResourceManager):
         return m
 
     # ------------------------------------------------------------------
+    # structural snapshot deltas (chunk-level: the free map dominates)
+    # ------------------------------------------------------------------
+    @classmethod
+    def snapshot_delta(cls, prev: dict, cur: dict) -> dict:
+        """Chunk-level diff.  The allocator free/busy/cache maps are the
+        bytes-dominant part of a GPU snapshot and a round touches only
+        the chunks it (de)allocated, so each allocator contributes
+        per-level ``add``/``rm`` start lists (free), row add/removals
+        (busy), and keyed upserts (cache).  Node/service specs are
+        immutable and never re-travel; an allocator-set change (topology)
+        falls back to the full map."""
+        delta = super().snapshot_delta(
+            {k: v for k, v in prev.items() if k != "allocators"},
+            {k: v for k, v in cur.items() if k != "allocators"},
+        )
+        pa, ca = prev.get("allocators", {}), cur.get("allocators", {})
+        if set(pa) != set(ca):
+            delta.setdefault("set", {})["allocators"] = ca
+            return delta
+        allocs: dict = {}
+        for name, c in ca.items():
+            p = pa[name]
+            if p == c:
+                continue
+            ad: dict = {}
+            free: dict = {}
+            for lvl in set(p.get("free", {})) | set(c.get("free", {})):
+                ps = set(p.get("free", {}).get(lvl, ()))
+                cs = set(c.get("free", {}).get(lvl, ()))
+                if ps != cs:
+                    lv: dict = {}
+                    if cs - ps:
+                        lv["add"] = sorted(cs - ps)
+                    if ps - cs:
+                        lv["rm"] = sorted(ps - cs)
+                    free[lvl] = lv
+            if free:
+                ad["free"] = free
+            pb = {(s, l) for s, l in p.get("busy", ())}
+            cb = {(s, l) for s, l in c.get("busy", ())}
+            if pb != cb:
+                bd: dict = {}
+                if cb - pb:
+                    bd["add"] = [[s, l] for s, l in sorted(cb - pb)]
+                if pb - cb:
+                    bd["rm"] = [[s, l] for s, l in sorted(pb - cb)]
+                ad["busy"] = bd
+            pc = {(r[0], r[1]): r for r in p.get("cache", ())}
+            cc = {(r[0], r[1]): r for r in c.get("cache", ())}
+            add = [r for k, r in sorted(cc.items()) if pc.get(k) != r]
+            rm = [[s, l] for s, l in sorted(pc) if (s, l) not in cc]
+            if add or rm:
+                cd: dict = {}
+                if add:
+                    cd["add"] = add
+                if rm:
+                    cd["rm"] = rm
+                ad["cache"] = cd
+            if ad:
+                allocs[name] = ad
+        if allocs:
+            delta["alloc"] = allocs
+        return delta
+
+    @classmethod
+    def apply_delta(cls, base: dict, delta: dict) -> dict:
+        state = super().apply_delta(base, delta)
+        patches = delta.get("alloc")
+        if not patches:
+            return state
+        allocators = {n: dict(a) for n, a in state.get("allocators", {}).items()}
+        for name, ad in patches.items():
+            if name not in allocators:
+                from repro.core.wire import WireError
+
+                raise WireError(f"gpu snapshot delta patches unknown allocator {name!r}")
+            a = allocators[name]
+            if "free" in ad:
+                free = {lvl: list(starts) for lvl, starts in a.get("free", {}).items()}
+                for lvl, lv in ad["free"].items():
+                    starts = set(free.get(lvl, ()))
+                    starts |= set(lv.get("add", ()))
+                    starts -= set(lv.get("rm", ()))
+                    free[lvl] = sorted(starts)
+                a["free"] = free
+            if "busy" in ad:
+                busy = {(s, l) for s, l in a.get("busy", ())}
+                busy |= {(s, l) for s, l in ad["busy"].get("add", ())}
+                busy -= {(s, l) for s, l in ad["busy"].get("rm", ())}
+                a["busy"] = [[s, l] for s, l in sorted(busy)]
+            if "cache" in ad:
+                cache = {(r[0], r[1]): r for r in a.get("cache", ())}
+                for r in ad["cache"].get("add", ()):
+                    cache[(r[0], r[1])] = r
+                for s, l in ad["cache"].get("rm", ()):
+                    cache.pop((s, l), None)
+                a["cache"] = [r for _, r in sorted(cache.items())]
+            allocators[name] = a
+        state["allocators"] = allocators
+        return state
+
+    # ------------------------------------------------------------------
     def begin_admission(self) -> object:
         return [0, 0, 0, 0]  # accumulated chunk-consumption multiset
 

@@ -161,6 +161,7 @@ class Orchestrator:
         shards: Optional[int] = None,
         plan_mode: str = "inline",
         transport: str = "loopback",
+        wire_codec: str = "json",
     ) -> None:
         self.loop = loop or EventLoop()
         self.history = DurationHistory()
@@ -207,11 +208,14 @@ class Orchestrator:
         # pick from the measured plan-cost EWMA), or "remote" (each
         # shard's plan phase in a separate worker process behind the
         # ``transport`` — "loopback" plans in-process through the full
-        # wire codecs, "process" spawns real workers).  Plans are
-        # identical in every mode.
+        # wire codecs, "process" spawns real workers; ``wire_codec`` —
+        # "binary" compact frames or "json" v1 text).  Plans are
+        # identical in every mode and codec.
         self.shards = shards
         self._executor = (
-            RoundExecutor(self, shards, plan_mode, transport=transport)
+            RoundExecutor(
+                self, shards, plan_mode, transport=transport, wire_codec=wire_codec
+            )
             if shards is not None
             else None
         )

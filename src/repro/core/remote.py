@@ -11,41 +11,68 @@ plan phase out of the orchestrator's process:
   (:func:`repro.core.shards.plan_partition` — one implementation, zero
   drift), and returns serialized :class:`~repro.core.shards.PartitionPlan`
   payloads.  Stateless across requests except for caches keyed by
-  content fingerprint (snapshot deltas, policy config, duration
-  history) — a worker can be restarted at any time and the next request
-  re-primes it.
+  content fingerprint (snapshot bases for structural deltas, interned
+  action payloads, policy config, duration history) — every cache is a
+  byte-budget LRU, and a worker can be restarted at any time: the next
+  request that names state it no longer holds gets a *typed* error and
+  the client re-primes it with full content.
 * :class:`ShardTransport` — the byte-level boundary, deliberately tiny
-  (``submit``/``recv``/``close`` over UTF-8 JSON): anything that can
-  move bytes (a pipe, a socket, an RPC stack) can carry shards.
+  (``submit``/``recv``/``close`` over opaque byte frames): anything that
+  can move bytes (a pipe, a socket, an RPC stack) can carry shards.
   :class:`LoopbackTransport` runs the worker in-process but pushes every
   payload through the full encode/decode path — the determinism rail
   proving wire fidelity without process overhead;
   :class:`ProcessTransport` runs the worker in a real OS process over a
   ``multiprocessing`` pipe.
 * :class:`RemoteRoundClient` — the orchestrator side: builds per-shard
-  requests (suppressing unchanged snapshots/policy/history as
-  ``{"ref": fingerprint}`` deltas), dispatches to every worker, gathers,
-  and re-binds decoded decisions to the **live** Action objects for the
-  unchanged single-threaded commit.  Conflict rollback and the retry
-  rail are exactly the in-process ones — the commit phase cannot tell
-  where a plan was computed.
+  requests, dispatches to every worker, gathers, and re-binds decoded
+  decisions to the **live** Action objects for the unchanged
+  single-threaded commit.  Conflict rollback and the retry rail are
+  exactly the in-process ones — the commit phase cannot tell where a
+  plan was computed.
+
+Three mechanisms keep the wire bill proportional to *what changed*,
+not to fleet size (all additive within ``WIRE_VERSION`` 1 — a worker
+still accepts the plain full-payload forms):
+
+* **structural snapshot deltas** — an unchanged snapshot travels as
+  ``{"ref": fp}``; a changed one travels as a ``snapshot_delta``
+  envelope (per-manager structural diff, fingerprint-verified on
+  reconstruction) whenever the worker holds the base, and only falls
+  back to the full payload when it does not;
+* **compact binary framing** — requests/responses are
+  :func:`repro.core.wire.encode_frame` byte frames; ``codec="binary"``
+  packs tag/varint values with frame-level string interning, while
+  ``codec="json"`` keeps the UTF-8 JSON text path as the v1
+  compatibility reference (a worker answers in the codec it was asked
+  in — the first frame byte says which).  json is the default: the C
+  ``json`` module costs ~2x less CPU per event than the pure-Python
+  binary packer, while binary ships ~1.6x fewer bytes — pick binary
+  when the transport, not the codec, is the bottleneck;
+* **cross-round interning** — action payloads travel once as
+  ``{"idef": fp, "val": ...}`` and afterwards as ``{"iref": fp}``
+  references into a bounded LRU intern table the client mirrors
+  deterministically (same budget, same touch order).  A missed
+  reference — worker restart, budget divergence — produces a typed
+  ``stale_intern`` error and one full re-send, never a wrong plan.
 
 Accounting is honest by construction: the modeled critical-path
 decision latency stays ``max(per-shard plan) + commit`` with per-shard
 plan cost *measured on the worker* (what a dedicated worker pays), and
-every serialization cost — client encode, client decode + worker codec,
-transport wall, bytes — is recorded separately in
+every serialization cost — client encode, client decode, worker codec,
+transport wall, bytes, fallback re-sends — is recorded separately in
 ``Telemetry.wire_*`` so wire overhead is never laundered into decision
-latency (``bench_scheduler --suite remote`` reports both, side by
-side).
+latency (``bench_scheduler --suite remote`` reports each component,
+side by side).
 
 No pickle crosses the boundary: requests and responses are
-:func:`repro.core.wire.dumps` strings (Python-dialect JSON), moved as
-UTF-8 bytes.
+:func:`repro.core.wire.encode_frame` byte frames (JSON text or the
+tagged binary codec — both self-describing).
 """
 
 from __future__ import annotations
 
+import math
 import time
 from typing import TYPE_CHECKING, Any, Dict, List, Optional, Sequence, Tuple
 
@@ -55,6 +82,32 @@ from repro.core.shards import PartitionPlan, plan_partition
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from repro.core.orchestrator import Orchestrator
+
+#: Byte budget of the worker-side caches (intern table, snapshot bases)
+#: and of the client's per-worker intern mirror.  Client and worker
+#: MUST agree on the intern budget for the mirror to predict evictions
+#: exactly; a divergence is recoverable (typed error + full re-send)
+#: but costs a round trip.
+CACHE_BUDGET_BYTES = 8 << 20
+
+#: Typed error codes the client recovers from by re-sending that
+#: worker's request with full content (cleared fingerprint/intern
+#: state).  Anything else is a real protocol failure and raises.
+RECOVERABLE_CODES = frozenset(
+    {"stale_ref", "stale_base", "delta_mismatch", "stale_intern"}
+)
+
+
+class ProtocolStateError(wire.WireError):
+    """The worker lacks state the request referenced (evicted cache,
+    restarted worker, stale base).  Carries a machine-readable ``code``
+    so the client can distinguish "re-send full content" from a real
+    schema violation."""
+
+    def __init__(self, code: str, message: str, **extra: Any) -> None:
+        super().__init__(message)
+        self.code = code
+        self.extra = extra
 
 
 # ---------------------------------------------------------------------------
@@ -68,23 +121,34 @@ class RemoteShardWorker:
     process for :class:`ProcessTransport`, a remote host once an RPC
     transport exists).
 
-    Per-request inputs arrive either in full or as ``{"ref": fp}``
-    references to content the worker already holds (snapshot states,
-    policy config, duration history).  Snapshot *states* are cached,
+    Per-request inputs arrive in full, as ``{"ref": fp}`` references,
+    as ``snapshot_delta`` structural diffs against a cached base, or as
+    ``{"iref": fp}`` intern references.  Snapshot *states* are cached,
     but a fresh plan-capable manager is rebuilt from the cached state on
     every request — planning mutates its managers (admission cursors,
     the CPU manager's trajectory binding), so decoded snapshots are
-    single-use exactly like in-process ones.
-    """
+    single-use exactly like in-process ones.  All caches are byte-budget
+    LRUs (:class:`~repro.core.wire.LruBytes`): a long run cannot grow
+    worker memory without bound, and an eviction surfaces as a typed
+    error the client answers with a full re-send."""
 
-    def __init__(self) -> None:
+    def __init__(self, cache_budget: int = CACHE_BUDGET_BYTES) -> None:
         self._policy: Optional[Any] = None
         self._policy_fp: Optional[str] = None
         self._fair_share: Optional[Any] = None
         self._fair_share_fp: Optional[str] = None
         self._history_fp: Optional[str] = None
         self._history_avg: Dict[str, float] = {}
-        self._snap_cache: Dict[str, Tuple[str, Dict[str, Any]]] = {}
+        # rtype -> (fingerprint, full snapshot envelope): the delta base
+        self._snap_cache = wire.LruBytes(cache_budget)
+        # fingerprint -> resolved action payload (cross-round interning)
+        self._interns = wire.LruBytes(cache_budget)
+        # (list fp, [(member fp, Action)]): the executing-list delta
+        # base — sized by the live running set, so inherently bounded
+        self._exec_cache: Optional[Tuple[str, List[Tuple[str, Action]]]] = None
+        # part -> (list fp, [(member fp, Action)]): waiting-list delta
+        # bases, each replaced wholesale — bounded by the live queues
+        self._part_cache: Dict[str, Tuple[str, List[Tuple[str, Action]]]] = {}
         # dumps() cost of the previous response, folded into the NEXT
         # response's codec_s (we cannot time a serialization inside the
         # payload it produces; carrying it forward keeps the aggregate
@@ -92,24 +156,171 @@ class RemoteShardWorker:
         self._carry_dump_s = 0.0
 
     # ------------------------------------------------------------------
-    def handle(self, request: str) -> str:
-        """One plan round-trip: wire string in, wire string out.  Any
+    def handle_bytes(self, request: bytes) -> bytes:
+        """One plan round-trip: byte frame in, byte frame out, answered
+        in the codec the request arrived in.  Any
         :class:`~repro.core.wire.WireError` (or other failure) is
         returned as an ``error`` payload rather than raised — the
-        transport stays alive and the client decides what to do."""
+        transport stays alive and the client decides what to do; a
+        :class:`ProtocolStateError` additionally carries its ``code``
+        so the client knows a full re-send recovers it."""
+        codec = wire.frame_codec(request)
         try:
             t0 = time.perf_counter()
-            payload = wire.loads(request)
+            payload = wire.decode_frame(request)
             parse_s = time.perf_counter() - t0
             body = self._handle(payload, parse_s)
             t1 = time.perf_counter()
-            blob = wire.dumps(body)
+            blob = wire.encode_frame(body, codec)
             self._carry_dump_s += time.perf_counter() - t1
             return blob
         except Exception as e:  # noqa: BLE001 - protocol boundary
-            return wire.dumps(
-                wire.envelope("error", {"error": f"{type(e).__name__}: {e}"})
+            err: Dict[str, Any] = {"error": f"{type(e).__name__}: {e}"}
+            if isinstance(e, ProtocolStateError):
+                err["code"] = e.code
+                err.update(e.extra)
+            return wire.encode_frame(wire.envelope("error", err), codec)
+
+    def handle(self, request: str) -> str:
+        """String-frame convenience wrapper (UTF-8 JSON in and out)."""
+        return self.handle_bytes(request.encode("utf-8")).decode("utf-8")
+
+    # ------------------------------------------------------------------
+    def _snapshot(self, rtype: str, snap: Any) -> Dict[str, Any]:
+        """Materialize one full snapshot envelope from whichever form it
+        arrived in (full / ``{"ref": fp}`` / ``snapshot_delta``), and
+        keep the cache pointing at the newest base."""
+        if isinstance(snap, dict) and "ref" in snap:
+            cached = self._snap_cache.get(rtype)
+            if cached is None or cached[0] != snap["ref"]:
+                raise ProtocolStateError(
+                    "stale_ref",
+                    f"snapshot ref for {rtype!r} does not match cached state",
+                )
+            return cached[1]
+        if isinstance(snap, dict) and snap.get("kind") == "snapshot_delta":
+            d = wire.expect(snap, "snapshot_delta")
+            base_fp = d.get("base")
+            cached = self._snap_cache.get(rtype)
+            if cached is None or cached[0] != base_fp:
+                raise ProtocolStateError(
+                    "stale_base",
+                    f"snapshot delta base for {rtype!r} does not match cached state",
+                )
+            try:
+                full = wire.apply_snapshot_delta(d, cached[1])
+            except wire.WireError as e:
+                # the base is unusable (corrupt or mis-diffed) — drop it
+                # so the recovery round re-primes from a full snapshot
+                self._snap_cache.pop(rtype)
+                raise ProtocolStateError("delta_mismatch", str(e)) from None
+            self._snap_cache.put(
+                rtype, (str(d.get("fp")), full), wire.payload_nbytes(full)
             )
+            return full
+        self._snap_cache.put(
+            rtype, (wire.fingerprint(snap), snap), wire.payload_nbytes(snap)
+        )
+        return snap
+
+    def _resolve_action(self, node: Any, missing: List[str]) -> Optional[Action]:
+        """One wire entry of an action list: an intern reference (table
+        lookup; a miss collects into ``missing``), an intern definition
+        (decode once, cache the Action under its fingerprint with the
+        sender's byte accounting), or a plain envelope (legacy form —
+        decoded fresh, never cached)."""
+        if isinstance(node, dict):
+            if "iref" in node and len(node) == 1:
+                a = self._interns.get(str(node["iref"]))
+                if a is None:
+                    missing.append(str(node["iref"]))
+                return a
+            if "idef" in node and "val" in node:
+                a = wire.decode_action(node["val"])
+                nbytes = node.get("n") or wire.payload_nbytes(node["val"])
+                self._interns.put(str(node["idef"]), a, int(nbytes))
+                return a
+        return wire.decode_action(node)
+
+    def _exec_pairs(
+        self, nodes: Sequence[Any], missing: List[str]
+    ) -> List[Tuple[str, Optional[Action]]]:
+        """Resolve action nodes into (fingerprint, Action) pairs — the
+        fingerprint rides the intern envelope when there is one and is
+        computed only for plain legacy envelopes."""
+        pairs: List[Tuple[str, Optional[Action]]] = []
+        for node in nodes:
+            a = self._resolve_action(node, missing)
+            if isinstance(node, dict) and "iref" in node and len(node) == 1:
+                fp = str(node["iref"])
+            elif isinstance(node, dict) and "idef" in node:
+                fp = str(node["idef"])
+            else:
+                fp = wire.fingerprint(node)
+            pairs.append((fp, a))
+        return pairs
+
+    def _resolve_list(
+        self,
+        node: Any,
+        cached: Optional[Tuple[str, List[Tuple[str, Action]]]],
+        missing: List[str],
+        what: str,
+    ) -> Tuple[List[Optional[Action]], Any]:
+        """One action list (executing set or a partition's waiting
+        queue) in any wire form: legacy plain list, ``ref`` (unchanged),
+        ``delta`` (removals by member fingerprint + positional inserts
+        into the kept order), or ``full``.  Returns (actions, commit):
+        the caller applies ``commit`` to its cache slot only after the
+        request's atomic missing-intern check passes, so a failed
+        request never leaves a half-resolved list behind — ``False``
+        means drop the slot (legacy form), ``None`` means keep it.
+
+        A reconstructed delta is verified against the sender's list
+        fingerprint; a mismatch is a typed, recoverable error — the
+        client re-sends full content, never plans on a wrong queue.
+        These caches are bounded by construction: each slot holds
+        exactly one live list (replaced wholesale), never history."""
+        if isinstance(node, list):
+            # legacy form: a plain per-action list, uncached
+            return [self._resolve_action(a, missing) for a in node], False
+        if not isinstance(node, dict):
+            raise wire.WireError(f"plan_request: malformed {what} entry")
+        kind = str(node.get("k", ""))
+        if kind == "ref":
+            if cached is None or cached[0] != str(node.get("fp")):
+                raise ProtocolStateError(
+                    "stale_ref", f"{what} ref does not match cached list"
+                )
+            return [a for _, a in cached[1]], None
+        if kind == "full":
+            pairs = self._exec_pairs(node.get("items", []), missing)
+            if missing:
+                return [a for _, a in pairs], None
+            return [a for _, a in pairs], (str(node.get("fp")), pairs)
+        if kind == "delta":
+            if cached is None or cached[0] != str(node.get("base")):
+                raise ProtocolStateError(
+                    "stale_base", f"{what} delta base does not match cached list"
+                )
+            inserts = [
+                (int(pos), self._exec_pairs([n], missing)[0])
+                for pos, n in node.get("ins", [])
+            ]
+            if missing:
+                return [], None
+            rm = {str(f) for f in node.get("rm", [])}
+            pairs = [(f, a) for f, a in cached[1] if f not in rm]
+            for pos, pair in inserts:  # ascending: client emits in order
+                pairs.insert(pos, pair)
+            fp = str(node.get("fp"))
+            if wire.list_fingerprint([f for f, _ in pairs]) != fp:
+                raise ProtocolStateError(
+                    "delta_mismatch",
+                    f"{what} delta did not reproduce the sender's list",
+                )
+            return [a for _, a in pairs], (fp, pairs)
+        raise wire.WireError(f"plan_request: unknown {what} form {kind!r}")
 
     def _handle(self, payload: Any, parse_s: float = 0.0) -> Dict[str, Any]:
         req = wire.expect(payload, "plan_request")
@@ -119,20 +330,28 @@ class RemoteShardWorker:
             self._policy = wire.decode_policy(req["policy"])
             self._policy_fp = wire.fingerprint(req["policy"])
         if self._policy is None:
-            raise wire.WireError("plan_request before any policy was sent")
+            # a restarted worker sees a policy-omitted request: typed
+            # and recoverable — the client's full re-send carries it
+            raise ProtocolStateError(
+                "stale_ref", "plan_request before any policy was sent"
+            )
 
         fs = req.get("fair_share", {"ref": self._fair_share_fp})
         if not (isinstance(fs, dict) and "ref" in fs):
             self._fair_share = wire.decode_fair_share(fs)
             self._fair_share_fp = wire.fingerprint(fs)
         elif fs["ref"] != self._fair_share_fp:
-            raise wire.WireError("fair_share ref does not match cached state")
+            raise ProtocolStateError(
+                "stale_ref", "fair_share ref does not match cached state"
+            )
 
         hist = req.get("history")
         if hist is not None:
             if isinstance(hist, dict) and "ref" in hist:
                 if hist["ref"] != self._history_fp:
-                    raise wire.WireError("history ref does not match cached state")
+                    raise ProtocolStateError(
+                        "stale_ref", "history ref does not match cached state"
+                    )
             else:
                 self._history_avg = {
                     str(k): float(v) for k, v in hist.get("avg", {}).items()
@@ -147,24 +366,61 @@ class RemoteShardWorker:
             if history is not None:
                 history._avg = dict(self._history_avg)
 
+        if req.get("reset_interns"):
+            # recovery round: the client cleared its mirror, so drop the
+            # table too — both sides restart from the same empty state
+            self._interns.clear()
+            self._exec_cache = None
+            self._part_cache.clear()
+
         managers: Dict[str, Any] = {}
         for rtype, snap in req.get("snapshots", {}).items():
-            if isinstance(snap, dict) and "ref" in snap:
-                cached = self._snap_cache.get(rtype)
-                if cached is None or cached[0] != snap["ref"]:
-                    raise wire.WireError(
-                        f"snapshot ref for {rtype!r} does not match cached state"
-                    )
-                snap = cached[1]
-            else:
-                self._snap_cache[rtype] = (wire.fingerprint(snap), snap)
-            managers[str(rtype)] = wire.decode_snapshot(snap)
+            managers[str(rtype)] = wire.decode_snapshot(
+                self._snapshot(str(rtype), snap)
+            )
 
-        executing = [wire.decode_action(a) for a in req.get("executing", [])]
-        waiting_by_part: Dict[str, List[Action]] = {
-            str(p["part"]): [wire.decode_action(a) for a in p.get("waiting", [])]
-            for p in req.get("partitions", [])
-        }
+        # resolve interned actions BEFORE planning over any of them: a
+        # stale reference must fail the whole request atomically (one
+        # typed error naming every missing payload), never plan with a
+        # partial queue.  The intern table holds *decoded* Action
+        # objects, so a referenced action costs a dict lookup instead of
+        # a full decode — and its ``_dp_durs`` duration memo persists
+        # across the rounds it stays queued, exactly as a live action's
+        # does on the serial path (the memo depends only on immutable
+        # fields, so reuse is sound; any mutable-field change produces a
+        # new fingerprint and a fresh decode).
+        missing: List[str] = []
+        executing, exec_commit = self._resolve_list(
+            req.get("executing", []), self._exec_cache, missing, "executing"
+        )
+        waiting_by_part: Dict[str, List[Action]] = {}
+        part_commits: List[Tuple[str, Any]] = []
+        for p in req.get("partitions", []):
+            part = str(p["part"])
+            acts, commit = self._resolve_list(
+                p.get("waiting", []),
+                self._part_cache.get(part),
+                missing,
+                f"partition {part!r}",
+            )
+            waiting_by_part[part] = acts
+            if commit is not None:
+                part_commits.append((part, commit))
+        if missing:
+            raise ProtocolStateError(
+                "stale_intern",
+                f"{len(missing)} interned payload(s) not in table",
+                missing=sorted(set(missing)),
+            )
+        if exec_commit is False:
+            self._exec_cache = None
+        elif exec_commit is not None:
+            self._exec_cache = exec_commit
+        for part, commit in part_commits:
+            if commit is False:
+                self._part_cache.pop(part, None)
+            else:
+                self._part_cache[part] = commit
         codec_s = time.perf_counter() - t_codec
 
         now = float(req.get("now", 0.0))
@@ -210,39 +466,45 @@ class ShardTransport:
     """Byte-boundary to one shard worker.
 
     The contract is a single in-flight request per transport:
-    ``submit(request)`` hands the worker a wire string, ``recv()``
+    ``submit(request)`` hands the worker a byte frame, ``recv()``
     blocks for its response.  The client overlaps workers by submitting
     to all transports before receiving from any.  Implementations move
-    UTF-8 JSON only — never pickled objects — so an RPC transport can
-    slot in without touching the protocol."""
+    opaque byte frames only — never pickled objects — so an RPC
+    transport can slot in without touching the protocol."""
 
-    def submit(self, request: str) -> None:  # pragma: no cover - interface
+    def submit(self, request: bytes) -> None:  # pragma: no cover - interface
         raise NotImplementedError
 
-    def recv(self) -> str:  # pragma: no cover - interface
+    def recv(self) -> bytes:  # pragma: no cover - interface
         raise NotImplementedError
 
     def close(self) -> None:  # pragma: no cover - interface
         pass
 
+    @staticmethod
+    def _as_bytes(request) -> bytes:
+        """Coerce a str frame to UTF-8 (JSON text is a legal frame)."""
+        return request.encode("utf-8") if isinstance(request, str) else request
+
 
 class LoopbackTransport(ShardTransport):
     """In-process worker behind the full wire codec path.
 
-    Every request and response crosses :func:`repro.core.wire.dumps` /
-    :func:`~repro.core.wire.loads` exactly as over a real transport —
-    loopback proves plan-over-wire fidelity (and measures serialization
-    cost) deterministically, without process scheduling noise.  The
-    worker computes during :meth:`submit`; :meth:`recv` just returns."""
+    Every request and response crosses :func:`repro.core.wire.
+    encode_frame` / :func:`~repro.core.wire.decode_frame` exactly as
+    over a real transport — loopback proves plan-over-wire fidelity
+    (and measures serialization cost) deterministically, without
+    process scheduling noise.  The worker computes during
+    :meth:`submit`; :meth:`recv` just returns."""
 
     def __init__(self) -> None:
         self._worker = RemoteShardWorker()
-        self._response: Optional[str] = None
+        self._response: Optional[bytes] = None
 
-    def submit(self, request: str) -> None:
-        self._response = self._worker.handle(request)
+    def submit(self, request: bytes) -> None:
+        self._response = self._worker.handle_bytes(self._as_bytes(request))
 
-    def recv(self) -> str:
+    def recv(self) -> bytes:
         resp, self._response = self._response, None
         if resp is None:
             raise RuntimeError("recv() without a submitted request")
@@ -262,15 +524,17 @@ def _worker_main(conn) -> None:
             break
         if not blob:
             break
-        conn.send_bytes(worker.handle(blob.decode("utf-8")).encode("utf-8"))
+        conn.send_bytes(worker.handle_bytes(blob))
     conn.close()
 
 
 class ProcessTransport(ShardTransport):
     """A shard worker in a separate OS process over a multiprocessing
-    pipe.  Frames are UTF-8 wire strings (``send_bytes``/``recv_bytes``
-    — no object pickling); an empty frame is the shutdown signal.
-    Workers are daemonic: they can never outlive the orchestrator."""
+    pipe.  Frames are opaque bytes (``send_bytes``/``recv_bytes`` — no
+    object pickling); an empty frame is the shutdown signal (a real
+    frame is never empty: JSON text has at least one byte and binary
+    frames start with the magic byte).  Workers are daemonic: they can
+    never outlive the orchestrator."""
 
     def __init__(self, start_method: Optional[str] = None) -> None:
         import multiprocessing as mp
@@ -285,11 +549,11 @@ class ProcessTransport(ShardTransport):
         self._proc.start()
         child.close()
 
-    def submit(self, request: str) -> None:
-        self._conn.send_bytes(request.encode("utf-8"))
+    def submit(self, request: bytes) -> None:
+        self._conn.send_bytes(self._as_bytes(request))
 
-    def recv(self) -> str:
-        return self._conn.recv_bytes().decode("utf-8")
+    def recv(self) -> bytes:
+        return self._conn.recv_bytes()
 
     def close(self) -> None:
         try:
@@ -310,26 +574,72 @@ _TRANSPORTS = {"loopback": LoopbackTransport, "process": ProcessTransport}
 # ---------------------------------------------------------------------------
 
 
+def _nk(x: Any) -> Any:
+    """NaN-stable cache-key atom (NaN != NaN would defeat every hit)."""
+    return None if isinstance(x, float) and math.isnan(x) else x
+
+
 class RemoteRoundClient:
     """Drives one remote plan phase per sharded round.
 
     Owns one transport (one worker) per shard index, created lazily.
-    Tracks, per worker, the fingerprints of the policy config, fairness
-    config, duration history, and each manager snapshot it last sent, so
-    unchanged payloads travel as ``{"ref": fp}`` deltas — the worker
-    rebuilds from its cache and the wire carries only what moved."""
+    Per worker it tracks the fingerprints of the policy config, fairness
+    config, duration history, and each manager snapshot it last sent —
+    unchanged payloads travel as ``{"ref": fp}``, changed snapshots as
+    structural :func:`~repro.core.wire.encode_snapshot_delta` diffs
+    against the worker's cached base — plus a deterministic mirror of
+    the worker's intern table, so repeated action payloads travel as
+    ``{"iref": fp}`` references.  Encoded action payloads are cached
+    across rounds keyed on the mutable field tuple, so an unchanged
+    action costs neither encode CPU nor wire bytes.
 
-    def __init__(self, orch: "Orchestrator", transport: str = "loopback") -> None:
+    Recovery: a typed worker error in :data:`RECOVERABLE_CODES` (cache
+    eviction, worker restart, delta base mismatch) resets that worker's
+    sent-state and re-sends its request with full content, exactly
+    once per round — counted in ``Telemetry.wire_fallbacks``, never a
+    silently wrong plan."""
+
+    def __init__(
+        self,
+        orch: "Orchestrator",
+        transport: str = "loopback",
+        codec: str = "json",
+    ) -> None:
         factory = _TRANSPORTS.get(transport)
         if factory is None:
             raise ValueError(
                 f"unknown transport {transport!r} (have {sorted(_TRANSPORTS)})"
             )
+        if codec not in wire.WIRE_CODECS:
+            raise ValueError(
+                f"unknown wire codec {codec!r} (have {list(wire.WIRE_CODECS)})"
+            )
         self.orch = orch
         self.transport_kind = transport
+        self.codec = codec
         self._factory = factory
         self._transports: List[ShardTransport] = []
         self._sent: List[Dict[str, Any]] = []  # per-worker fingerprint state
+        self._mirrors: List[wire.LruBytes] = []  # per-worker intern mirrors
+        # client-side delta bases: rtype -> (fp, full snapshot envelope)
+        self._prev_snaps: Dict[str, Tuple[str, Dict[str, Any]]] = {}
+        # uid -> (mutable-field key, fp, payload, nbytes): re-encoding an
+        # unchanged action is pure waste — skip it entirely
+        self._act_cache: Dict[int, Tuple[tuple, str, Dict[str, Any], int]] = {}
+        # slot -> (payload, fp): policy/fairness/history digest memo
+        self._shared_cache: Dict[str, Tuple[Any, str]] = {}
+        # uid -> frozenset of managed rtypes its cost touches (immutable
+        # per action) — drives the per-shard executing subset
+        self._act_rsets: Dict[int, frozenset] = {}
+        # part -> (queue.version, {uid: action}, enc, fps, list fp,
+        # rtypes, {uid: queue tag}): whole-partition encoded view,
+        # exact while the version holds; on a version change, members
+        # with surviving tags reuse their encodings (see plan_round)
+        self._queue_cache: Dict[str, tuple] = {}
+        # uids seen executing last round: a member of two consecutive
+        # executing sets was not mutated in between (transitions always
+        # move an action out of the set for at least one round)
+        self._exec_prev_uids: set = set()
 
     # ------------------------------------------------------------------
     def close(self) -> None:
@@ -337,12 +647,140 @@ class RemoteRoundClient:
             t.close()
         self._transports.clear()
         self._sent.clear()
+        self._mirrors.clear()
+        self._prev_snaps.clear()
+        self._act_cache.clear()
+        self._shared_cache.clear()
+        self._queue_cache.clear()
+        self._exec_prev_uids.clear()
+        self._act_rsets.clear()
 
     def _transport(self, i: int) -> ShardTransport:
         while len(self._transports) <= i:
             self._transports.append(self._factory())
             self._sent.append({"snaps": {}})
+            self._mirrors.append(wire.LruBytes(CACHE_BUDGET_BYTES))
         return self._transports[i]
+
+    def _reset_worker(self, i: int) -> None:
+        """Forget everything we believe worker ``i`` holds; the next
+        request built for it carries full content (and tells the worker
+        to drop its intern table so the mirror restarts in sync)."""
+        self._sent[i] = {"snaps": {}}
+        self._mirrors[i].clear()
+
+    # ------------------------------------------------------------------
+    def _encode_action_cached(
+        self, a: Action
+    ) -> Tuple[str, Dict[str, Any], int]:
+        """(fingerprint, payload, nbytes) of one action's wire envelope,
+        re-encoded only when a mutable field changed since the cached
+        round.  Immutable fields (cost, elasticity, ids) never re-key;
+        the scalar metadata slice does, because planning reads it."""
+        meta = a.metadata
+        mkey: tuple = ()
+        if meta:
+            pairs = [
+                (k, _nk(v))
+                for k, v in meta.items()
+                if not k.startswith("_") and isinstance(v, wire._SCALARS)
+            ]
+            if pairs:
+                pairs.sort()
+                mkey = tuple(pairs)
+        key = (
+            a.state.value,
+            a.attempts,
+            _nk(a.submit_time),
+            _nk(a.start_time),
+            _nk(a.finish_time),
+            a.sys_overhead,
+            mkey,
+        )
+        hit = self._act_cache.get(a.uid)
+        if hit is not None and hit[0] == key:
+            return hit[1], hit[2], hit[3]
+        payload = wire.encode_action(a)
+        # identity hashes the uid plus the mutable-field key: immutable
+        # fields can never differ for a uid, so this is exactly as
+        # collision-free as hashing the whole payload at a fraction of
+        # the canonicalization cost (uids are process-unique, and a
+        # fresh client re-DEFINES everything it sends, so a warm worker
+        # table can never alias a previous client's entries)
+        fp = wire.fingerprint(["act", a.uid, key])
+        # schema-based size estimate for intern byte budgeting — the
+        # define ships it ("n"), so both tables account identically
+        # without a serialization pass per encode
+        nbytes = 300 + 60 * len(payload["cost"]) + 24 * len(payload["metadata"])
+        for s in (
+            payload["name"], payload["task_id"],
+            payload["trajectory_id"], payload["key_resource"],
+            payload["service"],
+        ):
+            if isinstance(s, str):
+                nbytes += len(s)
+        self._act_cache[a.uid] = (key, fp, payload, nbytes)
+        return fp, payload, nbytes
+
+    def _wire_action(
+        self, mirror: wire.LruBytes, enc: Tuple[str, Dict[str, Any], int]
+    ) -> Dict[str, Any]:
+        """Intern decision for one action on one worker: reference if
+        the mirror says the worker holds it, define otherwise.  Mirror
+        touches replicate the worker's table touches in the same order
+        with the same byte accounting, so evictions match."""
+        fp, payload, nbytes = enc
+        if mirror.get(fp) is not None:
+            return wire.intern_ref(fp)
+        mirror.put(fp, True, nbytes)
+        return wire.intern_def(fp, payload, nbytes)
+
+    def _wire_list(
+        self,
+        mirror: wire.LruBytes,
+        prev: Optional[Tuple[str, List[str]]],
+        enc: List[Tuple[str, Dict[str, Any], int]],
+        fps: List[str],
+        lfp: str,
+    ) -> Dict[str, Any]:
+        """One action list as the cheapest wire form the worker can
+        reconstruct: a bare reference when unchanged since last send, a
+        removals-plus-positional-inserts delta when the kept members'
+        relative order survived (always true for tag-ordered queues —
+        tags are fixed at admission — and for the dict-ordered executing
+        set), else the full list.  ``prev`` is (list fp, member fps)
+        from the last send to this worker."""
+        if prev is not None and prev[0] == lfp:
+            return {"k": "ref", "fp": lfp}
+        if prev is not None:
+            prev_fps = prev[1]
+            cur_set = set(fps)
+            prev_set = set(prev_fps)
+            kept = [f for f in prev_fps if f in cur_set]
+            ins: List[Tuple[int, Tuple[str, Dict[str, Any], int]]] = []
+            ki, ok = 0, True
+            for i, e in enumerate(enc):
+                f = e[0]
+                if ki < len(kept) and f == kept[ki]:
+                    ki += 1
+                elif f not in prev_set:
+                    ins.append((i, e))
+                else:
+                    ok = False  # kept members reordered — delta can't say it
+                    break
+            if ok and ki == len(kept):
+                return {
+                    "k": "delta",
+                    "base": prev[0],
+                    "fp": lfp,
+                    "rm": [f for f in prev_fps if f not in cur_set],
+                    "ins": [[i, self._wire_action(mirror, e)] for i, e in ins],
+                }
+        return {
+            "k": "full",
+            "fp": lfp,
+            "items": [self._wire_action(mirror, e) for e in enc],
+        }
 
     # ------------------------------------------------------------------
     def plan_round(
@@ -366,13 +804,30 @@ class RemoteRoundClient:
         t_enc = time.perf_counter()
         plans: List[PartitionPlan] = []
         by_uid: Dict[int, Action] = {}
-        shard_parts: List[Tuple[int, List[Dict[str, Any]], set]] = []
+        shard_parts: List[Tuple[int, list, set]] = []
         union_rtypes: set = set()
         executing = list(orch._executing.values())
-        executing_payload = [wire.encode_action(a) for a in executing]
+        exec_prev = self._exec_prev_uids
+        act_cache = self._act_cache
+        rsets = self._act_rsets
+        executing_enc = []
+        exec_rsets = []
+        for a in executing:
+            hit = act_cache.get(a.uid)
+            if hit is not None and a.uid in exec_prev:
+                executing_enc.append((hit[1], hit[2], hit[3]))
+            else:
+                executing_enc.append(self._encode_action_cached(a))
+            rs = rsets.get(a.uid)
+            if rs is None:
+                rs = frozenset(r for r in a.cost if r in orch.managers)
+                rsets[a.uid] = rs
+            exec_rsets.append(rs)
+        seen_uids = {a.uid for a in executing}
+        self._exec_prev_uids = seen_uids.copy()
         nbytes = 0
         for shard_idx, group in enumerate(groups):
-            parts: List[Dict[str, Any]] = []
+            parts_enc: List[Tuple[str, List[Tuple[str, Dict[str, Any], int]], List[str], str]] = []
             rtypes: set = set()
             for part in group:
                 queue = orch._queues.get(part)
@@ -382,60 +837,122 @@ class RemoteRoundClient:
                         PartitionPlan(part, planned=False, shard=shard_idx)
                     )
                     continue
-                waiting = queue.ordered()
-                for a in waiting:
-                    by_uid[a.uid] = a
-                    rtypes.update(r for r in a.cost if r in orch.managers)
+                # queue.version gates a whole-partition encode cache:
+                # membership mutations bump it, and the plan-then-commit
+                # discipline guarantees queued actions only mutate
+                # alongside a queue operation (retry = remove + push),
+                # so an unchanged version means the encoded view is
+                # still exact — the common idle partition costs O(1)
+                # instead of O(depth) per round
+                cached = self._queue_cache.get(part)
+                if cached is not None and cached[0] == queue.version:
+                    _, members, enc, fps, lfp, part_rtypes, tags = cached
+                else:
+                    # version changed: re-enumerate, but re-key only the
+                    # members whose queue tag moved — a surviving tag
+                    # means the action was never removed/re-pushed, and
+                    # queued actions only mutate alongside a queue op,
+                    # so its cached encoding is still exact
+                    waiting = queue.ordered()
+                    prev_tags = cached[6] if cached is not None else {}
+                    act_cache = self._act_cache
+                    members = {a.uid: a for a in waiting}
+                    tag_of = queue.tag_of
+                    tags = {uid: tag_of(uid) for uid in members}
+                    enc = []
+                    for a in waiting:
+                        uid = a.uid
+                        hit = act_cache.get(uid)
+                        if hit is not None and prev_tags.get(uid) == tags[uid]:
+                            enc.append((hit[1], hit[2], hit[3]))
+                        else:
+                            enc.append(self._encode_action_cached(a))
+                    fps = [e[0] for e in enc]
+                    lfp = wire.list_fingerprint(fps)
+                    part_rtypes = frozenset(
+                        r for a in waiting for r in a.cost if r in orch.managers
+                    )
+                    self._queue_cache[part] = (
+                        queue.version, members, enc, fps, lfp, part_rtypes, tags,
+                    )
+                by_uid.update(members)
+                seen_uids.update(members)
+                rtypes |= part_rtypes
                 if part in orch.managers:
                     rtypes.add(part)
-                parts.append(
-                    {
-                        "part": part,
-                        "waiting": [wire.encode_action(a) for a in waiting],
-                    }
-                )
-            if parts:
-                shard_parts.append((shard_idx, parts, rtypes))
+                parts_enc.append((part, enc, fps, lfp))
+            if parts_enc:
+                shard_parts.append((shard_idx, parts_enc, rtypes))
                 union_rtypes |= rtypes
         # shard-independent payloads (policy config, fairness, history,
-        # manager snapshots) are encoded + fingerprinted ONCE per round
-        # and shared across every worker's request — only the per-worker
-        # ref-vs-full decision differs
+        # manager snapshots + their structural deltas) are encoded +
+        # fingerprinted ONCE per round and shared across every worker's
+        # request — only the per-worker ref/delta/full decision differs
         shared = self._encode_shared(union_rtypes)
-        requests: List[Tuple[int, str]] = [
-            (shard_idx,
-             wire.dumps(self._request(shard_idx, parts, rtypes,
-                                      executing_payload, shared)))
-            for shard_idx, parts, rtypes in shard_parts
-        ]
+        # each worker receives only the executing actions whose cost
+        # touches its shard's resource types — planning consults the
+        # in-flight set strictly through per-rtype filters, so the
+        # subset plans identically while the fan-out (and the define
+        # traffic behind it) shrinks by the shard count
+        requests: List[Tuple[int, Any, Any, bytes]] = []
+        for shard_idx, parts_enc, rtypes in shard_parts:
+            sub_enc = [
+                e
+                for rs, e in zip(exec_rsets, executing_enc)
+                if not rtypes.isdisjoint(rs)
+            ]
+            sub_fps = [e[0] for e in sub_enc]
+            exec_sub = (sub_enc, sub_fps, wire.list_fingerprint(sub_fps))
+            requests.append(
+                (
+                    shard_idx,
+                    (parts_enc, exec_sub),
+                    rtypes,
+                    wire.encode_frame(
+                        self._request(shard_idx, parts_enc, rtypes,
+                                      exec_sub, shared),
+                        self.codec,
+                    ),
+                )
+            )
+        # drop encode-cache entries for actions that left the system —
+        # everything alive was just seen, so this is exact
+        if len(self._act_cache) > len(seen_uids):
+            for uid in [u for u in self._act_cache if u not in seen_uids]:
+                del self._act_cache[uid]
+        if len(rsets) > len(seen_uids):
+            for uid in [u for u in rsets if u not in seen_uids]:
+                del rsets[uid]
         encode_s = time.perf_counter() - t_enc
 
         # ---- dispatch + gather (worker compute overlaps) --------------
         t_tx = time.perf_counter()
-        for shard_idx, blob in requests:
+        for shard_idx, _, _, blob in requests:
             nbytes += len(blob)
             self._transport(shard_idx).submit(blob)
-        responses: List[Tuple[int, str]] = [
-            (shard_idx, self._transport(shard_idx).recv())
-            for shard_idx, _ in requests
+        responses: List[Tuple[int, Any, Any, bytes]] = [
+            (shard_idx, ctx, rtypes, self._transport(shard_idx).recv())
+            for shard_idx, ctx, rtypes, _ in requests
         ]
         transport_s = time.perf_counter() - t_tx
 
-        # ---- decode phase (client-side + worker-reported codec cost) --
+        # ---- decode phase (client-side cost; worker codec separate) ---
         t_dec = time.perf_counter()
         critical = 0.0
         decode_s = 0.0
-        for shard_idx, blob in responses:
+        worker_codec_s = 0.0
+        for shard_idx, ctx, rtypes, blob in responses:
             nbytes += len(blob)
-            payload = wire.loads(blob)
+            payload = wire.decode_frame(blob)
             if isinstance(payload, dict) and payload.get("kind") == "error":
-                raise RuntimeError(
-                    f"remote shard worker {shard_idx} failed: "
-                    f"{payload.get('error')}"
+                parts_enc, exec_sub = ctx
+                payload, extra = self._recover(
+                    shard_idx, payload, parts_enc, rtypes, exec_sub, shared
                 )
+                nbytes += extra
             resp = wire.expect(payload, "plan_response")
             plan_s = float(resp.get("plan_s", 0.0))
-            decode_s += float(resp.get("codec_s", 0.0))
+            worker_codec_s += float(resp.get("codec_s", 0.0))
             shard_plans = [wire.decode_plan(p, by_uid) for p in resp["plans"]]
             critical = max(critical, plan_s)
             telemetry.note_shard_round(shard_idx, len(shard_plans), plan_s)
@@ -444,48 +961,125 @@ class RemoteRoundClient:
 
         telemetry.plan_critical_s += critical
         telemetry.plan_wall_s += time.perf_counter() - t_round
-        telemetry.note_wire_round(encode_s, transport_s, decode_s, nbytes)
+        telemetry.note_wire_round(
+            encode_s, transport_s, decode_s, nbytes, worker_codec_s
+        )
         return plans, critical
+
+    # ------------------------------------------------------------------
+    def _recover(
+        self,
+        shard_idx: int,
+        error: Dict[str, Any],
+        parts_enc: Any,
+        rtypes: set,
+        exec_sub: Any,
+        shared: Dict[str, Any],
+    ) -> Tuple[Any, int]:
+        """One full-content retry for a recoverable typed error (the
+        worker lost cached state: eviction, restart, stale base).  The
+        retry's encode/transport cost lands in the decode phase's wall
+        — recovery is rare and charged where it happens, not smeared.
+        A second failure is a real protocol error and raises."""
+        if error.get("code") not in RECOVERABLE_CODES:
+            raise RuntimeError(
+                f"remote shard worker {shard_idx} failed: {error.get('error')}"
+            )
+        self.orch.telemetry.wire_fallbacks += 1
+        self._reset_worker(shard_idx)
+        req = self._request(
+            shard_idx, parts_enc, rtypes, exec_sub, shared,
+            reset_interns=True,
+        )
+        blob = wire.encode_frame(req, self.codec)
+        t = self._transport(shard_idx)
+        t.submit(blob)
+        resp = t.recv()
+        payload = wire.decode_frame(resp)
+        if isinstance(payload, dict) and payload.get("kind") == "error":
+            raise RuntimeError(
+                f"remote shard worker {shard_idx} failed after full re-send: "
+                f"{payload.get('error')}"
+            )
+        return payload, len(blob) + len(resp)
 
     # ------------------------------------------------------------------
     def _encode_shared(self, rtypes: set) -> Dict[str, Any]:
         """Encode + fingerprint the shard-independent request inputs
         once per round: the policy / fairness / history configs and one
-        snapshot per needed resource type.  ``_request`` then only makes
-        the per-worker full-vs-``{"ref": fp}`` call against each
-        worker's sent-state."""
+        snapshot per needed resource type, plus — when the previous
+        round's snapshot is known — the structural delta against it.
+        ``_request`` then makes the per-worker ref-vs-delta-vs-full call
+        against each worker's sent-state."""
         orch = self.orch
         policy_payload = wire.encode_policy(orch.policy)
         fs_payload = wire.encode_fair_share(orch.fair_share)
         hist = getattr(orch.policy, "history", None)
         hist_payload = None if hist is None else {"avg": dict(hist._avg)}
-        snaps: Dict[str, Tuple[Dict[str, Any], str]] = {}
+        snaps: Dict[str, Tuple[Dict[str, Any], str, Optional[str], Optional[Dict[str, Any]]]] = {}
         for rtype in sorted(rtypes):
             snap = wire.encode_snapshot(orch.managers[rtype])
-            snaps[rtype] = (snap, wire.fingerprint(snap))
+            prev = self._prev_snaps.get(rtype)
+            prev_fp: Optional[str] = None
+            delta: Optional[Dict[str, Any]] = None
+            if prev is not None and prev[1] == snap:
+                # unchanged since last round: reuse the cached digest
+                # instead of re-hashing the whole snapshot (the common
+                # case for idle managers dominates fingerprint cost)
+                snaps[rtype] = (snap, prev[0], prev[0], None)
+                continue
+            fp = wire.fingerprint(snap)
+            if prev is not None:
+                prev_fp = prev[0]
+                if prev_fp != fp:
+                    delta = wire.encode_snapshot_delta(
+                        orch.managers[rtype],
+                        prev[1]["state"],
+                        snap["state"],
+                        prev_fp,
+                        fp,
+                    )
+            self._prev_snaps[rtype] = (fp, snap)
+            snaps[rtype] = (snap, fp, prev_fp, delta)
         return {
-            "policy": (policy_payload, wire.fingerprint(policy_payload)),
-            "fair_share": (fs_payload, wire.fingerprint(fs_payload)),
+            "policy": self._shared_fp("policy", policy_payload),
+            "fair_share": self._shared_fp("fair_share", fs_payload),
             "history": (
                 None
                 if hist_payload is None
-                else (hist_payload, wire.fingerprint(hist_payload))
+                else self._shared_fp("history", hist_payload)
             ),
             "snaps": snaps,
         }
 
+    def _shared_fp(self, slot: str, payload: Any) -> Tuple[Any, str]:
+        """(payload, fingerprint) with the digest memoized by payload
+        equality — policy/fairness/history configs rarely change, so
+        re-hashing them every round is pure waste."""
+        cached = self._shared_cache.get(slot)
+        if cached is not None and cached[0] == payload:
+            return cached
+        entry = (payload, wire.fingerprint(payload))
+        self._shared_cache[slot] = entry
+        return entry
+
     def _request(
         self,
         shard_idx: int,
-        parts: List[Dict[str, Any]],
+        parts_enc: List[Tuple[str, List[Tuple[str, Dict[str, Any], int]]]],
         rtypes: set,
-        executing_payload: List[Dict[str, Any]],
+        exec_sub: Tuple[List[Tuple[str, Dict[str, Any], int]], List[str], str],
         shared: Dict[str, Any],
+        reset_interns: bool = False,
     ) -> Dict[str, Any]:
-        """One worker's plan request, with unchanged policy/fairness/
-        history/snapshot payloads replaced by fingerprint references."""
+        """One worker's plan request: unchanged policy/fairness/history
+        payloads travel as fingerprint references, snapshots as
+        ref/structural-delta/full (cheapest form the worker can
+        reconstruct from), and every action as an intern define or
+        reference against this worker's mirrored table."""
         orch = self.orch
         sent = self._sent[shard_idx]
+        mirror = self._mirrors[shard_idx]
 
         policy_payload, policy_fp = shared["policy"]
         policy = None if sent.get("policy") == policy_fp else policy_payload
@@ -507,24 +1101,45 @@ class RemoteRoundClient:
 
         snapshots: Dict[str, Any] = {}
         for rtype in sorted(rtypes):
-            snap, fp = shared["snaps"][rtype]
-            if sent["snaps"].get(rtype) == fp:
+            snap, fp, prev_fp, delta = shared["snaps"][rtype]
+            sent_fp = sent["snaps"].get(rtype)
+            if sent_fp == fp:
                 snapshots[rtype] = {"ref": fp}
+            elif delta is not None and sent_fp == prev_fp:
+                snapshots[rtype] = delta
             else:
                 snapshots[rtype] = snap
-                sent["snaps"][rtype] = fp
+            sent["snaps"][rtype] = fp
 
-        return wire.envelope(
-            "plan_request",
-            {
-                "shard": shard_idx,
-                "now": orch.now,
-                "incremental": orch.incremental,
-                "policy": policy,
-                "fair_share": fair_share,
-                "history": history,
-                "snapshots": snapshots,
-                "executing": executing_payload,
-                "partitions": parts,
-            },
+        # action lists travel as cross-round list deltas (ref / delta /
+        # full — see _wire_list).  Intern decisions inside them follow
+        # the worker's resolution order (executing first, then
+        # partitions in request order) so the mirror's LRU touches line
+        # up exactly.
+        executing_enc, exec_fps, exec_fp = exec_sub
+        executing_wire = self._wire_list(
+            mirror, sent.get("exec"), executing_enc, exec_fps, exec_fp
         )
+        sent["exec"] = (exec_fp, exec_fps)
+
+        parts = []
+        sent_parts: Dict[str, Tuple[str, List[str]]] = sent.setdefault("parts", {})
+        for part, enc, fps, lfp in parts_enc:
+            node = self._wire_list(mirror, sent_parts.get(part), enc, fps, lfp)
+            sent_parts[part] = (lfp, fps)
+            parts.append({"part": part, "waiting": node})
+
+        body: Dict[str, Any] = {
+            "shard": shard_idx,
+            "now": orch.now,
+            "incremental": orch.incremental,
+            "policy": policy,
+            "fair_share": fair_share,
+            "history": history,
+            "snapshots": snapshots,
+            "executing": executing_wire,
+            "partitions": parts,
+        }
+        if reset_interns:
+            body["reset_interns"] = True
+        return wire.envelope("plan_request", body)

@@ -291,6 +291,7 @@ class RoundExecutor:
         shards: int,
         plan_mode: str = "inline",
         transport: str = "loopback",
+        wire_codec: str = "json",
     ) -> None:
         if shards < 1:
             raise ValueError(f"shards must be >= 1, got {shards}")
@@ -306,7 +307,7 @@ class RoundExecutor:
         if plan_mode == "remote":
             from repro.core.remote import RemoteRoundClient
 
-            self._remote = RemoteRoundClient(orch, transport)
+            self._remote = RemoteRoundClient(orch, transport, codec=wire_codec)
 
     def close(self) -> None:
         """Shut down any out-of-process shard workers (idempotent)."""

@@ -73,15 +73,21 @@ class Telemetry:
     # -- wire counters (remote plan mode, repro.core.remote) -----------------
     # serialization overhead is accounted SEPARATELY from the modeled
     # critical-path decision latency so the two are never conflated:
-    # encode/decode are orchestrator-side wall, bytes count both
-    # directions, transport_s is the full dispatch->gather wall of
-    # remote plan phases (worker compute + IPC + codec, overlapped
-    # across workers)
+    # encode/decode are orchestrator-side wall, worker_codec_s is the
+    # worker-reported parse+encode cost (its side of the bill — kept
+    # apart from client decode so the two sides are never conflated
+    # either), bytes count both directions, transport_s is the full
+    # dispatch->gather wall of remote plan phases (worker compute +
+    # IPC + codec, overlapped across workers), and fallbacks counts
+    # full-content re-sends after a recoverable typed worker error
+    # (cache eviction / worker restart / stale delta base)
     wire_encode_s: float = 0.0
     wire_decode_s: float = 0.0
+    wire_worker_codec_s: float = 0.0
     wire_transport_s: float = 0.0
     wire_bytes: int = 0
     wire_rounds: int = 0
+    wire_fallbacks: int = 0
     # -- sub-queue migration (Orchestrator.migrate_task/rebalance) -----------
     migrations: int = 0  # detach->merge moves between partition replicas
     migrated_actions: int = 0
@@ -102,13 +108,19 @@ class Telemetry:
         self.migration_wall_s += wall_s
 
     def note_wire_round(
-        self, encode_s: float, transport_s: float, decode_s: float, nbytes: int
+        self,
+        encode_s: float,
+        transport_s: float,
+        decode_s: float,
+        nbytes: int,
+        worker_codec_s: float = 0.0,
     ) -> None:
         """One remote plan round's serialization accounting."""
         self.wire_rounds += 1
         self.wire_encode_s += encode_s
         self.wire_transport_s += transport_s
         self.wire_decode_s += decode_s
+        self.wire_worker_codec_s += worker_codec_s
         self.wire_bytes += nbytes
 
     def wire_summary(self) -> Dict[str, float]:
@@ -120,8 +132,10 @@ class Telemetry:
             "rounds": float(self.wire_rounds),
             "encode_s": self.wire_encode_s,
             "decode_s": self.wire_decode_s,
+            "worker_codec_s": self.wire_worker_codec_s,
             "transport_s": self.wire_transport_s,
             "bytes": float(self.wire_bytes),
+            "fallbacks": float(self.wire_fallbacks),
         }
 
     def note_shard_round(self, shard: int, partitions: int, plan_s: float) -> None:

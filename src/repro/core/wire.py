@@ -51,6 +51,7 @@ from __future__ import annotations
 import hashlib
 import json
 import math
+import struct
 from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple, Type
 
 from repro.core.action import (
@@ -111,11 +112,78 @@ def _field(payload: Mapping[str, Any], kind: str, name: str) -> Any:
         raise WireError(f"{kind}: missing required field {name!r}") from None
 
 
+def _canon(obj: Any, out: List[str]) -> None:
+    """Append the canonical text of a JSON-able payload to ``out``.
+
+    Canonical form is what makes :func:`fingerprint` a *content* hash
+    rather than an encoding hash: dict keys are sorted, ``-0.0``
+    collapses to ``0.0``, integral floats hash like the equal int
+    (``2.0`` == ``2``), and every NaN maps to one fixed token (NaN
+    compares unequal to itself, so repr-based hashing would let two
+    equal payloads diverge).  Equal payloads therefore always collide,
+    regardless of key order, float spelling, or which side built them.
+    """
+    if obj is None:
+        out.append("n")
+    elif obj is True:
+        out.append("t")
+    elif obj is False:
+        out.append("f")
+    elif isinstance(obj, int):
+        out.append(repr(obj))
+    elif isinstance(obj, float):
+        if math.isnan(obj):
+            out.append("NaN")
+        elif obj == 0.0:
+            out.append("0")  # -0.0 == 0.0 must collide
+        elif math.isinf(obj):
+            out.append("Inf" if obj > 0 else "-Inf")
+        elif obj.is_integer() and abs(obj) < 2**53:
+            out.append(repr(int(obj)))
+        else:
+            out.append(repr(obj))
+    elif isinstance(obj, str):
+        # length-prefixed raw text: unambiguous without per-string
+        # escaping (json.dumps per leaf dominated fingerprint cost)
+        out.append(f"s{len(obj)}:{obj}")
+    elif isinstance(obj, (list, tuple)):
+        out.append("[")
+        for x in obj:
+            _canon(x, out)
+            out.append(",")
+        out.append("]")
+    elif isinstance(obj, dict) or isinstance(obj, Mapping):
+        out.append("{")
+        for k in sorted(obj):
+            ks = str(k)
+            out.append(f"s{len(ks)}:{ks}")
+            out.append(":")
+            _canon(obj[k], out)
+            out.append(",")
+        out.append("}")
+    else:
+        raise WireError(f"fingerprint: non-JSON-able value {type(obj).__name__}")
+
+
 def fingerprint(payload: Any) -> str:
     """Stable content hash of a JSON-able payload (delta suppression:
-    a sender may replace an unchanged payload with ``{"ref": fp}``)."""
-    blob = json.dumps(payload, sort_keys=True, separators=(",", ":"))
-    return hashlib.sha1(blob.encode()).hexdigest()
+    a sender may replace an unchanged payload with ``{"ref": fp}``).
+
+    Hashes the *canonical form* (see :func:`_canon`): equal payloads
+    always produce equal fingerprints even when key order or float
+    encoding differ between the two sides."""
+    chunks: List[str] = []
+    _canon(payload, chunks)
+    return hashlib.sha1("".join(chunks).encode()).hexdigest()
+
+
+def list_fingerprint(member_fps: Sequence[str]) -> str:
+    """Order-sensitive digest of a sequence of member fingerprints —
+    the identity of an action *list* for cross-round list deltas.  Two
+    lists collide exactly when they hold the same members in the same
+    order (member fingerprints embed each action's uid, so distinct
+    live actions never alias)."""
+    return hashlib.sha1("|".join(member_fps).encode()).hexdigest()
 
 
 def dumps(payload: Any) -> str:
@@ -131,6 +199,232 @@ def loads(blob: str) -> Any:
         return json.loads(blob)
     except json.JSONDecodeError as e:
         raise WireError(f"malformed wire payload: {e}") from None
+
+
+# ---------------------------------------------------------------------------
+# compact binary framing (codec="binary"; JSON stays the v1 compat path)
+# ---------------------------------------------------------------------------
+
+#: First byte of a binary frame.  0xB1 is a UTF-8 *continuation* byte,
+#: so no valid JSON text can start with it — :func:`decode_frame` sniffs
+#: this one byte to route between the binary codec and the JSON path.
+WIRE_MAGIC = 0xB1
+
+#: Wire codec names accepted end to end (Orchestrator ``wire_codec``).
+WIRE_CODECS = ("json", "binary")
+
+# value tags of the binary frame body
+_T_NULL, _T_FALSE, _T_TRUE = 0x00, 0x01, 0x02
+_T_INT, _T_FLOAT, _T_STR = 0x03, 0x04, 0x05
+_T_LIST, _T_DICT, _T_SREF = 0x06, 0x07, 0x08
+_T_INTS, _T_FLOATS = 0x09, 0x0A
+
+_F64 = struct.Struct(">d")
+
+
+def _uvarint(n: int, out: bytearray) -> None:
+    while n > 0x7F:
+        out.append((n & 0x7F) | 0x80)
+        n >>= 7
+    out.append(n)
+
+
+def _zz_big(n: int) -> int:  # arbitrary-precision zigzag
+    return n << 1 if n >= 0 else ((-n) << 1) - 1
+
+
+def _enc_value(obj: Any, out: bytearray, strings: Dict[str, int]) -> None:
+    """One value of the binary frame.  Strings are interned at frame
+    level: the first occurrence travels inline (and registers itself in
+    the table, on both sides), every repeat is a table reference — the
+    hot dict keys (``uid``, ``state``, ...) are paid for once per frame.
+    Homogeneous int/float lists pack as columns (no per-element tags)."""
+    if obj is None:
+        out.append(_T_NULL)
+    elif obj is True:
+        out.append(_T_TRUE)
+    elif obj is False:
+        out.append(_T_FALSE)
+    elif isinstance(obj, int):
+        out.append(_T_INT)
+        _uvarint(_zz_big(obj), out)
+    elif isinstance(obj, float):
+        out.append(_T_FLOAT)
+        out += _F64.pack(obj)
+    elif isinstance(obj, str):
+        idx = strings.get(obj)
+        if idx is not None:
+            out.append(_T_SREF)
+            _uvarint(idx, out)
+        else:
+            strings[obj] = len(strings)
+            raw = obj.encode("utf-8")
+            out.append(_T_STR)
+            _uvarint(len(raw), out)
+            out += raw
+    elif isinstance(obj, (list, tuple)):
+        if obj and all(type(x) is int for x in obj):
+            out.append(_T_INTS)
+            _uvarint(len(obj), out)
+            for x in obj:
+                _uvarint(_zz_big(x), out)
+        elif obj and all(type(x) is float for x in obj):
+            out.append(_T_FLOATS)
+            _uvarint(len(obj), out)
+            for x in obj:
+                out += _F64.pack(x)
+        else:
+            out.append(_T_LIST)
+            _uvarint(len(obj), out)
+            for x in obj:
+                _enc_value(x, out, strings)
+    elif isinstance(obj, dict) or isinstance(obj, Mapping):
+        out.append(_T_DICT)
+        _uvarint(len(obj), out)
+        for k, v in obj.items():
+            if not isinstance(k, str):
+                raise WireError(f"binary frame: non-str dict key {k!r}")
+            _enc_value(k, out, strings)
+            _enc_value(v, out, strings)
+    else:
+        raise WireError(
+            f"binary frame: unsupported value type {type(obj).__name__}"
+        )
+
+
+class _FrameReader:
+    __slots__ = ("blob", "pos", "strings")
+
+    def __init__(self, blob: bytes, pos: int) -> None:
+        self.blob = blob
+        self.pos = pos
+        self.strings: List[str] = []
+
+    def _uvarint(self) -> int:
+        n = shift = 0
+        blob, pos = self.blob, self.pos
+        try:
+            while True:
+                b = blob[pos]
+                pos += 1
+                n |= (b & 0x7F) << shift
+                if not b & 0x80:
+                    break
+                shift += 7
+        except IndexError:
+            raise WireError("binary frame: truncated varint") from None
+        self.pos = pos
+        return n
+
+    def _unzig(self) -> int:
+        n = self._uvarint()
+        return (n >> 1) if not n & 1 else -((n + 1) >> 1)
+
+    def value(self) -> Any:
+        blob = self.blob
+        try:
+            tag = blob[self.pos]
+        except IndexError:
+            raise WireError("binary frame: truncated value") from None
+        self.pos += 1
+        if tag == _T_NULL:
+            return None
+        if tag == _T_TRUE:
+            return True
+        if tag == _T_FALSE:
+            return False
+        if tag == _T_INT:
+            return self._unzig()
+        if tag == _T_FLOAT:
+            pos = self.pos
+            self.pos = pos + 8
+            try:
+                return _F64.unpack_from(blob, pos)[0]
+            except struct.error:
+                raise WireError("binary frame: truncated float") from None
+        if tag == _T_STR:
+            n = self._uvarint()
+            pos = self.pos
+            self.pos = pos + n
+            if self.pos > len(blob):
+                raise WireError("binary frame: truncated string")
+            s = blob[pos : pos + n].decode("utf-8")
+            self.strings.append(s)
+            return s
+        if tag == _T_SREF:
+            idx = self._uvarint()
+            try:
+                return self.strings[idx]
+            except IndexError:
+                raise WireError(
+                    f"binary frame: string ref {idx} out of range"
+                ) from None
+        if tag == _T_LIST:
+            return [self.value() for _ in range(self._uvarint())]
+        if tag == _T_INTS:
+            return [self._unzig() for _ in range(self._uvarint())]
+        if tag == _T_FLOATS:
+            n = self._uvarint()
+            pos = self.pos
+            self.pos = pos + 8 * n
+            try:
+                return [
+                    _F64.unpack_from(blob, pos + 8 * i)[0] for i in range(n)
+                ]
+            except struct.error:
+                raise WireError("binary frame: truncated float column") from None
+        if tag == _T_DICT:
+            n = self._uvarint()
+            out: Dict[str, Any] = {}
+            for _ in range(n):
+                k = self.value()
+                if not isinstance(k, str):
+                    raise WireError("binary frame: non-str dict key")
+                out[k] = self.value()
+            return out
+        raise WireError(f"binary frame: unknown value tag 0x{tag:02x}")
+
+
+def encode_frame(payload: Any, codec: str = "json") -> bytes:
+    """Serialize a payload to transport bytes in the chosen codec.
+
+    ``"json"`` is the :data:`WIRE_VERSION` = 1 compatibility path
+    (UTF-8 :func:`dumps` text, the property-test reference);
+    ``"binary"`` is the compact tag/varint frame with frame-level
+    string interning and packed int/float columns.  Both decode through
+    :func:`decode_frame`, which sniffs the leading byte — binary frames
+    start with :data:`WIRE_MAGIC`, which can never begin UTF-8 text."""
+    if codec == "json":
+        return dumps(payload).encode("utf-8")
+    if codec != "binary":
+        raise WireError(f"unknown wire codec {codec!r} (have {WIRE_CODECS})")
+    out = bytearray([WIRE_MAGIC])
+    _enc_value(payload, out, {})
+    return bytes(out)
+
+
+def frame_codec(blob: bytes) -> str:
+    """The codec a frame was encoded with (a responder answers in kind)."""
+    return "binary" if blob[:1] == bytes([WIRE_MAGIC]) else "json"
+
+
+def decode_frame(blob: bytes) -> Any:
+    """Parse transport bytes from either codec (magic-byte sniffing)."""
+    if not blob:
+        raise WireError("empty wire frame")
+    if blob[0] == WIRE_MAGIC:
+        reader = _FrameReader(blob, 1)
+        value = reader.value()
+        if reader.pos != len(blob):
+            raise WireError(
+                f"binary frame: {len(blob) - reader.pos} trailing bytes"
+            )
+        return value
+    try:
+        text = blob.decode("utf-8")
+    except UnicodeDecodeError as e:
+        raise WireError(f"malformed wire frame: {e}") from None
+    return loads(text)
 
 
 # ---------------------------------------------------------------------------
@@ -430,6 +724,189 @@ def decode_snapshot(payload: Mapping[str, Any]) -> ResourceManager:
     if cls is None:
         raise WireError(f"unknown snapshot impl {impl!r}")
     return cls.restore_snapshot(_field(p, "snapshot", "state"))
+
+
+# ---------------------------------------------------------------------------
+# structural snapshot deltas (wire cost proportional to what changed)
+# ---------------------------------------------------------------------------
+
+
+def encode_snapshot_delta(
+    manager: ResourceManager,
+    prev_state: Mapping[str, Any],
+    cur_state: Mapping[str, Any],
+    base_fp: str,
+    cur_fp: str,
+) -> Dict[str, Any]:
+    """Delta envelope: the structural diff ``prev_state -> cur_state``
+    for one manager, dispatched to the manager family's
+    ``snapshot_delta`` twin.  ``base`` fingerprints the full snapshot
+    payload the receiver must already hold; ``fp`` fingerprints the full
+    payload the delta must reconstruct — the receiver verifies it, and a
+    mismatch (stale or corrupted base) falls back to a full snapshot via
+    the typed-error path, never a silently wrong plan."""
+    impl = getattr(manager, "wire_impl", None)
+    cls = _snapshot_impls().get(impl)
+    if cls is None:
+        raise WireError(f"manager {type(manager).__name__} has no wire snapshot impl")
+    return envelope(
+        "snapshot_delta",
+        {
+            "rtype": manager.rtype,
+            "impl": impl,
+            "base": base_fp,
+            "fp": cur_fp,
+            "delta": cls.snapshot_delta(prev_state, cur_state),
+        },
+    )
+
+
+def apply_snapshot_delta(
+    payload: Mapping[str, Any], base_snapshot: Mapping[str, Any]
+) -> Dict[str, Any]:
+    """Reconstruct the full ``snapshot`` envelope a delta describes.
+
+    ``base_snapshot`` is the cached full snapshot envelope whose
+    fingerprint the sender named in ``base`` (the caller checks that
+    before calling).  The reconstruction is fingerprint-verified against
+    the delta's ``fp`` — apply never returns a state the sender did not
+    hash, so a buggy diff can only fail loudly."""
+    p = expect(payload, "snapshot_delta")
+    impl = _field(p, "snapshot_delta", "impl")
+    cls = _snapshot_impls().get(impl)
+    if cls is None:
+        raise WireError(f"unknown snapshot impl {impl!r}")
+    state = cls.apply_delta(
+        _field(base_snapshot, "snapshot", "state"),
+        _field(p, "snapshot_delta", "delta"),
+    )
+    snap = envelope(
+        "snapshot",
+        {"rtype": str(_field(p, "snapshot_delta", "rtype")), "impl": impl,
+         "state": state},
+    )
+    if fingerprint(snap) != _field(p, "snapshot_delta", "fp"):
+        raise WireError(
+            f"snapshot delta for {p['rtype']!r} reconstructed a state whose "
+            "fingerprint does not match the sender's"
+        )
+    return snap
+
+
+# ---------------------------------------------------------------------------
+# cross-round payload interning (actions and other repeated payloads)
+# ---------------------------------------------------------------------------
+
+
+def intern_def(fp: str, payload: Any, nbytes: Optional[int] = None) -> Dict[str, Any]:
+    """First wire appearance of an interned payload: define-and-use.
+    ``fp`` is the canonical fingerprint of the *fully resolved* payload;
+    the receiver stores ``payload`` under it and every later round may
+    say ``{"iref": fp}`` instead.  ``n`` carries the sender's byte
+    accounting so both sides' LRU budgets see identical sizes (the
+    receiver falls back to measuring when absent)."""
+    out: Dict[str, Any] = {"idef": fp, "val": payload}
+    if nbytes is not None:
+        out["n"] = int(nbytes)
+    return out
+
+
+def intern_ref(fp: str) -> Dict[str, str]:
+    """Reference to a payload the receiver's intern table already holds."""
+    return {"iref": fp}
+
+
+def resolve_interned(node: Any, table: "LruBytes", missing: List[str]) -> Any:
+    """Resolve ``idef``/``iref`` wrappers (recursively) against an
+    intern table.  Definitions are stored and unwrapped; references are
+    looked up — a miss collects the fingerprint into ``missing`` (and
+    yields None) so the caller can answer with one typed ``stale_intern``
+    error naming every payload it needs re-sent."""
+    if isinstance(node, dict):
+        if "iref" in node and len(node) == 1:
+            hit = table.get(node["iref"])
+            if hit is None:
+                missing.append(str(node["iref"]))
+            return hit
+        if "idef" in node and "val" in node:
+            val = resolve_interned(node["val"], table, missing)
+            nbytes = node.get("n") or payload_nbytes(val)
+            table.put(str(node["idef"]), val, int(nbytes))
+            return val
+    return node
+
+
+def payload_nbytes(payload: Any) -> int:
+    """Approximate in-memory wire size of a payload (byte-budget LRU
+    accounting).  JSON text length is a stable, codec-independent proxy;
+    exactness is not needed — the budget bounds growth, it does not
+    meter allocations."""
+    try:
+        return len(json.dumps(payload, separators=(",", ":")))
+    except (TypeError, ValueError):
+        return 256
+
+
+class LruBytes:
+    """A byte-budget LRU map (worker intern table / snapshot cache, and
+    the client's mirror of each worker's table).
+
+    Eviction is deterministic — strict least-recently-*touched* order
+    with an exact running byte total — so a client holding a same-budget
+    mirror, touching keys in the same order the worker does, predicts
+    the worker's evictions exactly.  A divergence (worker restart) is
+    not silent: the worker answers a missed ref with a typed error and
+    the client re-sends, so the mirror is an optimization, never a
+    correctness dependency."""
+
+    def __init__(self, budget_bytes: int = 8 << 20) -> None:
+        if budget_bytes <= 0:
+            raise ValueError(f"budget_bytes must be > 0, got {budget_bytes}")
+        self.budget = int(budget_bytes)
+        self._items: Dict[str, Tuple[Any, int]] = {}  # insertion = LRU order
+        self._nbytes = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._items
+
+    @property
+    def nbytes(self) -> int:
+        return self._nbytes
+
+    def get(self, key: str) -> Any:
+        """Value for ``key`` (refreshing its recency), or None."""
+        item = self._items.pop(key, None)
+        if item is None:
+            return None
+        self._items[key] = item  # re-append = most recent
+        return item[0]
+
+    def put(self, key: str, value: Any, nbytes: int) -> None:
+        old = self._items.pop(key, None)
+        if old is not None:
+            self._nbytes -= old[1]
+        self._items[key] = (value, int(nbytes))
+        self._nbytes += int(nbytes)
+        # evict least-recently-touched until under budget; a single
+        # over-budget entry is kept (the table must stay usable)
+        while self._nbytes > self.budget and len(self._items) > 1:
+            oldest = next(iter(self._items))
+            _, freed = self._items.pop(oldest)
+            self._nbytes -= freed
+            self.evictions += 1
+
+    def pop(self, key: str) -> None:
+        item = self._items.pop(key, None)
+        if item is not None:
+            self._nbytes -= item[1]
+
+    def clear(self) -> None:
+        self._items.clear()
+        self._nbytes = 0
 
 
 # ---------------------------------------------------------------------------

@@ -463,3 +463,30 @@ class TestDocumentedExample:
             want = dict(want)
             got.pop("wall_s"), want.pop("wall_s")  # measured, not schema
             assert got == want
+
+    def test_documented_delta_and_ref_rounds_replay(self):
+        """The doc's incremental sequence — full request, then snapshot-delta +
+        intern-define request, then the all-refs steady-state request — must
+        replay through one worker, each round yielding a plan_response, with
+        the ref round planning identically to the delta round off pure cached
+        state."""
+        from repro.core.remote import RemoteShardWorker
+
+        examples = _doc_examples()
+        assert {"plan-request-delta", "plan-request-ref"} <= set(examples)
+        worker = RemoteShardWorker()
+        blobs = []
+        resps = []
+        for name in ("plan-request", "plan-request-delta", "plan-request-ref"):
+            blob = wire.encode_frame(examples[name], codec="json")
+            blobs.append(blob)
+            resp = wire.decode_frame(worker.handle_bytes(blob))
+            assert resp["kind"] == "plan_response", (name, resp)
+            resps.append(resp)
+        delta_plan, ref_plan = resps[1]["plans"], resps[2]["plans"]
+        assert [p["result"]["decisions"] for p in ref_plan] == [
+            p["result"]["decisions"] for p in delta_plan
+        ]
+        # the steady-state request is a fraction of the priming requests
+        assert len(blobs[2]) < len(blobs[0]) / 2
+        assert len(blobs[2]) < len(blobs[1]) / 2
