@@ -66,6 +66,19 @@ class ResourceManager:
     #: register it in :mod:`repro.core.wire`.
     wire_impl = "pool"
 
+    #: Does planning over this manager mutate it?  The plan phase only
+    #: *reads* the base family (admission cursors are fresh copies from
+    #: ``begin_admission``; ``dp_operator`` closes over snapshots), so a
+    #: long-lived worker replica can be handed to ``plan_partition``
+    #: directly, round after round.  A family whose plan surface writes
+    #: into the manager (the CPU manager's trajectory binding via
+    #: ``partition()``) sets this True, and the resident-state layer
+    #: plans over a throwaway ``snapshot()`` instead — the copy-on-plan
+    #: reset.  Keep this honest: a False here with a mutating plan
+    #: surface corrupts worker state across rounds (the resident-state
+    #: property tests assert snapshot stability after planning).
+    plan_mutates = False
+
     def __init__(self, rtype: str, capacity: int) -> None:
         self.rtype = rtype
         self.capacity = int(capacity)
@@ -290,6 +303,28 @@ class ResourceManager:
         task_use = dict(state.get("task_use", {}))  # type: ignore[arg-type]
         m._task_use = {str(k): int(v) for k, v in task_use.items()}
         return m
+
+    def apply_state(self, state: Dict[str, object]) -> bool:
+        """Refresh this (already-restored) replica in place from a new
+        :meth:`snapshot_state` payload, returning True on success.
+
+        This is the cheap path a long-lived worker replica takes between
+        rounds: mutable free state is overwritten, immutable topology
+        (specs, node objects, allocator shells) is reused, and derived
+        caches that depend only on topology stay warm.  Returns False
+        when the payload describes a different topology (rtype,
+        capacity, node set...) — the caller then falls back to a full
+        ``restore_snapshot`` rebuild.  Contract: after a True return,
+        ``snapshot_state()`` must equal ``state`` exactly (the resident
+        property tests byte-compare them)."""
+        if str(state.get("rtype")) != self.rtype or int(
+            state.get("capacity", -1)  # type: ignore[arg-type]
+        ) != self.capacity:
+            return False
+        self._in_use = int(state.get("in_use", 0))  # type: ignore[arg-type]
+        task_use = dict(state.get("task_use", {}))  # type: ignore[arg-type]
+        self._task_use = {str(k): int(v) for k, v in task_use.items()}
+        return True
 
     # ------------------------------------------------------------------
     # structural snapshot deltas (wire twins of snapshot_state)

@@ -149,3 +149,28 @@ class BasicResourceManager(ResourceManager):
         m._in_use = int(state.get("in_use", 0))
         m._task_use = {str(k): int(v) for k, v in state.get("task_use", {}).items()}
         return m
+
+    def apply_state(self, state: dict) -> bool:
+        """In-place refresh of a restored replica (base contract).  The
+        pinned :class:`~repro.core.simulator.FrozenClock` is re-pinned at
+        the new snapshot instant — the state dict arrives refill-settled
+        at that instant, so the first ``available`` read after a True
+        return is a no-op refill and reads exactly the settled tokens."""
+        spec = state.get("spec", {})
+        if (
+            self.spec.name != str(spec.get("name"))
+            or self.spec.mode != str(spec.get("mode"))
+            or self.spec.max_concurrency != int(spec.get("max_concurrency", -1))
+            or self.spec.quota != int(spec.get("quota", -1))
+            or self.spec.period_s != float(spec.get("period_s", -1.0))
+        ):
+            return False
+        if not super().apply_state(
+            {"rtype": self.rtype, "capacity": self.capacity, **state}
+        ):
+            return False
+        self._clock = FrozenClock(float(state.get("now", 0.0)))
+        if self.mode == "quota":
+            self._tokens = int(state.get("tokens", self.spec.quota))
+            self._period_start = float(state.get("period_start", 0.0))
+        return True

@@ -88,6 +88,10 @@ class _NodeState:
 class CpuManager(ResourceManager):
     rtype_mem = "cpu_mem"
     wire_impl = "cpu"
+    # ``partition()`` binds trajectories (``_bind`` writes free memory +
+    # the binding map), so planning over this family mutates it — a
+    # resident worker replica must plan over a throwaway ``snapshot()``.
+    plan_mutates = True
 
     def __init__(self, nodes: Sequence[CpuNodeSpec]) -> None:
         super().__init__("cpu", sum(n.cores for n in nodes))
@@ -162,6 +166,37 @@ class CpuManager(ResourceManager):
         m._binding = {str(t): str(node) for t, node in state.get("binding", {}).items()}
         m._task_use = {str(k): int(v) for k, v in state.get("task_use", {}).items()}
         return m
+
+    def apply_state(self, state: dict) -> bool:
+        """In-place refresh (see the base contract): per-node free
+        cores/memory/trajectories and the binding map are overwritten;
+        node *objects* (and their frozen specs) are reused.  A topology
+        change — node count, order, or any spec field — returns False
+        for a full rebuild."""
+        nodes = state.get("nodes", [])
+        if len(nodes) != len(self.nodes):
+            return False
+        for st, n in zip(self.nodes.values(), nodes):
+            spec = n["spec"]
+            if (
+                st.spec.name != str(spec["name"])
+                or st.spec.cores != int(spec["cores"])
+                or st.spec.numa_nodes != int(spec["numa_nodes"])
+                or st.spec.memory_gb != float(spec["memory_gb"])
+            ):
+                return False
+        if not super().apply_state(
+            {"rtype": self.rtype, "capacity": self.capacity, **state}
+        ):
+            return False
+        for st, n in zip(self.nodes.values(), nodes):
+            st.free_cores = [set(int(c) for c in dom) for dom in n["free_cores"]]
+            st.free_mem_gb = float(n["free_mem_gb"])
+            st.trajectories = {str(t): float(v) for t, v in n["trajectories"].items()}
+        self._binding = {
+            str(t): str(node) for t, node in state.get("binding", {}).items()
+        }
+        return True
 
     # ------------------------------------------------------------------
     # structural snapshot deltas (per-node: a round touches few nodes)

@@ -361,6 +361,49 @@ class GpuManager(ResourceManager):
         m._task_use = {str(k): int(v) for k, v in state.get("task_use", {}).items()}
         return m
 
+    def apply_state(self, state: dict) -> bool:
+        """In-place refresh of a restored replica (base contract): each
+        allocator's free/busy chunk sets and cache tags are overwritten
+        and its memoized free-level counts invalidated; allocator shells,
+        node specs, and service specs are reused.  Node or service
+        topology changes return False for a full rebuild."""
+        nodes = state.get("nodes", [])
+        if [
+            (n["name"], n["devices"], n["device_memory_gb"], n["host_memory_gb"],
+             n["restore_bw_gbps"])
+            for n in nodes
+        ] != [
+            (s.name, s.devices, s.device_memory_gb, s.host_memory_gb,
+             s.restore_bw_gbps)
+            for s in self.node_specs.values()
+        ]:
+            return False
+        services = state.get("services", [])
+        if [
+            (s["name"], s["state_gb"], tuple(s["dops"])) for s in services
+        ] != [(s.name, s.state_gb, s.dops) for s in self.services.values()]:
+            return False
+        if set(state.get("allocators", {})) != set(self.allocators):
+            return False
+        if not super().apply_state(
+            {"rtype": self.rtype, "capacity": self.capacity, **state}
+        ):
+            return False
+        for name, st in state["allocators"].items():
+            alloc = self.allocators[str(name)]
+            alloc.free = {
+                lvl: set(int(s) for s in st["free"].get(str(lvl), []))
+                for lvl in range(alloc.max_level + 1)
+            }
+            alloc.busy = {(int(s), int(l)) for s, l in st["busy"]}
+            alloc.cache = {
+                (int(s), int(l)): ((str(svc), int(dop)), float(t))
+                for s, l, svc, dop, t in st["cache"]
+            }
+            alloc._level_counts = None
+        self._now = float(state.get("now", 0.0))
+        return True
+
     # ------------------------------------------------------------------
     # structural snapshot deltas (chunk-level: the free map dominates)
     # ------------------------------------------------------------------

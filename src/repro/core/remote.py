@@ -52,9 +52,30 @@ still accepts the plain full-payload forms):
 * **cross-round interning** — action payloads travel once as
   ``{"idef": fp, "val": ...}`` and afterwards as ``{"iref": fp}``
   references into a bounded LRU intern table the client mirrors
-  deterministically (same budget, same touch order).  A missed
+  deterministically (same budget, same touch order); a lifecycle
+  transition travels as a **patch-define** (``{"idef", "base", "d"}``)
+  cloning the interned base with the changed fields applied.  A missed
   reference — worker restart, budget divergence — produces a typed
   ``stale_intern`` error and one full re-send, never a wrong plan.
+
+Three more take the wire off the critical path (this, too, all within
+``WIRE_VERSION`` 1):
+
+* **encode memoization** — the client caches the encoded *bytes* of
+  fingerprint-stable sections (full action defines, full snapshots,
+  policy/fairness/history configs) and splices them into request frames
+  (:class:`~repro.core.wire.Encoded`): the same content sent to N
+  workers is serialized once, and encode time tracks bytes that
+  actually change, not state size;
+* **resident worker plan state** — each worker keeps one long-lived
+  plan-capable manager replica per resource type, refreshed in place
+  from structural deltas (``apply_state``) with a cheap copy-on-plan
+  for the families planning mutates — decode-time structures stay warm
+  instead of being rebuilt every request;
+* **pipelined dispatch** — requests are submitted as soon as each frame
+  is encoded, so shard i+1's encode overlaps shard i's worker compute;
+  response-encode cost is carried off the reported plan path, and
+  same-instant frames coalesce into one accounting round.
 
 Accounting is honest by construction: the modeled critical-path
 decision latency stays ``max(per-shard plan) + commit`` with per-shard
@@ -123,14 +144,23 @@ class RemoteShardWorker:
 
     Per-request inputs arrive in full, as ``{"ref": fp}`` references,
     as ``snapshot_delta`` structural diffs against a cached base, or as
-    ``{"iref": fp}`` intern references.  Snapshot *states* are cached,
-    but a fresh plan-capable manager is rebuilt from the cached state on
-    every request — planning mutates its managers (admission cursors,
-    the CPU manager's trajectory binding), so decoded snapshots are
-    single-use exactly like in-process ones.  All caches are byte-budget
-    LRUs (:class:`~repro.core.wire.LruBytes`): a long run cannot grow
-    worker memory without bound, and an eviction surfaces as a typed
-    error the client answers with a full re-send."""
+    ``{"iref": fp}`` intern references.  Manager state is *resident*:
+    one long-lived plan-capable replica per resource type, tagged with
+    the fingerprint of the state it embodies.  A request whose snapshot
+    fingerprint matches reuses the replica as-is; a changed snapshot is
+    applied **in place** (:meth:`~repro.core.managers.base.
+    ResourceManager.apply_state`) so decode-time structures (the DP
+    duration memos riding interned actions, allocator shells, node-state
+    objects) stay warm; only a topology change rebuilds from scratch.
+    Planning still never dirties the resident: families whose plan phase
+    mutates them (``plan_mutates`` — the CPU manager's trajectory
+    binding) are planned over a throwaway ``snapshot()`` clone taken
+    once per request, the *plan-scope reset*.  All byte caches are
+    byte-budget LRUs (:class:`~repro.core.wire.LruBytes`): a long run
+    cannot grow worker memory without bound, and an eviction surfaces as
+    a typed error the client answers with a full re-send.  (The resident
+    table itself holds exactly one live manager per resource type —
+    bounded by the managed fleet, not by history.)"""
 
     def __init__(self, cache_budget: int = CACHE_BUDGET_BYTES) -> None:
         self._policy: Optional[Any] = None
@@ -141,6 +171,13 @@ class RemoteShardWorker:
         self._history_avg: Dict[str, float] = {}
         # rtype -> (fingerprint, full snapshot envelope): the delta base
         self._snap_cache = wire.LruBytes(cache_budget)
+        # rtype -> (fingerprint, live manager replica): resident plan
+        # state — one replica per resource type, refreshed in place
+        # (bounded by the fleet, so not an LRU)
+        self._resident: Dict[str, Tuple[str, Any]] = {}
+        # per-request cache-effectiveness counters, returned in the
+        # plan response ("cache") so the client can aggregate hit rates
+        self._stats: Dict[str, float] = self._fresh_stats()
         # fingerprint -> resolved action payload (cross-round interning)
         self._interns = wire.LruBytes(cache_budget)
         # (list fp, [(member fp, Action)]): the executing-list delta
@@ -154,6 +191,24 @@ class RemoteShardWorker:
         # payload it produces; carrying it forward keeps the aggregate
         # wire bill honest without double-serializing)
         self._carry_dump_s = 0.0
+
+    @staticmethod
+    def _fresh_stats() -> Dict[str, float]:
+        """Zeroed per-request cache counters (every key is summable, so
+        the client folds responses straight into a run-wide aggregate)."""
+        return {
+            "intern_hits": 0,
+            "intern_defs": 0,
+            "intern_patches": 0,
+            "snap_refs": 0,
+            "snap_deltas": 0,
+            "snap_fulls": 0,
+            "resident_hits": 0,
+            "resident_patches": 0,
+            "resident_rebuilds": 0,
+            "rebuild_s": 0.0,
+            "reset_s": 0.0,
+        }
 
     # ------------------------------------------------------------------
     def handle_bytes(self, request: bytes) -> bytes:
@@ -186,10 +241,12 @@ class RemoteShardWorker:
         return self.handle_bytes(request.encode("utf-8")).decode("utf-8")
 
     # ------------------------------------------------------------------
-    def _snapshot(self, rtype: str, snap: Any) -> Dict[str, Any]:
-        """Materialize one full snapshot envelope from whichever form it
-        arrived in (full / ``{"ref": fp}`` / ``snapshot_delta``), and
-        keep the cache pointing at the newest base."""
+    def _snapshot(self, rtype: str, snap: Any) -> Tuple[str, Dict[str, Any]]:
+        """Materialize one (fingerprint, full snapshot envelope) pair
+        from whichever form it arrived in (full / ``{"ref": fp}`` /
+        ``snapshot_delta``), and keep the cache pointing at the newest
+        base.  The fingerprint is what the resident-replica layer keys
+        on, so it rides along instead of being recomputed."""
         if isinstance(snap, dict) and "ref" in snap:
             cached = self._snap_cache.get(rtype)
             if cached is None or cached[0] != snap["ref"]:
@@ -197,7 +254,8 @@ class RemoteShardWorker:
                     "stale_ref",
                     f"snapshot ref for {rtype!r} does not match cached state",
                 )
-            return cached[1]
+            self._stats["snap_refs"] += 1
+            return cached
         if isinstance(snap, dict) and snap.get("kind") == "snapshot_delta":
             d = wire.expect(snap, "snapshot_delta")
             base_fp = d.get("base")
@@ -214,31 +272,75 @@ class RemoteShardWorker:
                 # so the recovery round re-primes from a full snapshot
                 self._snap_cache.pop(rtype)
                 raise ProtocolStateError("delta_mismatch", str(e)) from None
-            self._snap_cache.put(
-                rtype, (str(d.get("fp")), full), wire.payload_nbytes(full)
-            )
-            return full
-        self._snap_cache.put(
-            rtype, (wire.fingerprint(snap), snap), wire.payload_nbytes(snap)
-        )
-        return snap
+            fp = str(d.get("fp"))
+            self._snap_cache.put(rtype, (fp, full), wire.payload_nbytes(full))
+            self._stats["snap_deltas"] += 1
+            return fp, full
+        fp = wire.fingerprint(snap)
+        self._snap_cache.put(rtype, (fp, snap), wire.payload_nbytes(snap))
+        self._stats["snap_fulls"] += 1
+        return fp, snap
+
+    def _manager(self, rtype: str, fp: str, full: Dict[str, Any]) -> Any:
+        """The resident replica for ``rtype`` at state ``fp``: reused
+        as-is on a fingerprint match, refreshed **in place** when the
+        family supports it (keeping decode-time structures warm), rebuilt
+        from the full envelope only on a topology change or first
+        sight.  Timing lands in the per-request stats so rebuild-vs-reset
+        cost is auditable from the client."""
+        st = self._stats
+        res = self._resident.get(rtype)
+        if res is not None and res[0] == fp:
+            st["resident_hits"] += 1
+            return res[1]
+        if res is not None:
+            t0 = time.perf_counter()
+            if res[1].apply_state(full["state"]):
+                st["resident_patches"] += 1
+                st["reset_s"] += time.perf_counter() - t0
+                self._resident[rtype] = (fp, res[1])
+                return res[1]
+        t0 = time.perf_counter()
+        mgr = wire.decode_snapshot(full)
+        st["resident_rebuilds"] += 1
+        st["rebuild_s"] += time.perf_counter() - t0
+        self._resident[rtype] = (fp, mgr)
+        return mgr
 
     def _resolve_action(self, node: Any, missing: List[str]) -> Optional[Action]:
         """One wire entry of an action list: an intern reference (table
         lookup; a miss collects into ``missing``), an intern definition
         (decode once, cache the Action under its fingerprint with the
-        sender's byte accounting), or a plain envelope (legacy form —
+        sender's byte accounting), a patch-define (clone the interned
+        base with the mutable-field diff applied — a missing base is
+        exactly a missed reference), or a plain envelope (legacy form —
         decoded fresh, never cached)."""
         if isinstance(node, dict):
             if "iref" in node and len(node) == 1:
                 a = self._interns.get(str(node["iref"]))
                 if a is None:
                     missing.append(str(node["iref"]))
+                else:
+                    self._stats["intern_hits"] += 1
+                return a
+            if "idef" in node and "base" in node:
+                base = self._interns.get(str(node["base"]))
+                if base is None:
+                    # the recovery full re-send defines the NEW
+                    # fingerprint from scratch, so that is what we
+                    # report missing — not the base we happen to lack
+                    missing.append(str(node["idef"]))
+                    return None
+                a = wire.patch_action(base, node.get("d") or {})
+                nbytes = node.get("n") or wire.payload_nbytes(node.get("d"))
+                self._interns.put(str(node["idef"]), a, int(nbytes))
+                self._stats["intern_patches"] += 1
                 return a
             if "idef" in node and "val" in node:
                 a = wire.decode_action(node["val"])
                 nbytes = node.get("n") or wire.payload_nbytes(node["val"])
                 self._interns.put(str(node["idef"]), a, int(nbytes))
+                self._stats["intern_defs"] += 1
                 return a
         return wire.decode_action(node)
 
@@ -323,7 +425,30 @@ class RemoteShardWorker:
         raise wire.WireError(f"plan_request: unknown {what} form {kind!r}")
 
     def _handle(self, payload: Any, parse_s: float = 0.0) -> Dict[str, Any]:
+        """Dispatch one decoded frame by kind: ``plan_request`` (one
+        plan round), ``plan_batch`` (several plan requests processed in
+        arrival order against the evolving cache state — one frame, one
+        framing overhead), or ``drain`` (flush the carried response-dump
+        cost so a run's LAST response encode is billed before the
+        transport closes)."""
+        kind = payload.get("kind") if isinstance(payload, dict) else None
+        if kind == "drain":
+            wire.expect(payload, "drain")
+            codec_s = parse_s + self._carry_dump_s
+            self._carry_dump_s = 0.0
+            return wire.envelope("drain_response", {"codec_s": codec_s})
+        if kind == "plan_batch":
+            batch = wire.expect(payload, "plan_batch")
+            resps = [
+                self._plan(r, parse_s if i == 0 else 0.0)
+                for i, r in enumerate(batch.get("reqs", []))
+            ]
+            return wire.envelope("plan_batch_response", {"resps": resps})
+        return self._plan(payload, parse_s)
+
+    def _plan(self, payload: Any, parse_s: float = 0.0) -> Dict[str, Any]:
         req = wire.expect(payload, "plan_request")
+        self._stats = self._fresh_stats()
         t_codec = time.perf_counter()
 
         if req.get("policy") is not None:
@@ -373,11 +498,22 @@ class RemoteShardWorker:
             self._exec_cache = None
             self._part_cache.clear()
 
+        # resident replicas: fingerprint hit -> reuse, state change ->
+        # in-place refresh, topology change -> rebuild.  The plan-scope
+        # reset is a throwaway snapshot() of exactly the families whose
+        # plan phase mutates them, taken ONCE per request and shared
+        # across this request's partitions — matching the one-decode-
+        # per-request semantics the rebuild path had.
         managers: Dict[str, Any] = {}
         for rtype, snap in req.get("snapshots", {}).items():
-            managers[str(rtype)] = wire.decode_snapshot(
-                self._snapshot(str(rtype), snap)
-            )
+            rt = str(rtype)
+            fp, full = self._snapshot(rt, snap)
+            mgr = self._manager(rt, fp, full)
+            if type(mgr).plan_mutates:
+                t_reset = time.perf_counter()
+                mgr = mgr.snapshot()
+                self._stats["reset_s"] += time.perf_counter() - t_reset
+            managers[rt] = mgr
 
         # resolve interned actions BEFORE planning over any of them: a
         # stale reference must fail the whole request atomically (one
@@ -453,6 +589,7 @@ class RemoteShardWorker:
             "plans": plan_payloads,
             "plan_s": plan_s,
             "codec_s": codec_s,
+            "cache": self._stats,
         }
         return wire.envelope("plan_response", body)
 
@@ -579,6 +716,36 @@ def _nk(x: Any) -> Any:
     return None if isinstance(x, float) and math.isnan(x) else x
 
 
+class _ActEnc:
+    """One action's cached wire identity.
+
+    The fingerprint and byte estimate are computed from the mutable-field
+    key alone; the full envelope (``payload``) is materialized lazily —
+    only when some worker actually needs a full define.  ``prev_fp`` /
+    ``patch`` remember the previous version of this uid and the field
+    diff against it, so a lifecycle transition can travel as a
+    patch-define to any worker still holding the old version."""
+
+    __slots__ = ("key", "fp", "nbytes", "action", "payload", "prev_fp", "patch")
+
+    def __init__(
+        self,
+        key: tuple,
+        fp: str,
+        nbytes: int,
+        action: Action,
+        prev_fp: Optional[str],
+        patch: Optional[Dict[str, Any]],
+    ) -> None:
+        self.key = key
+        self.fp = fp
+        self.nbytes = nbytes
+        self.action = action
+        self.payload: Optional[Dict[str, Any]] = None
+        self.prev_fp = prev_fp
+        self.patch = patch
+
+
 class RemoteRoundClient:
     """Drives one remote plan phase per sharded round.
 
@@ -589,9 +756,13 @@ class RemoteRoundClient:
     structural :func:`~repro.core.wire.encode_snapshot_delta` diffs
     against the worker's cached base — plus a deterministic mirror of
     the worker's intern table, so repeated action payloads travel as
-    ``{"iref": fp}`` references.  Encoded action payloads are cached
-    across rounds keyed on the mutable field tuple, so an unchanged
-    action costs neither encode CPU nor wire bytes.
+    ``{"iref": fp}`` references and mutated ones as patch-defines
+    against the version the worker still holds.  Encoded action
+    payloads are cached across rounds keyed on the mutable field tuple,
+    so an unchanged action costs neither encode CPU nor wire bytes; the
+    encoded *byte segments* of full sections are memoized by
+    fingerprint and spliced into frames, so even a changed round only
+    serializes what actually changed.
 
     Recovery: a typed worker error in :data:`RECOVERABLE_CODES` (cache
     eviction, worker restart, delta base mismatch) resets that worker's
@@ -623,9 +794,21 @@ class RemoteRoundClient:
         self._mirrors: List[wire.LruBytes] = []  # per-worker intern mirrors
         # client-side delta bases: rtype -> (fp, full snapshot envelope)
         self._prev_snaps: Dict[str, Tuple[str, Dict[str, Any]]] = {}
-        # uid -> (mutable-field key, fp, payload, nbytes): re-encoding an
-        # unchanged action is pure waste — skip it entirely
-        self._act_cache: Dict[int, Tuple[tuple, str, Dict[str, Any], int]] = {}
+        # uid -> _ActEnc: re-encoding an unchanged action is pure waste
+        # — skip it entirely (payload materialized lazily, see _ActEnc)
+        self._act_cache: Dict[int, _ActEnc] = {}
+        # fingerprint-keyed pre-encoded byte segments ("a:"/"s:"/"p:"/
+        # "f:"/"h:" + fp), spliced into request frames instead of
+        # re-serializing the payload tree; governed by the same byte
+        # budget as every other wire cache
+        self._segments = wire.LruBytes(CACHE_BUDGET_BYTES)
+        # per-round encode-memo consultations (act cache, queue cache,
+        # segment cache) — flushed to Telemetry after each round
+        self._memo_hits = 0
+        self._memo_misses = 0
+        # last scheduling instant a wire round was accounted at: frames
+        # for the same instant merge into one accounting round
+        self._last_now: Optional[float] = None
         # slot -> (payload, fp): policy/fairness/history digest memo
         self._shared_cache: Dict[str, Tuple[Any, str]] = {}
         # uid -> frozenset of managed rtypes its cost touches (immutable
@@ -643,7 +826,29 @@ class RemoteRoundClient:
 
     # ------------------------------------------------------------------
     def close(self) -> None:
+        # flush each worker's carried response-dump cost before closing:
+        # the LAST plan response's encode was timed but never reported
+        # (it rides the NEXT response by design) — a drain round-trip
+        # folds that tail into the telemetry so a finished run's wire
+        # bill is complete.  A worker that cannot answer (already dead,
+        # mid-restart test transport) just loses its tail.
+        tel = getattr(self.orch, "telemetry", None)
         for t in self._transports:
+            try:
+                blob = wire.encode_frame(wire.envelope("drain", {}), self.codec)
+                t.submit(blob)
+                resp = t.recv()
+                payload = wire.decode_frame(resp)
+                if (
+                    tel is not None
+                    and isinstance(payload, dict)
+                    and payload.get("kind") == "drain_response"
+                ):
+                    tel.wire_worker_codec_s += float(payload.get("codec_s", 0.0))
+                    tel.wire_bytes += len(blob) + len(resp)
+                    tel.wire_frames += 1
+            except Exception:  # noqa: BLE001 - best-effort flush
+                pass
             t.close()
         self._transports.clear()
         self._sent.clear()
@@ -654,6 +859,8 @@ class RemoteRoundClient:
         self._queue_cache.clear()
         self._exec_prev_uids.clear()
         self._act_rsets.clear()
+        self._segments.clear()
+        self._last_now = None
 
     def _transport(self, i: int) -> ShardTransport:
         while len(self._transports) <= i:
@@ -670,13 +877,29 @@ class RemoteRoundClient:
         self._mirrors[i].clear()
 
     # ------------------------------------------------------------------
-    def _encode_action_cached(
-        self, a: Action
-    ) -> Tuple[str, Dict[str, Any], int]:
-        """(fingerprint, payload, nbytes) of one action's wire envelope,
-        re-encoded only when a mutable field changed since the cached
-        round.  Immutable fields (cost, elasticity, ids) never re-key;
-        the scalar metadata slice does, because planning reads it."""
+    def _segment(self, skey: str, payload: Any) -> wire.Encoded:
+        """The pre-encoded byte segment for a fingerprint-keyed payload:
+        encoded at most once per content version, then spliced verbatim
+        into every frame that carries it (all workers this round, every
+        later full re-send while it lives in the budget)."""
+        seg = self._segments.get(skey)
+        if seg is not None:
+            self._memo_hits += 1
+            return seg
+        self._memo_misses += 1
+        seg = wire.encode_segment(payload, self.codec)
+        self._segments.put(skey, seg, len(seg))
+        return seg
+
+    def _encode_action_cached(self, a: Action) -> _ActEnc:
+        """The cached wire identity of one action, re-keyed only when a
+        mutable field changed since the cached round.  Immutable fields
+        (cost, elasticity, ids) never re-key; the scalar metadata slice
+        does, because planning reads it.  A re-key computes the *field
+        diff* against the previous version — the payload a patch-define
+        ships — and defers the full envelope until some worker needs
+        one; counting: an unchanged key is a memo hit, a re-key or a
+        first sighting is a miss."""
         meta = a.metadata
         mkey: tuple = ()
         if meta:
@@ -698,9 +921,30 @@ class RemoteRoundClient:
             mkey,
         )
         hit = self._act_cache.get(a.uid)
-        if hit is not None and hit[0] == key:
-            return hit[1], hit[2], hit[3]
-        payload = wire.encode_action(a)
+        if hit is not None and hit.key == key:
+            self._memo_hits += 1
+            return hit
+        self._memo_misses += 1
+        prev_fp: Optional[str] = None
+        patch: Optional[Dict[str, Any]] = None
+        if hit is not None:
+            prev_fp = hit.fp
+            patch = {}
+            old = hit.key
+            if old[0] != key[0]:
+                patch["state"] = a.state.value
+            if old[1] != key[1]:
+                patch["attempts"] = a.attempts
+            for i, field in (
+                (2, "submit_time"),
+                (3, "start_time"),
+                (4, "finish_time"),
+                (5, "sys_overhead"),
+            ):
+                if old[i] != key[i]:
+                    patch[field] = getattr(a, field)
+            if old[6] != mkey:
+                patch["metadata"] = wire._wire_metadata(meta)
         # identity hashes the uid plus the mutable-field key: immutable
         # fields can never differ for a uid, so this is exactly as
         # collision-free as hashing the whole payload at a fraction of
@@ -711,35 +955,43 @@ class RemoteRoundClient:
         # schema-based size estimate for intern byte budgeting — the
         # define ships it ("n"), so both tables account identically
         # without a serialization pass per encode
-        nbytes = 300 + 60 * len(payload["cost"]) + 24 * len(payload["metadata"])
-        for s in (
-            payload["name"], payload["task_id"],
-            payload["trajectory_id"], payload["key_resource"],
-            payload["service"],
-        ):
+        nbytes = 300 + 60 * len(a.cost) + 24 * len(mkey)
+        for s in (a.name, a.task_id, a.trajectory_id, a.key_resource, a.service):
             if isinstance(s, str):
                 nbytes += len(s)
-        self._act_cache[a.uid] = (key, fp, payload, nbytes)
-        return fp, payload, nbytes
+        enc = _ActEnc(key, fp, nbytes, a, prev_fp, patch)
+        self._act_cache[a.uid] = enc
+        return enc
 
-    def _wire_action(
-        self, mirror: wire.LruBytes, enc: Tuple[str, Dict[str, Any], int]
-    ) -> Dict[str, Any]:
-        """Intern decision for one action on one worker: reference if
-        the mirror says the worker holds it, define otherwise.  Mirror
-        touches replicate the worker's table touches in the same order
-        with the same byte accounting, so evictions match."""
-        fp, payload, nbytes = enc
-        if mirror.get(fp) is not None:
-            return wire.intern_ref(fp)
-        mirror.put(fp, True, nbytes)
-        return wire.intern_def(fp, payload, nbytes)
+    def _wire_action(self, mirror: wire.LruBytes, enc: _ActEnc) -> Any:
+        """Intern decision for one action on one worker: a reference if
+        the mirror says the worker holds this version, a patch-define if
+        it holds the immediately-previous version, a full define (as a
+        memoized byte segment) otherwise.  Mirror touches replicate the
+        worker's table touches in the same order with the same byte
+        accounting, so evictions match — a miss probe does not reorder
+        either table."""
+        if mirror.get(enc.fp) is not None:
+            return wire.intern_ref(enc.fp)
+        if (
+            enc.patch is not None
+            and enc.prev_fp is not None
+            and mirror.get(enc.prev_fp) is not None
+        ):
+            mirror.put(enc.fp, True, enc.nbytes)
+            return wire.intern_patch(enc.fp, enc.prev_fp, enc.patch, enc.nbytes)
+        mirror.put(enc.fp, True, enc.nbytes)
+        if enc.payload is None:
+            enc.payload = wire.encode_action(enc.action)
+        return self._segment(
+            "a:" + enc.fp, wire.intern_def(enc.fp, enc.payload, enc.nbytes)
+        )
 
     def _wire_list(
         self,
         mirror: wire.LruBytes,
         prev: Optional[Tuple[str, List[str]]],
-        enc: List[Tuple[str, Dict[str, Any], int]],
+        enc: List[_ActEnc],
         fps: List[str],
         lfp: str,
     ) -> Dict[str, Any]:
@@ -757,10 +1009,10 @@ class RemoteRoundClient:
             cur_set = set(fps)
             prev_set = set(prev_fps)
             kept = [f for f in prev_fps if f in cur_set]
-            ins: List[Tuple[int, Tuple[str, Dict[str, Any], int]]] = []
+            ins: List[Tuple[int, _ActEnc]] = []
             ki, ok = 0, True
             for i, e in enumerate(enc):
-                f = e[0]
+                f = e.fp
                 if ki < len(kept) and f == kept[ki]:
                     ki += 1
                 elif f not in prev_set:
@@ -810,12 +1062,15 @@ class RemoteRoundClient:
         exec_prev = self._exec_prev_uids
         act_cache = self._act_cache
         rsets = self._act_rsets
-        executing_enc = []
+        executing_enc: List[_ActEnc] = []
         exec_rsets = []
         for a in executing:
             hit = act_cache.get(a.uid)
             if hit is not None and a.uid in exec_prev:
-                executing_enc.append((hit[1], hit[2], hit[3]))
+                # two consecutive executing sets: not mutated in between
+                # — skip even the key computation
+                self._memo_hits += 1
+                executing_enc.append(hit)
             else:
                 executing_enc.append(self._encode_action_cached(a))
             rs = rsets.get(a.uid)
@@ -827,7 +1082,7 @@ class RemoteRoundClient:
         self._exec_prev_uids = seen_uids.copy()
         nbytes = 0
         for shard_idx, group in enumerate(groups):
-            parts_enc: List[Tuple[str, List[Tuple[str, Dict[str, Any], int]], List[str], str]] = []
+            parts_enc: List[Tuple[str, List[_ActEnc], List[str], str]] = []
             rtypes: set = set()
             for part in group:
                 queue = orch._queues.get(part)
@@ -846,6 +1101,9 @@ class RemoteRoundClient:
                 # instead of O(depth) per round
                 cached = self._queue_cache.get(part)
                 if cached is not None and cached[0] == queue.version:
+                    # section-level memo hit: one consultation covered
+                    # the whole partition's encoded view
+                    self._memo_hits += 1
                     _, members, enc, fps, lfp, part_rtypes, tags = cached
                 else:
                     # version changed: re-enumerate, but re-key only the
@@ -864,10 +1122,11 @@ class RemoteRoundClient:
                         uid = a.uid
                         hit = act_cache.get(uid)
                         if hit is not None and prev_tags.get(uid) == tags[uid]:
-                            enc.append((hit[1], hit[2], hit[3]))
+                            self._memo_hits += 1
+                            enc.append(hit)
                         else:
                             enc.append(self._encode_action_cached(a))
-                    fps = [e[0] for e in enc]
+                    fps = [e.fp for e in enc]
                     lfp = wire.list_fingerprint(fps)
                     part_rtypes = frozenset(
                         r for a in waiting for r in a.cost if r in orch.managers
@@ -894,53 +1153,68 @@ class RemoteRoundClient:
         # in-flight set strictly through per-rtype filters, so the
         # subset plans identically while the fan-out (and the define
         # traffic behind it) shrinks by the shard count
-        requests: List[Tuple[int, Any, Any, bytes]] = []
+        encode_s = time.perf_counter() - t_enc
+
+        # ---- pipelined dispatch (encode shard i+1 while i is in
+        # flight) -------------------------------------------------------
+        # each request is submitted the moment its frame exists, so a
+        # process-backed worker parses and plans shard i while the
+        # client is still encoding shard i+1 — only the HEAD request's
+        # encode is inherently serial with worker compute.  encode_s
+        # stays the pure-encode sum and transport_s the submit+recv
+        # wall sum, so the components remain comparable with the
+        # serialized model; the overlap-aware critical path is reported
+        # separately (overlap_s).
+        requests: List[Tuple[int, Any, Any]] = []
+        transport_s = 0.0
+        e_head = 0.0
         for shard_idx, parts_enc, rtypes in shard_parts:
+            t0 = time.perf_counter()
             sub_enc = [
                 e
                 for rs, e in zip(exec_rsets, executing_enc)
                 if not rtypes.isdisjoint(rs)
             ]
-            sub_fps = [e[0] for e in sub_enc]
+            sub_fps = [e.fp for e in sub_enc]
             exec_sub = (sub_enc, sub_fps, wire.list_fingerprint(sub_fps))
-            requests.append(
-                (
-                    shard_idx,
-                    (parts_enc, exec_sub),
-                    rtypes,
-                    wire.encode_frame(
-                        self._request(shard_idx, parts_enc, rtypes,
-                                      exec_sub, shared),
-                        self.codec,
-                    ),
-                )
+            blob = wire.encode_frame(
+                self._request(shard_idx, parts_enc, rtypes, exec_sub, shared),
+                self.codec,
             )
+            t1 = time.perf_counter()
+            encode_s += t1 - t0
+            if not requests:
+                e_head = t1 - t0
+            nbytes += len(blob)
+            self._transport(shard_idx).submit(blob)
+            transport_s += time.perf_counter() - t1
+            requests.append((shard_idx, (parts_enc, exec_sub), rtypes))
         # drop encode-cache entries for actions that left the system —
-        # everything alive was just seen, so this is exact
+        # everything alive was just seen, so this is exact (runs while
+        # the workers compute, off any per-request path)
+        t0 = time.perf_counter()
         if len(self._act_cache) > len(seen_uids):
             for uid in [u for u in self._act_cache if u not in seen_uids]:
                 del self._act_cache[uid]
         if len(rsets) > len(seen_uids):
             for uid in [u for u in rsets if u not in seen_uids]:
                 del rsets[uid]
-        encode_s = time.perf_counter() - t_enc
+        encode_s += time.perf_counter() - t0
 
-        # ---- dispatch + gather (worker compute overlaps) --------------
-        t_tx = time.perf_counter()
-        for shard_idx, _, _, blob in requests:
-            nbytes += len(blob)
-            self._transport(shard_idx).submit(blob)
-        responses: List[Tuple[int, Any, Any, bytes]] = [
-            (shard_idx, ctx, rtypes, self._transport(shard_idx).recv())
-            for shard_idx, ctx, rtypes, _ in requests
-        ]
-        transport_s = time.perf_counter() - t_tx
+        # ---- gather (in submit order) ---------------------------------
+        responses: List[Tuple[int, Any, Any, bytes]] = []
+        for shard_idx, ctx, rtypes in requests:
+            t0 = time.perf_counter()
+            blob = self._transport(shard_idx).recv()
+            transport_s += time.perf_counter() - t0
+            responses.append((shard_idx, ctx, rtypes, blob))
 
         # ---- decode phase (client-side cost; worker codec separate) ---
         t_dec = time.perf_counter()
         critical = 0.0
         decode_s = 0.0
         worker_codec_s = 0.0
+        max_codec = 0.0
         for shard_idx, ctx, rtypes, blob in responses:
             nbytes += len(blob)
             payload = wire.decode_frame(blob)
@@ -952,7 +1226,12 @@ class RemoteRoundClient:
                 nbytes += extra
             resp = wire.expect(payload, "plan_response")
             plan_s = float(resp.get("plan_s", 0.0))
-            worker_codec_s += float(resp.get("codec_s", 0.0))
+            codec_s = float(resp.get("codec_s", 0.0))
+            worker_codec_s += codec_s
+            max_codec = max(max_codec, codec_s)
+            cache = resp.get("cache")
+            if cache:
+                telemetry.note_worker_cache(cache)
             shard_plans = [wire.decode_plan(p, by_uid) for p in resp["plans"]]
             critical = max(critical, plan_s)
             telemetry.note_shard_round(shard_idx, len(shard_plans), plan_s)
@@ -961,9 +1240,28 @@ class RemoteRoundClient:
 
         telemetry.plan_critical_s += critical
         telemetry.plan_wall_s += time.perf_counter() - t_round
+        # overlap-aware wire critical path of this round: only the head
+        # request's encode is serial with worker compute, the slowest
+        # worker's codec bill gates the last response, and the client
+        # decode tail is serial again.  Frames fired at the SAME
+        # scheduling instant (multi-pass rounds coalesced by the round
+        # engine) merge into the previous accounting round.
+        overlap_s = e_head + max_codec + decode_s
+        new_round = self._last_now is None or orch.now != self._last_now
+        self._last_now = orch.now
         telemetry.note_wire_round(
-            encode_s, transport_s, decode_s, nbytes, worker_codec_s
+            encode_s,
+            transport_s,
+            decode_s,
+            nbytes,
+            worker_codec_s,
+            overlap_s=overlap_s,
+            frames=len(requests),
+            new_round=new_round,
         )
+        telemetry.note_wire_memo(self._memo_hits, self._memo_misses)
+        self._memo_hits = 0
+        self._memo_misses = 0
         return plans, critical
 
     # ------------------------------------------------------------------
@@ -1081,13 +1379,24 @@ class RemoteRoundClient:
         sent = self._sent[shard_idx]
         mirror = self._mirrors[shard_idx]
 
+        # full payloads travel as memoized byte segments keyed on the
+        # fingerprint delta-suppression already computed — the same
+        # content sent to N workers (or re-sent after a fallback) is
+        # serialized once and spliced N times.  refs and deltas stay
+        # plain: they are tiny and never repeat.
         policy_payload, policy_fp = shared["policy"]
-        policy = None if sent.get("policy") == policy_fp else policy_payload
+        policy = (
+            None
+            if sent.get("policy") == policy_fp
+            else self._segment("p:" + policy_fp, policy_payload)
+        )
         sent["policy"] = policy_fp
 
         fs_payload, fs_fp = shared["fair_share"]
         fair_share: Any = (
-            {"ref": fs_fp} if sent.get("fair_share") == fs_fp else fs_payload
+            {"ref": fs_fp}
+            if sent.get("fair_share") == fs_fp
+            else self._segment("f:" + fs_fp, fs_payload)
         )
         sent["fair_share"] = fs_fp
 
@@ -1095,7 +1404,9 @@ class RemoteRoundClient:
         if shared["history"] is not None:
             hist_payload, hist_fp = shared["history"]
             history = (
-                {"ref": hist_fp} if sent.get("history") == hist_fp else hist_payload
+                {"ref": hist_fp}
+                if sent.get("history") == hist_fp
+                else self._segment("h:" + hist_fp, hist_payload)
             )
             sent["history"] = hist_fp
 
@@ -1108,7 +1419,7 @@ class RemoteRoundClient:
             elif delta is not None and sent_fp == prev_fp:
                 snapshots[rtype] = delta
             else:
-                snapshots[rtype] = snap
+                snapshots[rtype] = self._segment("s:" + fp, snap)
             sent["snaps"][rtype] = fp
 
         # action lists travel as cross-round list deltas (ref / delta /

@@ -279,7 +279,10 @@ class RoundExecutor:
     * ``"remote"`` — each shard's plan phase runs in a
       :class:`~repro.core.remote.RemoteShardWorker` behind a
       :class:`~repro.core.remote.ShardTransport` (snapshots and plans
-      cross a serialization boundary; see :mod:`repro.core.remote`).
+      cross a serialization boundary; shard frames are dispatched
+      pipelined — shard *i+1* encodes while shard *i* is in flight —
+      against workers holding resident replicas refreshed in place;
+      see :mod:`repro.core.remote`).
 
     Plans are deterministic — identical in every mode."""
 

@@ -88,6 +88,24 @@ class Telemetry:
     wire_bytes: int = 0
     wire_rounds: int = 0
     wire_fallbacks: int = 0
+    # overlap-aware critical path of pipelined dispatch: per round, the
+    # head request's encode + the slowest worker's codec bill + the
+    # round's decode — the part of the wire bill that CANNOT hide behind
+    # worker compute or other shards' encodes.  Reported beside the
+    # serialized sums above, never in place of them.
+    wire_overlap_s: float = 0.0
+    # frames sent (a coalesced same-instant batch is one accounting
+    # round but several frames; wire_frames >= wire_rounds)
+    wire_frames: int = 0
+    # client-side encode memoization: one hit/miss per cache
+    # consultation (action segment, snapshot segment, shared-section
+    # segment) — the steady-state hit rate is the CI-gated floor
+    wire_memo_hits: int = 0
+    wire_memo_misses: int = 0
+    # worker-reported cache effectiveness, aggregated over plan
+    # responses (intern/snapshot/resident-state hit counters plus
+    # rebuild-vs-reset wall time); keys documented in remote.py
+    wire_worker_cache: Dict[str, float] = field(default_factory=dict)
     # -- sub-queue migration (Orchestrator.migrate_task/rebalance) -----------
     migrations: int = 0  # detach->merge moves between partition replicas
     migrated_actions: int = 0
@@ -114,29 +132,78 @@ class Telemetry:
         decode_s: float,
         nbytes: int,
         worker_codec_s: float = 0.0,
+        overlap_s: float = 0.0,
+        frames: int = 1,
+        new_round: bool = True,
     ) -> None:
-        """One remote plan round's serialization accounting."""
-        self.wire_rounds += 1
+        """One remote plan round's serialization accounting.
+
+        ``new_round=False`` merges a same-instant frame batch into the
+        previous accounting round: every cost still accrues, frames
+        still count, but ``wire_rounds`` does not advance — so per-round
+        derived figures (bytes/round) reflect scheduling instants, not
+        frame count."""
+        if new_round:
+            self.wire_rounds += 1
+        self.wire_frames += frames
         self.wire_encode_s += encode_s
         self.wire_transport_s += transport_s
         self.wire_decode_s += decode_s
         self.wire_worker_codec_s += worker_codec_s
+        self.wire_overlap_s += overlap_s
         self.wire_bytes += nbytes
+
+    def note_wire_memo(self, hits: int, misses: int) -> None:
+        """Client encode-memo consultations for one round."""
+        self.wire_memo_hits += hits
+        self.wire_memo_misses += misses
+
+    def note_worker_cache(self, stats: Dict[str, float]) -> None:
+        """Fold one worker plan-response's cache counters into the
+        run-wide aggregate (all keys are summable counts or seconds)."""
+        acc = self.wire_worker_cache
+        for k, v in stats.items():
+            acc[k] = acc.get(k, 0.0) + float(v)
+
+    def reset_wire(self) -> None:
+        """Zero every wire counter (bench warm-up discards)."""
+        self.wire_encode_s = 0.0
+        self.wire_decode_s = 0.0
+        self.wire_worker_codec_s = 0.0
+        self.wire_transport_s = 0.0
+        self.wire_bytes = 0
+        self.wire_rounds = 0
+        self.wire_fallbacks = 0
+        self.wire_overlap_s = 0.0
+        self.wire_frames = 0
+        self.wire_memo_hits = 0
+        self.wire_memo_misses = 0
+        self.wire_worker_cache = {}
 
     def wire_summary(self) -> Dict[str, float]:
         """Aggregate wire overhead of remote plan phases ({} when the
         round engine never left the process)."""
         if not self.wire_rounds:
             return {}
-        return {
+        out = {
             "rounds": float(self.wire_rounds),
+            "frames": float(self.wire_frames),
             "encode_s": self.wire_encode_s,
             "decode_s": self.wire_decode_s,
             "worker_codec_s": self.wire_worker_codec_s,
             "transport_s": self.wire_transport_s,
+            "overlap_s": self.wire_overlap_s,
             "bytes": float(self.wire_bytes),
             "fallbacks": float(self.wire_fallbacks),
+            "memo_hits": float(self.wire_memo_hits),
+            "memo_misses": float(self.wire_memo_misses),
         }
+        consulted = self.wire_memo_hits + self.wire_memo_misses
+        if consulted:
+            out["memo_hit_rate"] = self.wire_memo_hits / consulted
+        for k, v in sorted(self.wire_worker_cache.items()):
+            out[f"worker_{k}"] = float(v)
+        return out
 
     def note_shard_round(self, shard: int, partitions: int, plan_s: float) -> None:
         st = self.shards.setdefault(shard, ShardStats())

@@ -48,6 +48,7 @@ True
 
 from __future__ import annotations
 
+import copy
 import hashlib
 import json
 import math
@@ -218,8 +219,48 @@ _T_NULL, _T_FALSE, _T_TRUE = 0x00, 0x01, 0x02
 _T_INT, _T_FLOAT, _T_STR = 0x03, 0x04, 0x05
 _T_LIST, _T_DICT, _T_SREF = 0x06, 0x07, 0x08
 _T_INTS, _T_FLOATS = 0x09, 0x0A
+_T_BLOB = 0x0B  # spliced pre-encoded segment (length-prefixed sub-frame)
 
 _F64 = struct.Struct(">d")
+
+
+class Encoded:
+    """A pre-encoded wire segment, splice-ready.
+
+    The encode-memoization layer (remote.RemoteRoundClient) caches the
+    *bytes* of sections whose fingerprints it already tracks for delta
+    suppression — a full snapshot envelope, an interned action payload,
+    the policy config — and assembles request frames by splicing those
+    cached segments instead of re-serializing the payload tree.  A
+    segment is codec-specific: ``"json"`` holds the exact
+    :func:`dumps` text (splicing byte-joins it, so a spliced frame is
+    byte-identical to a plain one), ``"binary"`` holds a standalone
+    sub-frame body with its *own* string table (frame-level string
+    interning is positional, so a segment cannot reuse the enclosing
+    frame's table) framed by the :data:`_T_BLOB` tag.  Decoders never
+    see the difference: a spliced frame decodes to the identical
+    payload tree."""
+
+    __slots__ = ("codec", "blob")
+
+    def __init__(self, codec: str, blob: bytes) -> None:
+        self.codec = codec
+        self.blob = blob
+
+    def __len__(self) -> int:
+        return len(self.blob)
+
+
+def encode_segment(payload: Any, codec: str = "json") -> Encoded:
+    """Pre-encode one payload subtree for frame splicing (see
+    :class:`Encoded`)."""
+    if codec == "json":
+        return Encoded("json", dumps(payload).encode("utf-8"))
+    if codec != "binary":
+        raise WireError(f"unknown wire codec {codec!r} (have {WIRE_CODECS})")
+    out = bytearray()
+    _enc_value(payload, out, {})
+    return Encoded("binary", bytes(out))
 
 
 def _uvarint(n: int, out: bytearray) -> None:
@@ -262,6 +303,14 @@ def _enc_value(obj: Any, out: bytearray, strings: Dict[str, int]) -> None:
             out.append(_T_STR)
             _uvarint(len(raw), out)
             out += raw
+    elif isinstance(obj, Encoded):
+        if obj.codec != "binary":
+            raise WireError(
+                f"binary frame: cannot splice a {obj.codec!r} segment"
+            )
+        out.append(_T_BLOB)
+        _uvarint(len(obj.blob), out)
+        out += obj.blob
     elif isinstance(obj, (list, tuple)):
         if obj and all(type(x) is int for x in obj):
             out.append(_T_INTS)
@@ -382,7 +431,52 @@ class _FrameReader:
                     raise WireError("binary frame: non-str dict key")
                 out[k] = self.value()
             return out
+        if tag == _T_BLOB:
+            n = self._uvarint()
+            end = self.pos + n
+            if end > len(blob):
+                raise WireError("binary frame: truncated segment")
+            # a segment is a standalone sub-frame: fresh string table
+            sub = _FrameReader(blob, self.pos)
+            v = sub.value()
+            if sub.pos != end:
+                raise WireError(
+                    f"binary frame: segment length mismatch "
+                    f"({sub.pos - self.pos} != {n})"
+                )
+            self.pos = end
+            return v
         raise WireError(f"binary frame: unknown value tag 0x{tag:02x}")
+
+
+def _json_splice(obj: Any, out: List[bytes]) -> None:
+    """Byte-join a payload tree that may contain :class:`Encoded` json
+    segments, producing output byte-identical to ``dumps`` over the
+    fully materialized tree (same separators, same float spelling, same
+    key order) — cached segment bytes are appended verbatim."""
+    if isinstance(obj, Encoded):
+        if obj.codec != "json":
+            raise WireError(f"json frame: cannot splice a {obj.codec!r} segment")
+        out.append(obj.blob)
+    elif isinstance(obj, dict):
+        out.append(b"{")
+        first = True
+        for k, v in obj.items():
+            if not isinstance(k, str):
+                raise WireError(f"json splice: non-str dict key {k!r}")
+            out.append((b"," if not first else b"") + dumps(k).encode("utf-8") + b":")
+            first = False
+            _json_splice(v, out)
+        out.append(b"}")
+    elif isinstance(obj, (list, tuple)):
+        out.append(b"[")
+        for i, v in enumerate(obj):
+            if i:
+                out.append(b",")
+            _json_splice(v, out)
+        out.append(b"]")
+    else:
+        out.append(dumps(obj).encode("utf-8"))
 
 
 def encode_frame(payload: Any, codec: str = "json") -> bytes:
@@ -393,9 +487,21 @@ def encode_frame(payload: Any, codec: str = "json") -> bytes:
     ``"binary"`` is the compact tag/varint frame with frame-level
     string interning and packed int/float columns.  Both decode through
     :func:`decode_frame`, which sniffs the leading byte — binary frames
-    start with :data:`WIRE_MAGIC`, which can never begin UTF-8 text."""
+    start with :data:`WIRE_MAGIC`, which can never begin UTF-8 text.
+
+    A payload may embed :class:`Encoded` segments of the same codec
+    (the client's encode-memo cache); the json path splices them by
+    byte-join (``dumps`` fails fast on the wrapper type, so segment-free
+    frames stay on the C encoder), the binary path by the
+    :data:`_T_BLOB` tag.  Either way the frame decodes to the payload
+    tree with every segment expanded in place."""
     if codec == "json":
-        return dumps(payload).encode("utf-8")
+        try:
+            return dumps(payload).encode("utf-8")
+        except TypeError:
+            buf: List[bytes] = []
+            _json_splice(payload, buf)
+            return b"".join(buf)
     if codec != "binary":
         raise WireError(f"unknown wire codec {codec!r} (have {WIRE_CODECS})")
     out = bytearray([WIRE_MAGIC])
@@ -550,6 +656,47 @@ def decode_action(payload: Mapping[str, Any]) -> Action:
     a.finish_time = float(p.get("finish_time", math.nan))
     a.sys_overhead = float(p.get("sys_overhead", 0.0))
     a.attempts = int(p.get("attempts", 0))
+    return a
+
+
+#: The mutable action fields a patch-define may carry.  Everything else
+#: on the wire surface (uid, cost, elasticity, ids, weights...) is
+#: immutable for an action's lifetime, which is exactly why a lifecycle
+#: transition can travel as a tiny diff against the previously interned
+#: version instead of a full re-define.
+PATCH_TIME_FIELDS = ("submit_time", "start_time", "finish_time", "sys_overhead")
+
+
+def patch_action(base: Action, d: Mapping[str, Any]) -> Action:
+    """Materialize a patch-define: a *clone* of the interned ``base``
+    action with the diff ``d`` applied.
+
+    The clone is shallow except for ``metadata`` — the interned base is
+    shared with every cached list that references it, so it must never
+    be mutated in place.  Underscore metadata (the ``_dp_durs`` duration
+    memo) carries over: it depends only on immutable fields, exactly the
+    reuse argument the intern table itself rests on, and matches the
+    serial loop where a live action's memo survives its lifecycle
+    transitions.  ``d["metadata"]``, when present, replaces the whole
+    wire-visible scalar slice (the client re-sends it on any change)."""
+    a = copy.copy(base)
+    a.metadata = dict(base.metadata)
+    md = d.get("metadata")
+    if md is not None:
+        kept = {k: v for k, v in a.metadata.items() if k.startswith("_")}
+        kept.update(md)
+        a.metadata = kept
+    st = d.get("state")
+    if st is not None:
+        try:
+            a.state = ActionState(st)
+        except ValueError:
+            raise WireError(f"action patch: unknown state {st!r}") from None
+    if "attempts" in d:
+        a.attempts = int(d["attempts"])
+    for f in PATCH_TIME_FIELDS:
+        if f in d:
+            setattr(a, f, float(d[f]))
     return a
 
 
@@ -814,6 +961,23 @@ def intern_def(fp: str, payload: Any, nbytes: Optional[int] = None) -> Dict[str,
 def intern_ref(fp: str) -> Dict[str, str]:
     """Reference to a payload the receiver's intern table already holds."""
     return {"iref": fp}
+
+
+def intern_patch(
+    fp: str, base_fp: str, d: Dict[str, Any], nbytes: Optional[int] = None
+) -> Dict[str, Any]:
+    """Patch-define: intern ``fp`` as the ``base_fp`` payload the
+    receiver already holds, with the mutable-field diff ``d`` applied
+    (see :func:`patch_action`).  An action's lifecycle transition
+    (queued → running, a retry bump) then travels as a handful of
+    changed fields instead of a full re-define.  A receiver missing
+    ``base_fp`` treats it exactly like a missed ``iref`` — collected
+    into the atomic ``stale_intern`` error — and the sender's recovery
+    full re-send needs no new machinery."""
+    out: Dict[str, Any] = {"idef": fp, "base": base_fp, "d": d}
+    if nbytes is not None:
+        out["n"] = int(nbytes)
+    return out
 
 
 def resolve_interned(node: Any, table: "LruBytes", missing: List[str]) -> Any:

@@ -490,3 +490,27 @@ class TestDocumentedExample:
         # the steady-state request is a fraction of the priming requests
         assert len(blobs[2]) < len(blobs[0]) / 2
         assert len(blobs[2]) < len(blobs[1]) / 2
+
+
+class TestDocumentedPatchDefine:
+    def test_documented_patch_define_resolves(self):
+        """The doc's patch-define node names the real fingerprints: its
+        ``base`` is the documented action's fingerprint, and resolving
+        the patch through a real worker yields an action whose
+        re-encoded fingerprint is exactly the node's ``idef``."""
+        from repro.core.remote import RemoteShardWorker
+
+        examples = _doc_examples()
+        assert "patch-define" in examples
+        node = examples["patch-define"]
+        act = examples["action"]
+        assert node["base"] == wire.fingerprint(act)
+
+        worker = RemoteShardWorker()
+        missing = []
+        base = worker._resolve_action(wire.intern_def(node["base"], act), missing)
+        patched = worker._resolve_action(node, missing)
+        assert missing == []
+        assert patched is not base
+        assert wire.fingerprint(wire.encode_action(patched)) == node["idef"]
+        assert patched.state.value == "running" and patched.attempts == 1

@@ -657,3 +657,167 @@ class TestQueueVersion:
         assert [a.uid for a in q.ordered()] == [
             u for u in first if u != acts[2].uid
         ]
+
+
+# ---------------------------------------------------------------------------
+# encode memoization primitives: spliced segments, patch-defines,
+# batched frames and the drain flush
+# ---------------------------------------------------------------------------
+
+
+class TestEncodedSegments:
+    PAYLOAD = {
+        "kind": "x", "vals": [1, 2.5, "s", None, {"k": [3, 4]}], "t": True,
+    }
+
+    def test_json_splice_is_byte_identical(self):
+        """A frame assembled from cached json segments must be byte-for-
+        byte the frame a plain dumps would have produced — splicing is
+        an encode shortcut, never a wire dialect."""
+        seg = wire.encode_segment(self.PAYLOAD, "json")
+        framed = {"v": 1, "body": seg, "tail": [seg, 7]}
+        plain = {"v": 1, "body": self.PAYLOAD, "tail": [self.PAYLOAD, 7]}
+        assert wire.encode_frame(framed, "json") == wire.encode_frame(
+            plain, "json"
+        )
+
+    def test_binary_blob_round_trips(self):
+        """A binary segment is a standalone sub-frame with its own
+        string table; strings repeated inside and outside the segment
+        must not confuse either table."""
+        seg = wire.encode_segment(self.PAYLOAD, "binary")
+        framed = {"v": 1, "kind": "outer", "body": seg, "again": "kind"}
+        blob = wire.encode_frame(framed, "binary")
+        assert wire.decode_frame(blob) == {
+            "v": 1, "kind": "outer", "body": self.PAYLOAD, "again": "kind",
+        }
+
+    def test_codec_mismatch_is_typed(self):
+        jseg = wire.encode_segment(self.PAYLOAD, "json")
+        bseg = wire.encode_segment(self.PAYLOAD, "binary")
+        with pytest.raises(wire.WireError):
+            wire.encode_frame({"x": bseg}, "json")
+        with pytest.raises(wire.WireError):
+            wire.encode_frame({"x": jseg}, "binary")
+
+    def test_truncated_segment_is_typed(self):
+        blob = wire.encode_frame(
+            {"x": wire.encode_segment(self.PAYLOAD, "binary")}, "binary"
+        )
+        with pytest.raises(wire.WireError):
+            wire.decode_frame(blob[:-1])
+
+
+class TestPatchDefineResolution:
+    def _act(self):
+        return Action(
+            name="r", cost={"cpu": ranged("cpu", 1, 4)}, key_resource="cpu",
+            base_duration=2.0, task_id="t", trajectory_id="t-0",
+        )
+
+    def test_patch_define_through_a_real_worker(self):
+        """Lifecycle transition as a patch-define: the worker clones its
+        interned base, applies the diff, and the result is field-for-
+        field the action a full re-send would have defined."""
+        w = RemoteShardWorker()
+        a = self._act()
+        enc = wire.encode_action(a)
+        fp0 = wire.fingerprint(enc)
+        missing = []
+        r0 = w._resolve_action(wire.intern_def(fp0, enc), missing)
+        assert missing == [] and r0.uid == a.uid
+
+        a.state = type(a.state)("running")
+        a.start_time = 1.5
+        a.attempts = 1
+        d = {"state": a.state.value, "start_time": 1.5, "attempts": 1}
+        fp1 = wire.fingerprint(wire.encode_action(a))
+        r1 = w._resolve_action(wire.intern_patch(fp1, fp0, d), missing)
+        assert missing == []
+        assert wire.fingerprint(wire.encode_action(r1)) == fp1
+        assert r1 is not r0  # the interned base was cloned, not mutated
+        assert r0.state.value == "pending" and math.isnan(r0.start_time)
+        assert w._stats["intern_patches"] == 1
+        # the patched action is interned under the NEW fingerprint
+        assert w._resolve_action({"iref": fp1}, missing) is r1
+
+    def test_missing_base_reports_the_new_fingerprint(self):
+        """A patch against an evicted base is exactly a missed ref — and
+        what the worker asks to be re-sent is the NEW fingerprint (what
+        the recovery full-send will define), not the base it lacks."""
+        w = RemoteShardWorker()
+        missing = []
+        out = w._resolve_action(
+            wire.intern_patch("fp-new", "fp-gone", {"start_time": 1.0}),
+            missing,
+        )
+        assert out is None and missing == ["fp-new"]
+
+
+class _StreamRecorder(LoopbackTransport):
+    streams = []
+
+    def __init__(self):
+        super().__init__()
+        self._frames = []
+        _StreamRecorder.streams.append(self._frames)
+
+    def submit(self, request):
+        self._frames.append(bytes(request))
+        super().submit(request)
+
+
+class TestPlanBatchAndDrain:
+    def _real_requests(self, seed=5):
+        """Record one worker's full request stream from a healthy run —
+        batching semantics are only meaningful against real frames whose
+        refs/deltas/interns assume in-order application."""
+        _StreamRecorder.streams = []
+        orch = _make_system(2, plan_mode="remote")
+        orch._executor._remote._factory = _StreamRecorder
+        _submit_workload(orch, seed=seed)
+        orch.run()
+        orch.close()
+        streams = _StreamRecorder.streams
+        _StreamRecorder.streams = []
+        frames = max(streams, key=len)
+        reqs = [wire.decode_frame(f) for f in frames]
+        return [r for r in reqs if r.get("kind") == "plan_request"]
+
+    def test_plan_batch_equals_sequential_frames(self):
+        """One plan_batch frame must produce exactly the plans the same
+        requests produce as individual frames: each batched request is
+        applied against the cache state its predecessors left behind."""
+        reqs = self._real_requests()
+        if len(reqs) < 4:
+            pytest.skip("workload produced too few sharded rounds")
+
+        def strip(plans):  # wall_s is a measured duration, not a plan
+            return [
+                {k: v for k, v in p.items() if k != "wall_s"} for p in plans
+            ]
+
+        w_seq = RemoteShardWorker()
+        seq_plans = [strip(w_seq._handle(r)["plans"]) for r in reqs]
+
+        w_bat = RemoteShardWorker()
+        blob = wire.encode_frame(
+            wire.envelope("plan_batch", {"reqs": reqs}), "json"
+        )
+        resp = wire.expect(
+            wire.decode_frame(w_bat.handle_bytes(blob)), "plan_batch_response"
+        )
+        assert [strip(r["plans"]) for r in resp["resps"]] == seq_plans
+
+    def test_drain_flushes_carried_dump_cost(self):
+        """The run's LAST response-encode cost is carried, not dropped:
+        a drain message flushes it into an accounted reply, and the
+        carry starts over from just the drain's own (tiny) dump."""
+        w = RemoteShardWorker()
+        w._carry_dump_s = 0.125
+        out = w.handle_bytes(
+            wire.encode_frame(wire.envelope("drain", {}), "json")
+        )
+        resp = wire.expect(wire.decode_frame(out), "drain_response")
+        assert resp["codec_s"] >= 0.125
+        assert w._carry_dump_s < 0.125
