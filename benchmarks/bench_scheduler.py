@@ -321,8 +321,8 @@ def _fleet_action(pool: int, wave: int, i: int) -> Action:
 def _run_shard_churn(
     shards: Optional[int], queue: int = 128, waves: int = 16,
     cores: int = 8, period_s: float = 4.0,
-    plan_mode: str = "inline", transport: str = "loopback",
-    wire_codec: str = "json",
+    plan_mode: str = "inline", transport="loopback",
+    wire_codec: str = "json", pre_run=None,
 ):
     """Steady-state churn over ``SHARD_POOLS`` independent pools, each
     smaller than its demand so a deep backlog persists: every wave
@@ -334,7 +334,10 @@ def _run_shard_churn(
     serialized commit — see repro.core.shards).  ``plan_mode="remote"``
     sends the plan phase through the wire codecs to shard workers
     (``transport``: "loopback" = in-process workers behind the full
-    encode/decode path, "process" = real worker OS processes)."""
+    encode/decode path, "process" = real worker OS processes, or a
+    ``shard_idx -> ShardTransport`` factory for socket fleets).
+    ``pre_run(orch)`` runs before the clock starts — the chaos suite's
+    hook for scheduling virtual-time worker kills."""
     from repro.core.simulator import EventLoop
 
     per_pool = max(1, queue // SHARD_POOLS)
@@ -348,6 +351,8 @@ def _run_shard_churn(
         wire_codec=wire_codec,
     )
     wave_no = [0]
+    if pre_run is not None:
+        pre_run(orch)
 
     def submit_wave() -> None:
         w = wave_no[0]
@@ -715,6 +720,296 @@ def check_shards(rows: List[Dict[str, object]], shards: int = 4) -> None:
 
 
 # ---------------------------------------------------------------------------
+# Chaos suite: the fleet churn over real TCP sockets under kill/restart
+# storms and packet-level fault schedules (--suite chaos is the CI
+# chaos-smoke gate)
+# ---------------------------------------------------------------------------
+
+#: Virtual times of the kill-storm's server-side connection drops.  All
+#: after the warm-up window (the wire counters reset at ~4s) so every
+#: loss lands in the measured figures; the horizon filter in run_chaos
+#: keeps low --scale runs meaningful.
+CHAOS_KILL_TIMES = (5.0, 9.0, 13.0, 21.0, 29.0, 37.0)
+
+#: Packet-fault schedules (shard -> request index -> fault).  Indices
+#: start at 3 so no fault burns inside the warm-up window where the
+#: telemetry is reset.  The amnesia plan is separate: silent worker
+#: replacement exercises the stale-ref storm (typed protocol errors +
+#: full re-send), not the transport-loss rail, and the gate checks the
+#: two stay distinguishable.
+CHAOS_FAULT_PLAN = {
+    0: {3: "drop_recv", 7: "amnesia", 10: "truncate"},
+    1: {4: "drop_submit", 8: "amnesia"},
+    2: {5: "amnesia", 9: "drop_recv"},
+}
+CHAOS_AMNESIA_PLAN = {
+    0: {3: "amnesia", 6: "amnesia"},
+    1: {4: "amnesia"},
+    2: {5: "amnesia"},
+    3: {7: "amnesia"},
+}
+
+
+def run_chaos(scale: float = 1.0, shards: int = 4) -> List[Dict[str, object]]:
+    """Chaos rows: the queue-128 fleet churn planned over real TCP
+    socket workers while the harness kills connections (worker death +
+    reconnect-to-a-blank-worker) and injects packet-level faults
+    (dropped requests/responses, mid-frame truncation, silent worker
+    amnesia).  Every scenario's launch trace must stay bit-identical to
+    the serial round loop — fault tolerance is allowed to cost wire
+    time, never correctness."""
+    from repro.core.transport import (
+        SocketTransport,
+        WorkerServer,
+        chaos_fleet,
+        socket_fleet,
+    )
+
+    queue = 128
+    waves = max(6, int(16 * scale))
+    horizon = waves * 4.0
+    serial = _run_shard_churn(None, queue=queue, waves=waves)
+
+    # (a) kill/restart storm: server-side connection drops at fixed
+    # virtual times; the endpoint stays up so clients reconnect
+    with WorkerServer() as srv:
+        kill_times = [t for t in CHAOS_KILL_TIMES if t < horizon]
+
+        def schedule_kills(orch: Orchestrator) -> None:
+            for t in kill_times:
+                orch.loop.call_after(t, srv.kill_connections)
+
+        storm = _run_shard_churn(
+            shards, queue=queue, waves=waves, plan_mode="remote",
+            transport=socket_fleet([srv.addr]), pre_run=schedule_kills,
+        )
+
+    # (b) mixed packet faults: deterministic per-shard schedules
+    with WorkerServer() as srv:
+        fault_fac = chaos_fleet(
+            lambda i: SocketTransport(srv.addr), CHAOS_FAULT_PLAN
+        )
+        faulted = _run_shard_churn(
+            shards, queue=queue, waves=waves, plan_mode="remote",
+            transport=fault_fac,
+        )
+        faults_fired = sum(p.faults_fired for p in fault_fac.plans.values())
+
+    # (c) stale-ref storm: pure amnesia — silent worker replacement must
+    # surface as typed protocol errors absorbed by full re-sends, with
+    # ZERO transport losses (the rails must not blur together)
+    with WorkerServer() as srv:
+        amn_fac = chaos_fleet(
+            lambda i: SocketTransport(srv.addr), CHAOS_AMNESIA_PLAN
+        )
+        amnesia = _run_shard_churn(
+            shards, queue=queue, waves=waves, plan_mode="remote",
+            transport=amn_fac,
+        )
+        amnesia_fired = sum(p.faults_fired for p in amn_fac.plans.values())
+
+    def _flag(run) -> float:
+        return 1.0 if run["trace"] == serial["trace"] else 0.0
+
+    storm_wire = storm["wire"]
+    fault_wire = faulted["wire"]
+    amn_wire = amnesia["wire"]
+    rows: List[Dict[str, object]] = [
+        {
+            "name": "chaos_kill_storm_traces_identical",
+            "us_per_call": _flag(storm),
+            "mean_act": storm["mean_act"],
+            "derived": (
+                f"kills={len(kill_times)};events={storm['events']};"
+                f"serial_events={serial['events']};"
+                "1=launch trace bit-identical to serial under the storm"
+            ),
+        },
+        {
+            "name": "chaos_kill_storm_worker_losses",
+            "us_per_call": storm_wire.get("worker_losses", 0.0),
+            "mean_act": "",
+            "derived": (
+                f"reconnects={storm_wire.get('reconnects', 0.0):.0f};"
+                f"inline_parts={storm_wire.get('inline_parts', 0.0):.0f};"
+                "losses must be > 0 or the storm was vacuous"
+            ),
+        },
+        {
+            "name": "chaos_packet_faults_traces_identical",
+            "us_per_call": _flag(faulted),
+            "mean_act": faulted["mean_act"],
+            "derived": (
+                f"faults_fired={faults_fired};"
+                f"losses={fault_wire.get('worker_losses', 0.0):.0f};"
+                f"resends={fault_wire.get('fallbacks', 0.0):.0f};"
+                "drops+truncation+amnesia on scheduled request indices"
+            ),
+        },
+        {
+            "name": "chaos_amnesia_traces_identical",
+            "us_per_call": _flag(amnesia),
+            "mean_act": amnesia["mean_act"],
+            "derived": (
+                f"faults_fired={amnesia_fired};"
+                f"resends={amn_wire.get('fallbacks', 0.0):.0f};"
+                f"losses={amn_wire.get('worker_losses', 0.0):.0f};"
+                "silent worker swaps -> typed stale-ref + full re-send"
+            ),
+        },
+        {
+            "name": "chaos_amnesia_full_resends",
+            "us_per_call": amn_wire.get("fallbacks", 0.0),
+            "mean_act": "",
+            "derived": "full-content recovery rounds absorbed by the client",
+        },
+    ]
+    return rows
+
+
+def check_chaos(rows: List[Dict[str, object]]) -> None:
+    """CI chaos-smoke gates: (a) every chaos scenario's launch trace is
+    bit-identical to serial (which also proves zero lost / doubled
+    launches — the trace is the complete launch ledger); (b) the storm
+    really stormed (worker losses > 0); (c) the amnesia run really
+    exercised the stale-ref rail (full re-sends > 0) WITHOUT transport
+    losses (the two recovery rails stay distinguishable)."""
+    by_name = {str(r["name"]): r for r in rows}
+    for flag_name in (
+        "chaos_kill_storm_traces_identical",
+        "chaos_packet_faults_traces_identical",
+        "chaos_amnesia_traces_identical",
+    ):
+        row = by_name[flag_name]
+        if float(row["us_per_call"]) != 1.0:  # type: ignore[arg-type]
+            raise SystemExit(f"{flag_name}: launch trace diverged from serial")
+    losses = float(by_name["chaos_kill_storm_worker_losses"]["us_per_call"])  # type: ignore[arg-type]
+    resends = float(by_name["chaos_amnesia_full_resends"]["us_per_call"])  # type: ignore[arg-type]
+    amn_derived = str(by_name["chaos_amnesia_traces_identical"]["derived"])
+    amn_losses = float(amn_derived.split("losses=")[1].split(";")[0])
+    print(
+        f"# chaos check: all traces identical; kill-storm losses={losses:.0f} "
+        f"amnesia resends={resends:.0f} amnesia losses={amn_losses:.0f}"
+    )
+    if losses <= 0:
+        raise SystemExit("kill storm recorded no worker losses (vacuous storm)")
+    if resends <= 0:
+        raise SystemExit("amnesia storm drove no full re-sends (stale-ref rail idle)")
+    if amn_losses > 0:
+        raise SystemExit(
+            "amnesia storm surfaced as transport losses — the stale-ref rail "
+            "and the loss rail blurred together"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Telemetry-driven rebalance on an asymmetric fleet (rows ride in the
+# remote suite's BENCH_remote.json; the gate is part of --suite remote)
+# ---------------------------------------------------------------------------
+
+#: The rebalanced run's mean ACT must beat the no-rebalance run by at
+#: least this factor on the skewed fleet (measured ~3x; the floor
+#: absorbs workload-shape drift, not policy regressions).
+REBALANCE_ACT_WIN_FLOOR = 1.2
+
+
+def _run_rebalance_fleet(
+    rebalance: bool, pools: int = 4, cores: int = 2, n: int = 96,
+    duration: float = 2.0, period_s: float = 1.0,
+) -> Dict[str, float]:
+    """A replica fleet with every submission keyed to pool0 — the
+    asymmetric worst case the cadence exists for.  Virtual-time ACT and
+    makespan, plus the migration bill, with and without the policy."""
+    from repro.core.fairqueue import FairSharePolicy
+    from repro.core.simulator import EventLoop
+
+    loop = EventLoop()
+    managers = {f"pool{k}": ResourceManager(f"pool{k}", cores) for k in range(pools)}
+    fair = FairSharePolicy(weights={"a": 2.0, "b": 1.0, "c": 1.0, "d": 1.0})
+    orch = Orchestrator(managers, loop=loop, fair_share=fair)
+    if rebalance:
+        orch.enable_rebalance(sorted(managers), period_s=period_s)
+    for i in range(n):
+        orch.submit(Action(
+            name=f"w{i}", cost={"pool0": fixed("pool0", 1)},
+            base_duration=duration, task_id="abcd"[i % 4],
+            trajectory_id=f"t{i}",
+        ))
+    orch.run()
+    recs = orch.telemetry.records
+    out = {
+        "act": sum(r.finish - r.submit for r in recs) / max(1, len(recs)),
+        "makespan": max((r.finish for r in recs), default=0.0),
+        "ticks": float(orch.telemetry.rebalance_ticks),
+        "moves": float(orch.telemetry.rebalance_moves),
+        "migrated": float(orch.telemetry.migrated_actions),
+        "migration_wall_s": orch.telemetry.migration_wall_s,
+    }
+    orch.close()
+    return out
+
+
+def run_rebalance(scale: float = 1.0) -> List[Dict[str, object]]:
+    """Rebalance rows: mean ACT on the skewed 4-pool fleet with the
+    cadence off vs on, the win factor, and the migration bill (moves,
+    migrated actions, detach/merge wall) so the cost side of the trade
+    is committed next to the win."""
+    n = max(48, int(96 * scale))
+    off = _run_rebalance_fleet(False, n=n)
+    on = _run_rebalance_fleet(True, n=n)
+    win = off["act"] / max(1e-9, on["act"])
+    return [
+        {
+            "name": "rebalance_fleet4_act_off",
+            "us_per_call": off["act"],
+            "mean_act": off["act"],
+            "derived": (
+                f"virtual-s mean ACT, all load keyed to pool0, no policy;"
+                f"makespan={off['makespan']:.2f}"
+            ),
+        },
+        {
+            "name": "rebalance_fleet4_act_on",
+            "us_per_call": on["act"],
+            "mean_act": on["act"],
+            "derived": (
+                f"virtual-s mean ACT under the telemetry cadence;"
+                f"makespan={on['makespan']:.2f};ticks={on['ticks']:.0f};"
+                f"moves={on['moves']:.0f};migrated={on['migrated']:.0f};"
+                f"migration_wall_s={on['migration_wall_s']:.4f}"
+            ),
+        },
+        {
+            "name": "rebalance_fleet4_act_speedup",
+            "us_per_call": win,
+            "mean_act": "",
+            "derived": (
+                f"x_no_rebalance_over_rebalanced;floor={REBALANCE_ACT_WIN_FLOOR}"
+            ),
+        },
+    ]
+
+
+def check_rebalance(rows: List[Dict[str, object]]) -> None:
+    """Remote-suite gate: the cadence must buy a real ACT win on the
+    skewed fleet (>= REBALANCE_ACT_WIN_FLOOR) through actual migrations
+    — zero moves with a passing ratio would mean the scenario stopped
+    exercising the policy."""
+    by_name = {str(r["name"]): r for r in rows}
+    win = float(by_name["rebalance_fleet4_act_speedup"]["us_per_call"])  # type: ignore[arg-type]
+    derived = str(by_name["rebalance_fleet4_act_on"]["derived"])
+    moves = float(derived.split("moves=")[1].split(";")[0])
+    print(f"# rebalance check: act_win={win:.2f}x moves={moves:.0f}")
+    if moves <= 0:
+        raise SystemExit("rebalance scenario made no migrations (vacuous)")
+    if win < REBALANCE_ACT_WIN_FLOOR:
+        raise SystemExit(
+            f"rebalance ACT win {win:.2f}x fell below the floor "
+            f"{REBALANCE_ACT_WIN_FLOOR}x"
+        )
+
+
+# ---------------------------------------------------------------------------
 # Multi-tenant fairness scenario (2 heavy + 2 light tasks, wave arrivals)
 # ---------------------------------------------------------------------------
 
@@ -923,9 +1218,13 @@ def write_json(rows: List[Dict[str, object]], path: str) -> None:
         # fairness_* rows and flag rows carry dimensionless metrics
         # (shares, flags, ratios), not latencies — keep them out of the
         # ns_per_op trend.
+        # chaos_* rows are flags/counts and rebalance_* rows virtual-time
+        # ACTs — none of them are wall-clock latencies either.
         is_ratio = (
             "speedup" in name
             or name.startswith("fairness_")
+            or name.startswith("chaos_")
+            or name.startswith("rebalance_")
             or name.endswith("_traces_identical")
         )
         scenarios[name] = {
@@ -966,6 +1265,7 @@ _SUITE_JSON = {
     "fairness": "BENCH_fairness.json",
     "shards": "BENCH_shards.json",
     "remote": "BENCH_remote.json",
+    "chaos": "BENCH_chaos.json",
 }
 
 
@@ -981,11 +1281,21 @@ def main(
         json_path = _SUITE_JSON[suite]
     if suite == "remote":
         remote_rows = run_remote(scale, shards=shards, transport=transport)
+        remote_rows += run_rebalance(scale)
         emit(remote_rows, "remote plan-over-wire vs the serial round loop")
         if json_path:
             write_json(remote_rows, json_path)
         if check:
             check_remote(remote_rows)
+            check_rebalance(remote_rows)
+        return
+    if suite == "chaos":
+        chaos_rows = run_chaos(scale, shards=shards)
+        emit(chaos_rows, "fleet churn over TCP under kill storms and packet faults")
+        if json_path:
+            write_json(chaos_rows, json_path)
+        if check:
+            check_chaos(chaos_rows)
         return
     if suite == "fairness":
         fairness_rows = run_fairness(scale)
@@ -1031,13 +1341,17 @@ if __name__ == "__main__":
                          "the >=1.5x-speedup / trace-identity gates "
                          "(shards), or the trace-identity / wire-exercised "
                          "gates (remote)")
-    ap.add_argument("--suite", choices=("latency", "fairness", "shards", "remote"),
+    ap.add_argument("--suite",
+                    choices=("latency", "fairness", "shards", "remote", "chaos"),
                     default="latency",
                     help="latency = decision-latency scenarios (default); "
                          "fairness = multi-tenant weighted-share scenario; "
                          "shards = sharded plan/commit rounds vs serial; "
-                         "remote = plan-over-wire shard workers vs serial, "
-                         "with serialization overhead reported separately")
+                         "remote = plan-over-wire shard workers vs serial "
+                         "(plus the asymmetric-fleet rebalance rows), with "
+                         "serialization overhead reported separately; "
+                         "chaos = socket-fleet churn under kill/restart "
+                         "storms and packet-level fault injection")
     ap.add_argument("--shards", type=int, default=4,
                     help="shard count for the fleet-churn scenario (the "
                          "plan/commit engine's parallel planners)")

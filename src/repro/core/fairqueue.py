@@ -373,6 +373,18 @@ class PartitionQueue:
     def backlog(self) -> Dict[str, int]:
         return {t: len(sub) for t, sub in self._subs.items() if sub}
 
+    def backlog_cost(self) -> Dict[str, float]:
+        """Queued *work*, per task, in this queue's cost units (the
+        same ``cost_of`` WFQ tags are charged in — resource-seconds
+        under :func:`default_cost`).  The rebalance policy weighs moves
+        by queued work, not action count: ten 1-second actions and one
+        10-second action are the same backlog."""
+        return {
+            t: sum(self._cost_of(a) for a in sub.values())
+            for t, sub in self._subs.items()
+            if sub
+        }
+
     def oldest_submit_by_task(self) -> Dict[str, float]:
         """Earliest submit time among queued actions, per task — the
         numerator of the starvation-age telemetry."""

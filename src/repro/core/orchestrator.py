@@ -61,7 +61,18 @@ from __future__ import annotations
 import math
 import time
 from functools import partial
-from typing import Dict, Iterable, List, Mapping, Optional, Protocol, Sequence, Set, Tuple
+from typing import (
+    TYPE_CHECKING,
+    Dict,
+    Iterable,
+    List,
+    Mapping,
+    Optional,
+    Protocol,
+    Sequence,
+    Set,
+    Tuple,
+)
 
 from repro.core.action import (
     TERMINAL_STATES,
@@ -81,6 +92,9 @@ from repro.core.scheduler import (
 from repro.core.shards import PartitionPlan, RoundExecutor, plan_partition
 from repro.core.simulator import EventLoop, Future
 from repro.core.telemetry import ActionRecord, Telemetry
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.core.rebalance import RebalancePolicy, RebalanceSignals
 
 # Decision latency charged per scheduling round when not measuring the
 # real wall clock (Table 1 shows sub-3% system overhead on CPU workloads).
@@ -160,7 +174,7 @@ class Orchestrator:
         fair_share: Optional[FairSharePolicy] = None,
         shards: Optional[int] = None,
         plan_mode: str = "inline",
-        transport: str = "loopback",
+        transport="loopback",
         wire_codec: str = "json",
     ) -> None:
         self.loop = loop or EventLoop()
@@ -200,6 +214,10 @@ class Orchestrator:
         self._round_scheduled = False
         self._refill_wake_at = math.inf
         self._stall_retries = 0  # consecutive no-event retry ticks
+        # --- telemetry-driven rebalance cadence (enable_rebalance) ---------
+        self._rebalance_policy = None
+        self._rebalance_replicas: List[str] = []
+        self._rebalance_armed = False
         # Sharded plan/commit rounds (None = the serial loop, bit-
         # identical to the pre-shard engine).  shards=1 still exercises
         # the snapshot plan/commit machinery — the equivalence tests'
@@ -208,9 +226,13 @@ class Orchestrator:
         # pick from the measured plan-cost EWMA), or "remote" (each
         # shard's plan phase in a separate worker process behind the
         # ``transport`` — "loopback" plans in-process through the full
-        # wire codecs, "process" spawns real workers; ``wire_codec`` —
-        # "binary" compact frames or "json" v1 text).  Plans are
-        # identical in every mode and codec.
+        # wire codecs, "process" spawns real workers, or a callable
+        # ``shard_idx -> ShardTransport`` such as
+        # repro.core.transport.socket_fleet for workers on other
+        # machines; ``wire_codec`` — "binary" compact frames or "json"
+        # v1 text).  Plans are identical in every mode and codec, and a
+        # lost worker's partitions fall back to inline planning (see
+        # repro.core.remote).
         self.shards = shards
         self._executor = (
             RoundExecutor(
@@ -434,6 +456,87 @@ class Orchestrator:
             moved += self.migrate_task(task, hi, lo)
 
     # ------------------------------------------------------------------
+    # telemetry-driven rebalance cadence (repro.core.rebalance)
+    # ------------------------------------------------------------------
+    def enable_rebalance(
+        self,
+        replicas: Sequence[str],
+        policy: Optional["RebalancePolicy"] = None,
+        period_s: Optional[float] = None,
+    ) -> None:
+        """Drive sub-queue rebalancing across the ``replicas`` group on
+        a virtual-time cadence: every ``policy.period_s`` seconds (while
+        any replica has queued work) a :class:`~repro.core.rebalance.
+        RebalancePolicy` reads live signals — queue depths, per-task
+        backlog and queued work, starvation ages, pool utilization, the
+        round engine's per-partition plan-cost EWMAs — and orders
+        migrations through :meth:`migrate_task`.  The cadence disarms
+        itself when the replicas drain (so ``run()`` terminates) and
+        re-arms on the next enqueue.  ``replicas`` must be genuine
+        replicas (same unit semantics — the :meth:`migrate_task`
+        contract).  Deterministic under the DES clock: the same run
+        always makes the same moves."""
+        from repro.core.rebalance import RebalancePolicy
+
+        if policy is None:
+            policy = (
+                RebalancePolicy()
+                if period_s is None
+                else RebalancePolicy(period_s=period_s)
+            )
+        elif period_s is not None:
+            policy.period_s = float(period_s)
+        replicas = sorted(replicas)
+        for p in replicas:
+            if p not in self.managers:
+                raise ValueError(f"enable_rebalance: unknown replica partition {p!r}")
+        self._rebalance_replicas = replicas
+        self._rebalance_policy = policy
+        self._arm_rebalance()
+
+    def _arm_rebalance(self) -> None:
+        if self._rebalance_policy is None or self._rebalance_armed:
+            return
+        self._rebalance_armed = True
+        self.loop.call_after(self._rebalance_policy.period_s, self._rebalance_tick)
+
+    def _rebalance_tick(self) -> None:
+        self._rebalance_armed = False
+        policy = self._rebalance_policy
+        if policy is None:
+            return
+        if not any(self._queues.get(p) for p in self._rebalance_replicas):
+            return  # drained: stay disarmed until the next enqueue
+        self.telemetry.rebalance_ticks += 1
+        moves = policy.decide(self._rebalance_signals(), self._rebalance_replicas)
+        for task, src, dst in moves:
+            if self.migrate_task(task, src, dst):
+                self.telemetry.rebalance_moves += 1
+        self._arm_rebalance()
+
+    def _rebalance_signals(self) -> "RebalanceSignals":
+        """Snapshot the policy's inputs from live orchestrator state."""
+        from repro.core.rebalance import RebalanceSignals
+
+        now = self.now
+        sig = RebalanceSignals(now=now)
+        for p in self._rebalance_replicas:
+            q = self._queues.get(p)
+            sig.depths[p] = len(q) if q is not None else 0
+            sig.backlogs[p] = q.backlog() if q else {}
+            sig.backlog_cost[p] = q.backlog_cost() if q else {}
+            sig.starvation[p] = (
+                {t: now - s for t, s in q.oldest_submit_by_task().items()}
+                if q
+                else {}
+            )
+            m = self.managers.get(p)
+            sig.utilization[p] = m.utilization() if m is not None else 0.0
+        if self._executor is not None:
+            sig.plan_cost_s = dict(self._executor.plan_cost_by_part)
+        return sig
+
+    # ------------------------------------------------------------------
     # queue + index plumbing (all O(1))
     # ------------------------------------------------------------------
     @staticmethod
@@ -488,6 +591,9 @@ class Orchestrator:
         self._stall_retries = 0
         self._dirty.add(part)
         self._request_round()
+        # new queued work re-arms the rebalance cadence (it disarms
+        # itself when the replica group drains, so run() terminates)
+        self._arm_rebalance()
 
     def _dequeue(self, action: Action, served: bool = False) -> None:
         part = self._partition_of(action)

@@ -93,13 +93,16 @@ tagged binary codec — both self-describing).
 
 from __future__ import annotations
 
+import atexit
+import inspect
 import math
 import time
-from typing import TYPE_CHECKING, Any, Dict, List, Optional, Sequence, Tuple
+import weakref
+from typing import TYPE_CHECKING, Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core import wire
 from repro.core.action import Action
-from repro.core.shards import PartitionPlan, plan_partition
+from repro.core.shards import PartitionPlan, SnapshotMap, plan_partition
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from repro.core.orchestrator import Orchestrator
@@ -117,6 +120,12 @@ CACHE_BUDGET_BYTES = 8 << 20
 RECOVERABLE_CODES = frozenset(
     {"stale_ref", "stale_base", "delta_mismatch", "stale_intern"}
 )
+
+#: Ceiling on the round-based reconnect backoff after worker loss: a
+#: down worker is retried after skipping 0, 1, 3, 7, ... rounds, capped
+#: here.  Round-based (not wall-clock) so recovery behaviour is
+#: deterministic under the virtual-time DES harness.
+MAX_BACKOFF_ROUNDS = 7
 
 
 class ProtocolStateError(wire.WireError):
@@ -618,6 +627,12 @@ class ShardTransport:
     def close(self) -> None:  # pragma: no cover - interface
         pass
 
+    def __enter__(self) -> "ShardTransport":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
     @staticmethod
     def _as_bytes(request) -> bytes:
         """Coerce a str frame to UTF-8 (JSON text is a legal frame)."""
@@ -665,13 +680,38 @@ def _worker_main(conn) -> None:
     conn.close()
 
 
+#: Every live ProcessTransport, swept at interpreter exit: a transport
+#: abandoned without close() (test failure paths, leaked orchestrators)
+#: must not leave worker processes behind.  Daemonic workers die with
+#: the parent anyway, but only at hard exit — the sweep (and __del__)
+#: reaps them as soon as the transport is collected or atexit runs.
+_LIVE_PROCESS_TRANSPORTS: "weakref.WeakSet[ProcessTransport]" = weakref.WeakSet()
+
+
+def _sweep_process_transports() -> None:  # pragma: no cover - atexit path
+    for t in list(_LIVE_PROCESS_TRANSPORTS):
+        try:
+            t.close()
+        except Exception:  # noqa: BLE001 - exit path, best effort
+            pass
+
+
+atexit.register(_sweep_process_transports)
+
+
 class ProcessTransport(ShardTransport):
     """A shard worker in a separate OS process over a multiprocessing
     pipe.  Frames are opaque bytes (``send_bytes``/``recv_bytes`` — no
     object pickling); an empty frame is the shutdown signal (a real
     frame is never empty: JSON text has at least one byte and binary
     frames start with the magic byte).  Workers are daemonic: they can
-    never outlive the orchestrator."""
+    never outlive the orchestrator — and they do not linger either:
+    ``close()`` is idempotent, runs from ``__del__`` when a transport
+    is garbage-collected unclosed, and an atexit sweep reaps any still
+    alive at interpreter exit.  A dead worker (killed process, broken
+    pipe) surfaces as :class:`~repro.core.wire.TransportError`
+    (``"reset"``) so the round client's loss-fallback rail handles it
+    like any other carrier."""
 
     def __init__(self, start_method: Optional[str] = None) -> None:
         import multiprocessing as mp
@@ -681,20 +721,43 @@ class ProcessTransport(ShardTransport):
                 "fork" if "fork" in mp.get_all_start_methods() else "spawn"
             )
         ctx = mp.get_context(start_method)
+        self._closed = False
         self._conn, child = ctx.Pipe()
         self._proc = ctx.Process(target=_worker_main, args=(child,), daemon=True)
         self._proc.start()
         child.close()
+        _LIVE_PROCESS_TRANSPORTS.add(self)
 
     def submit(self, request: bytes) -> None:
-        self._conn.send_bytes(self._as_bytes(request))
+        try:
+            self._conn.send_bytes(self._as_bytes(request))
+        except (OSError, ValueError) as e:
+            raise wire.TransportError(
+                "reset", f"shard worker pipe broken at submit: {e}"
+            ) from None
 
     def recv(self) -> bytes:
-        return self._conn.recv_bytes()
+        try:
+            return self._conn.recv_bytes()
+        except EOFError:
+            raise wire.TransportError(
+                "truncated_frame", "shard worker died holding the request"
+            ) from None
+        except (OSError, ValueError) as e:
+            raise wire.TransportError(
+                "reset", f"shard worker pipe broken at recv: {e}"
+            ) from None
 
     def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        _LIVE_PROCESS_TRANSPORTS.discard(self)
         try:
             self._conn.send_bytes(b"")
+        except (OSError, ValueError):
+            pass
+        try:
             self._conn.close()
         except (OSError, ValueError):
             pass
@@ -702,8 +765,31 @@ class ProcessTransport(ShardTransport):
         if self._proc.is_alive():  # pragma: no cover - defensive
             self._proc.terminate()
 
+    def __del__(self) -> None:
+        try:
+            self.close()
+        except Exception:  # noqa: BLE001 - interpreter teardown
+            pass
+
 
 _TRANSPORTS = {"loopback": LoopbackTransport, "process": ProcessTransport}
+
+
+def _per_shard(factory: Callable) -> Callable[[int], "ShardTransport"]:
+    """Normalize a transport callable to ``shard_idx -> transport``.
+
+    Fleet factories (:func:`repro.core.transport.socket_fleet`) take
+    the shard index; plain transport classes and zero-argument
+    factories (``LoopbackTransport``, test doubles) do not — probe the
+    signature once and wrap the latter so each shard still gets its
+    own instance."""
+    try:
+        inspect.signature(factory).bind(0)
+    except TypeError:
+        return lambda shard_idx: factory()
+    except ValueError:  # uninspectable (C callable): assume new-style
+        pass
+    return factory
 
 
 # ---------------------------------------------------------------------------
@@ -768,28 +854,62 @@ class RemoteRoundClient:
     eviction, worker restart, delta base mismatch) resets that worker's
     sent-state and re-sends its request with full content, exactly
     once per round — counted in ``Telemetry.wire_fallbacks``, never a
-    silently wrong plan."""
+    silently wrong plan.
+
+    Worker loss: any :class:`~repro.core.wire.TransportError` (dead
+    process, dropped socket, read timeout, truncated frame) marks that
+    worker down and plans its partitions **inline** for the round —
+    through the same :func:`repro.core.shards.plan_partition` core over
+    fresh manager snapshots, so the round's plans (and the launch
+    trace) are identical to what the worker would have produced.  The
+    failed transport is torn down and rebuilt lazily; reconnection is
+    retried with bounded round-based exponential backoff (skip 0, 1,
+    3, then at most :data:`MAX_BACKOFF_ROUNDS` rounds between
+    attempts), and a worker that answers again is re-primed through
+    the existing full-resend + ``reset_interns`` rail.  Losses,
+    reconnects, and inline-planned partitions are counted in
+    ``Telemetry.wire_worker_losses`` / ``wire_reconnects`` /
+    ``wire_inline_parts`` — a loss is never silent and never a lost or
+    double launch.
+
+    ``transport`` is either a registered name (``"loopback"`` /
+    ``"process"``) or a callable: a ``shard_idx -> ShardTransport``
+    factory (e.g. :func:`repro.core.transport.socket_fleet` for a
+    multi-host fleet), or a zero-argument factory/transport class —
+    each shard still gets its own instance."""
 
     def __init__(
         self,
         orch: "Orchestrator",
-        transport: str = "loopback",
+        transport: Union[str, Callable[[int], ShardTransport]] = "loopback",
         codec: str = "json",
     ) -> None:
-        factory = _TRANSPORTS.get(transport)
-        if factory is None:
-            raise ValueError(
-                f"unknown transport {transport!r} (have {sorted(_TRANSPORTS)})"
-            )
+        if callable(transport):
+            self._factory: Callable[[int], ShardTransport] = _per_shard(transport)
+            self.transport_kind = getattr(transport, "__name__", "custom")
+        else:
+            named = _TRANSPORTS.get(transport)
+            if named is None:
+                raise ValueError(
+                    f"unknown transport {transport!r} (have {sorted(_TRANSPORTS)})"
+                )
+            self._factory = lambda shard_idx: named()
+            self.transport_kind = transport
         if codec not in wire.WIRE_CODECS:
             raise ValueError(
                 f"unknown wire codec {codec!r} (have {list(wire.WIRE_CODECS)})"
             )
         self.orch = orch
-        self.transport_kind = transport
         self.codec = codec
-        self._factory = factory
-        self._transports: List[ShardTransport] = []
+        self._transports: List[Optional[ShardTransport]] = []
+        # worker-loss state: shard_idx -> [consecutive_failures,
+        # rounds_to_skip]; presence marks the worker down (next
+        # successful round-trip clears it and counts a reconnect)
+        self._down: Dict[int, List[int]] = {}
+        # workers whose next request must carry reset_interns (their
+        # mirror was cleared after a loss; the worker we reach next —
+        # fresh or survivor — must drop its table to stay in sync)
+        self._need_intern_reset: set = set()
         self._sent: List[Dict[str, Any]] = []  # per-worker fingerprint state
         self._mirrors: List[wire.LruBytes] = []  # per-worker intern mirrors
         # client-side delta bases: rtype -> (fp, full snapshot envelope)
@@ -834,6 +954,8 @@ class RemoteRoundClient:
         # mid-restart test transport) just loses its tail.
         tel = getattr(self.orch, "telemetry", None)
         for t in self._transports:
+            if t is None:  # down worker: nothing to drain or close
+                continue
             try:
                 blob = wire.encode_frame(wire.envelope("drain", {}), self.codec)
                 t.submit(blob)
@@ -861,13 +983,21 @@ class RemoteRoundClient:
         self._act_rsets.clear()
         self._segments.clear()
         self._last_now = None
+        self._down.clear()
+        self._need_intern_reset.clear()
 
-    def _transport(self, i: int) -> ShardTransport:
-        while len(self._transports) <= i:
-            self._transports.append(self._factory())
+    def _ensure_slots(self, n: int) -> None:
+        while len(self._transports) < n:
+            self._transports.append(None)
             self._sent.append({"snaps": {}})
             self._mirrors.append(wire.LruBytes(CACHE_BUDGET_BYTES))
-        return self._transports[i]
+
+    def _transport(self, i: int) -> ShardTransport:
+        self._ensure_slots(i + 1)
+        t = self._transports[i]
+        if t is None:
+            t = self._transports[i] = self._factory(i)
+        return t
 
     def _reset_worker(self, i: int) -> None:
         """Forget everything we believe worker ``i`` holds; the next
@@ -875,6 +1005,68 @@ class RemoteRoundClient:
         to drop its intern table so the mirror restarts in sync)."""
         self._sent[i] = {"snaps": {}}
         self._mirrors[i].clear()
+
+    # -- worker-loss rail ----------------------------------------------
+    def _note_worker_loss(self, i: int) -> None:
+        """Record a transport failure on worker ``i``: tear the
+        transport down (rebuilt lazily on the next attempt), reset the
+        client's view of the worker (mirror/sent state may have been
+        mutated mid-encode), and advance the round-based backoff."""
+        self.orch.telemetry.wire_worker_losses += 1
+        t = None
+        if i < len(self._transports):
+            t, self._transports[i] = self._transports[i], None
+        if t is not None:
+            try:
+                t.close()
+            except Exception:  # noqa: BLE001 - already failing
+                pass
+        self._reset_worker(i)
+        self._need_intern_reset.add(i)
+        state = self._down.get(i)
+        if state is None:
+            self._down[i] = [1, 0]  # retry on the very next round
+        else:
+            state[0] += 1
+            state[1] = min(2 ** (state[0] - 1) - 1, MAX_BACKOFF_ROUNDS)
+
+    def _skip_down_worker(self, i: int) -> bool:
+        """True when worker ``i`` is in a backoff window this round (the
+        skip counter is consumed; at zero the caller attempts the
+        normal path — that attempt IS the reconnect probe)."""
+        state = self._down.get(i)
+        if state is None or state[1] <= 0:
+            return False
+        state[1] -= 1
+        return True
+
+    def _note_worker_ok(self, i: int) -> None:
+        """A full round-trip succeeded: clear loss state (counting a
+        reconnect if the worker had been down) and the pending
+        intern-reset flag."""
+        self._need_intern_reset.discard(i)
+        if self._down.pop(i, None) is not None:
+            self.orch.telemetry.wire_reconnects += 1
+
+    def _plan_inline(
+        self, shard_idx: int, parts_enc: Sequence[tuple]
+    ) -> Tuple[List[PartitionPlan], float]:
+        """Plan a lost worker's partitions locally — the loss-fallback
+        rail.  Runs the identical plan core over fresh manager
+        snapshots (exactly what an in-process shard does), so the plans
+        this round commits are the ones the worker would have returned:
+        worker loss costs local plan CPU, never trace divergence."""
+        orch = self.orch
+        t0 = time.perf_counter()
+        snapshots = SnapshotMap(orch.managers)
+        plans = [
+            orch._plan_partition(entry[0], snapshots, shard=shard_idx)
+            for entry in parts_enc
+        ]
+        plan_s = time.perf_counter() - t0
+        orch.telemetry.wire_inline_parts += len(plans)
+        orch.telemetry.note_shard_round(shard_idx, len(plans), plan_s)
+        return plans, plan_s
 
     # ------------------------------------------------------------------
     def _segment(self, skey: str, payload: Any) -> wire.Encoded:
@@ -1045,11 +1237,15 @@ class RemoteRoundClient:
         any response is awaited, so worker compute overlaps."""
         orch = self.orch
         telemetry = orch.telemetry
-        # worker startup (process fork/spawn) happens here, outside the
-        # serialization accounting — it is a deployment cost paid once,
-        # not a per-round wire cost
+        # worker startup (process fork/spawn, socket objects) happens
+        # here, outside the serialization accounting — a deployment cost
+        # paid once, not a per-round wire cost.  Workers in a backoff
+        # window keep their slot but get no transport built.
+        self._ensure_slots(len(groups))
         for shard_idx in range(len(groups)):
-            self._transport(shard_idx)
+            state = self._down.get(shard_idx)
+            if state is None or state[1] <= 0:
+                self._transport(shard_idx)
         t_round = time.perf_counter()
 
         # ---- encode phase (client-side serialization cost) ------------
@@ -1166,9 +1362,15 @@ class RemoteRoundClient:
         # serialized model; the overlap-aware critical path is reported
         # separately (overlap_s).
         requests: List[Tuple[int, Any, Any]] = []
+        # workers lost this round (transport failure at any point) —
+        # their partitions fall back to inline planning below
+        lost: List[Tuple[int, Any]] = []
         transport_s = 0.0
         e_head = 0.0
         for shard_idx, parts_enc, rtypes in shard_parts:
+            if self._skip_down_worker(shard_idx):
+                lost.append((shard_idx, parts_enc))
+                continue
             t0 = time.perf_counter()
             sub_enc = [
                 e
@@ -1178,7 +1380,10 @@ class RemoteRoundClient:
             sub_fps = [e.fp for e in sub_enc]
             exec_sub = (sub_enc, sub_fps, wire.list_fingerprint(sub_fps))
             blob = wire.encode_frame(
-                self._request(shard_idx, parts_enc, rtypes, exec_sub, shared),
+                self._request(
+                    shard_idx, parts_enc, rtypes, exec_sub, shared,
+                    reset_interns=shard_idx in self._need_intern_reset,
+                ),
                 self.codec,
             )
             t1 = time.perf_counter()
@@ -1186,7 +1391,13 @@ class RemoteRoundClient:
             if not requests:
                 e_head = t1 - t0
             nbytes += len(blob)
-            self._transport(shard_idx).submit(blob)
+            try:
+                self._transport(shard_idx).submit(blob)
+            except wire.TransportError:
+                transport_s += time.perf_counter() - t1
+                self._note_worker_loss(shard_idx)
+                lost.append((shard_idx, parts_enc))
+                continue
             transport_s += time.perf_counter() - t1
             requests.append((shard_idx, (parts_enc, exec_sub), rtypes))
         # drop encode-cache entries for actions that left the system —
@@ -1205,7 +1416,13 @@ class RemoteRoundClient:
         responses: List[Tuple[int, Any, Any, bytes]] = []
         for shard_idx, ctx, rtypes in requests:
             t0 = time.perf_counter()
-            blob = self._transport(shard_idx).recv()
+            try:
+                blob = self._transport(shard_idx).recv()
+            except wire.TransportError:
+                transport_s += time.perf_counter() - t0
+                self._note_worker_loss(shard_idx)
+                lost.append((shard_idx, ctx[0]))
+                continue
             transport_s += time.perf_counter() - t0
             responses.append((shard_idx, ctx, rtypes, blob))
 
@@ -1220,9 +1437,14 @@ class RemoteRoundClient:
             payload = wire.decode_frame(blob)
             if isinstance(payload, dict) and payload.get("kind") == "error":
                 parts_enc, exec_sub = ctx
-                payload, extra = self._recover(
-                    shard_idx, payload, parts_enc, rtypes, exec_sub, shared
-                )
+                try:
+                    payload, extra = self._recover(
+                        shard_idx, payload, parts_enc, rtypes, exec_sub, shared
+                    )
+                except wire.TransportError:
+                    self._note_worker_loss(shard_idx)
+                    lost.append((shard_idx, parts_enc))
+                    continue
                 nbytes += extra
             resp = wire.expect(payload, "plan_response")
             plan_s = float(resp.get("plan_s", 0.0))
@@ -1236,7 +1458,17 @@ class RemoteRoundClient:
             critical = max(critical, plan_s)
             telemetry.note_shard_round(shard_idx, len(shard_plans), plan_s)
             plans.extend(shard_plans)
+            self._note_worker_ok(shard_idx)
         decode_s += time.perf_counter() - t_dec
+
+        # ---- loss fallback: plan lost workers' partitions inline ------
+        # (same plan core over fresh snapshots — identical plans, so the
+        # launch trace cannot diverge; the local plan cost is charged to
+        # the round's critical path, where it actually ran)
+        for shard_idx, parts_enc in lost:
+            shard_plans, plan_s = self._plan_inline(shard_idx, parts_enc)
+            critical = max(critical, plan_s)
+            plans.extend(shard_plans)
 
         telemetry.plan_critical_s += critical
         telemetry.plan_wall_s += time.perf_counter() - t_round

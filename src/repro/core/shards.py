@@ -293,7 +293,7 @@ class RoundExecutor:
         orch: "Orchestrator",
         shards: int,
         plan_mode: str = "inline",
-        transport: str = "loopback",
+        transport="loopback",
         wire_codec: str = "json",
     ) -> None:
         if shards < 1:
@@ -306,6 +306,9 @@ class RoundExecutor:
         # measured per-partition plan cost (seconds), EWMA — drives the
         # "auto" inline-vs-threads pick and is exported to telemetry
         self.plan_cost_ewma: Optional[float] = None
+        # same EWMA kept per partition: a rebalance policy's signal for
+        # how expensive each partition's plan phases are where they run
+        self.plan_cost_by_part: Dict[str, float] = {}
         self._remote = None
         if plan_mode == "remote":
             from repro.core.remote import RemoteRoundClient
@@ -384,6 +387,7 @@ class RoundExecutor:
         """Fold this round's measured per-partition plan walls into the
         EWMA that drives (and is reported beside) the auto decision."""
         ewma = self.plan_cost_ewma
+        by_part = self.plan_cost_by_part
         for p in plans:
             if not p.planned:
                 continue
@@ -391,6 +395,12 @@ class RoundExecutor:
                 p.wall_s
                 if ewma is None
                 else AUTO_EWMA_ALPHA * p.wall_s + (1.0 - AUTO_EWMA_ALPHA) * ewma
+            )
+            prev = by_part.get(p.part)
+            by_part[p.part] = (
+                p.wall_s
+                if prev is None
+                else AUTO_EWMA_ALPHA * p.wall_s + (1.0 - AUTO_EWMA_ALPHA) * prev
             )
         self.plan_cost_ewma = ewma
         if ewma is not None:

@@ -88,6 +88,15 @@ class Telemetry:
     wire_bytes: int = 0
     wire_rounds: int = 0
     wire_fallbacks: int = 0
+    # worker-loss rail (transport failures, repro.core.remote): losses
+    # counts transport-level failures (dead worker, dropped socket,
+    # timeout, truncated frame), inline_parts the partitions planned
+    # locally on the loss-fallback path those rounds, reconnects the
+    # workers that answered again after being down — every loss is
+    # visible, never laundered into a silent retry
+    wire_worker_losses: int = 0
+    wire_reconnects: int = 0
+    wire_inline_parts: int = 0
     # overlap-aware critical path of pipelined dispatch: per round, the
     # head request's encode + the slowest worker's codec bill + the
     # round's decode — the part of the wire bill that CANNOT hide behind
@@ -110,6 +119,9 @@ class Telemetry:
     migrations: int = 0  # detach->merge moves between partition replicas
     migrated_actions: int = 0
     migration_wall_s: float = 0.0  # control-plane cost of the moves
+    # telemetry-driven rebalance cadence (Orchestrator.enable_rebalance)
+    rebalance_ticks: int = 0  # policy evaluations on the cadence
+    rebalance_moves: int = 0  # sub-queue migrations those ticks ordered
 
     def record(self, rec: ActionRecord) -> None:
         self.records.append(rec)
@@ -174,6 +186,9 @@ class Telemetry:
         self.wire_bytes = 0
         self.wire_rounds = 0
         self.wire_fallbacks = 0
+        self.wire_worker_losses = 0
+        self.wire_reconnects = 0
+        self.wire_inline_parts = 0
         self.wire_overlap_s = 0.0
         self.wire_frames = 0
         self.wire_memo_hits = 0
@@ -195,6 +210,9 @@ class Telemetry:
             "overlap_s": self.wire_overlap_s,
             "bytes": float(self.wire_bytes),
             "fallbacks": float(self.wire_fallbacks),
+            "worker_losses": float(self.wire_worker_losses),
+            "reconnects": float(self.wire_reconnects),
+            "inline_parts": float(self.wire_inline_parts),
             "memo_hits": float(self.wire_memo_hits),
             "memo_misses": float(self.wire_memo_misses),
         }

@@ -77,6 +77,42 @@ class WireError(ValueError):
     """A payload violated the wire schema (wrong version/kind/field)."""
 
 
+#: Hard ceiling on a single transport frame (either direction).  A
+#: length prefix above it is rejected before any allocation — a
+#: corrupted or hostile prefix must never make a receiver try to
+#: buffer gigabytes.  Generous vs real traffic: the delta protocol
+#: keeps steady-state rounds in the tens of KB.
+MAX_FRAME_BYTES = 64 << 20
+
+
+class TransportError(WireError):
+    """A transport-level failure moving a frame (not a schema error).
+
+    Carries a machine-readable ``code`` so the round client can treat
+    every transport as one failure domain:
+
+    ==================  ====================================================
+    code                meaning
+    ==================  ====================================================
+    ``connect``         could not reach the peer (refused / DNS / timeout)
+    ``read_timeout``    peer reachable but no frame within the read timeout
+    ``truncated_frame`` peer closed (or died) mid-frame
+    ``frame_too_large`` length prefix exceeds :data:`MAX_FRAME_BYTES`
+    ``reset``           connection reset / broken pipe / worker died
+    ``closed``          this transport was already closed locally
+    ==================  ====================================================
+
+    Every code is recovered the same way by
+    :class:`~repro.core.remote.RemoteRoundClient`: the worker's
+    partitions fall back to inline planning for the round, the
+    transport is torn down, and reconnection is retried with bounded
+    round-based backoff."""
+
+    def __init__(self, code: str, message: str) -> None:
+        super().__init__(message)
+        self.code = code
+
+
 # ---------------------------------------------------------------------------
 # envelope helpers
 # ---------------------------------------------------------------------------

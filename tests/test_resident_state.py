@@ -121,9 +121,9 @@ def _trace(orch):
 
 
 def _run(seed, shards, transport=None, tasks=("task0",), **kw):
-    orch = _make_system(shards, **kw)
     if transport is not None:
-        orch._executor._remote._factory = transport
+        kw["transport"] = transport
+    orch = _make_system(shards, **kw)
     _submit_workload(orch, seed, tasks=tasks)
     orch.run()
     trace = _trace(orch)

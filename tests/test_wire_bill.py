@@ -529,10 +529,9 @@ class _EvictingLoopback(LoopbackTransport):
 
 class TestRecovery:
     def _run(self, shards, transport=None, seed=7, **kw):
-        orch = _make_system(shards, **kw)
         if transport is not None:
-            client = orch._executor._remote
-            client._factory = transport
+            kw["transport"] = transport
+        orch = _make_system(shards, **kw)
         _submit_workload(orch, seed)
         orch.run()
         trace = _trace(orch)
@@ -591,8 +590,7 @@ class TestCrossRoundShrink:
         than the priming ones, and must actually contain reference
         forms (not re-sent payloads)."""
         _RecordingLoopback.frames = []
-        orch = _make_system(2, plan_mode="remote")
-        orch._executor._remote._factory = _RecordingLoopback
+        orch = _make_system(2, plan_mode="remote", transport=_RecordingLoopback)
         _submit_workload(orch, seed=3)
         orch.run()
         orch.close()
@@ -773,8 +771,7 @@ class TestPlanBatchAndDrain:
         batching semantics are only meaningful against real frames whose
         refs/deltas/interns assume in-order application."""
         _StreamRecorder.streams = []
-        orch = _make_system(2, plan_mode="remote")
-        orch._executor._remote._factory = _StreamRecorder
+        orch = _make_system(2, plan_mode="remote", transport=_StreamRecorder)
         _submit_workload(orch, seed=seed)
         orch.run()
         orch.close()

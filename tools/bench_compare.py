@@ -1,0 +1,167 @@
+"""Bench regression gate: fresh BENCH_*.json vs the committed baselines.
+
+The bench suites write machine-readable per-scenario results
+(``BENCH_scheduler.json``, ``BENCH_remote.json``, ...) whose committed
+copies at the repo root are the performance baselines.  CI runs the
+suites into a fresh output directory and this tool diffs the two:
+
+* **wall-clock latencies** (``us_per_call``) — a fresh value more than
+  ``--threshold`` (default 25%) above baseline fails, *unless* both
+  sit under the ``--noise-floor-us`` (tiny timings are all jitter);
+* **bytes/round** (parsed from a row's ``derived`` string, the remote
+  suite's wire-bill figure) — same threshold, no noise floor (byte
+  counts are deterministic: any growth is a protocol change);
+* ratio/flag rows (``ns_per_op: null`` — speedups, trace-identity
+  bits, fairness shares, chaos counts) are **not** compared here: the
+  suites' own ``--check`` gates already enforce their floors, and a
+  second, threshold-based gate on a ratio would double-report every
+  failure.
+
+Scenarios present on only one side are reported as warnings, never
+failures — renames and new rows land through the committed baseline in
+the same PR, and a gate that fails on additions would punish coverage.
+
+Improvements are never failures (there is no "too fast").
+
+Run:  python tools/bench_compare.py --fresh-dir bench-out [--baseline-dir .]
+Exit: 1 on any regression, with a per-scenario report; 0 otherwise.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Tuple
+
+#: Fail when fresh > baseline * (1 + threshold).
+DEFAULT_THRESHOLD = 0.25
+
+#: Latencies where both sides sit below this are jitter, not signal.
+DEFAULT_NOISE_FLOOR_US = 50.0
+
+
+def load_scenarios(path: Path) -> Dict[str, dict]:
+    with path.open() as f:
+        return json.load(f).get("scenarios", {})
+
+
+def derived_bytes_per_round(scenario: dict) -> Optional[float]:
+    derived = str(scenario.get("derived") or "")
+    if "bytes_per_round=" not in derived:
+        return None
+    try:
+        return float(derived.split("bytes_per_round=")[1].split(";")[0])
+    except ValueError:
+        return None
+
+
+def compare_file(
+    baseline: Dict[str, dict],
+    fresh: Dict[str, dict],
+    threshold: float,
+    noise_floor_us: float,
+) -> Tuple[List[str], List[str]]:
+    """(regressions, warnings) for one suite's scenario maps."""
+    regressions: List[str] = []
+    warnings: List[str] = []
+    for name in sorted(set(baseline) | set(fresh)):
+        if name not in fresh:
+            warnings.append(f"scenario {name!r} missing from fresh run (removed?)")
+            continue
+        if name not in baseline:
+            warnings.append(f"scenario {name!r} has no committed baseline (new?)")
+            continue
+        base, new = baseline[name], fresh[name]
+
+        b_us, n_us = base.get("us_per_call"), new.get("us_per_call")
+        if b_us is not None and n_us is not None and b_us > 0:
+            if n_us > b_us * (1 + threshold) and not (
+                b_us < noise_floor_us and n_us < noise_floor_us
+            ):
+                regressions.append(
+                    f"{name}: {n_us:.1f}us/call vs baseline {b_us:.1f}us/call "
+                    f"(+{(n_us / b_us - 1) * 100:.0f}% > {threshold * 100:.0f}%)"
+                )
+
+        b_bytes = derived_bytes_per_round(base)
+        n_bytes = derived_bytes_per_round(new)
+        if b_bytes is not None and n_bytes is not None and b_bytes > 0:
+            if n_bytes > b_bytes * (1 + threshold):
+                regressions.append(
+                    f"{name}: {n_bytes:.0f} bytes/round vs baseline "
+                    f"{b_bytes:.0f} (+{(n_bytes / b_bytes - 1) * 100:.0f}% "
+                    f"> {threshold * 100:.0f}%)"
+                )
+    return regressions, warnings
+
+
+def main(argv: Optional[Iterable[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("files", nargs="*",
+                    help="BENCH_*.json names to compare (default: every "
+                         "BENCH_*.json in the baseline dir)")
+    ap.add_argument("--baseline-dir", default=".",
+                    help="directory holding the committed baselines "
+                         "(default: repo root)")
+    ap.add_argument("--fresh-dir", required=True,
+                    help="directory the CI run wrote fresh results into")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="relative regression that fails the gate "
+                         f"(default {DEFAULT_THRESHOLD:.2f} = 25%%)")
+    ap.add_argument("--noise-floor-us", type=float,
+                    default=DEFAULT_NOISE_FLOOR_US,
+                    help="latency pairs both under this are never failed "
+                         f"(default {DEFAULT_NOISE_FLOOR_US:.0f}us)")
+    args = ap.parse_args(list(argv) if argv is not None else None)
+
+    baseline_dir = Path(args.baseline_dir)
+    fresh_dir = Path(args.fresh_dir)
+    names = args.files or sorted(
+        p.name for p in baseline_dir.glob("BENCH_*.json")
+    )
+    if not names:
+        print(f"bench-compare: no BENCH_*.json baselines in {baseline_dir}/",
+              file=sys.stderr)
+        return 1
+
+    all_regressions: List[str] = []
+    compared = 0
+    for name in names:
+        base_path = baseline_dir / name
+        fresh_path = fresh_dir / name
+        if not base_path.exists():
+            print(f"# WARN {name}: no committed baseline — skipped")
+            continue
+        if not fresh_path.exists():
+            print(f"# WARN {name}: fresh run produced no file — skipped")
+            continue
+        regressions, warnings = compare_file(
+            load_scenarios(base_path), load_scenarios(fresh_path),
+            args.threshold, args.noise_floor_us,
+        )
+        compared += 1
+        for w in warnings:
+            print(f"# WARN {name}: {w}")
+        if regressions:
+            for r in regressions:
+                print(f"# FAIL {name}: {r}")
+            all_regressions += [f"{name}: {r}" for r in regressions]
+        else:
+            print(f"# OK   {name}: no regression above "
+                  f"{args.threshold * 100:.0f}%")
+
+    if compared == 0:
+        print("bench-compare: nothing compared (no overlapping files)",
+              file=sys.stderr)
+        return 1
+    if all_regressions:
+        print(f"\nbench-compare: {len(all_regressions)} regression(s)",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

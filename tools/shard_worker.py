@@ -1,0 +1,27 @@
+#!/usr/bin/env python
+"""Standalone shard-worker entrypoint.
+
+Serves ARL-Tangram remote plan workers over TCP so an orchestrator on
+another machine can point a ``SocketTransport`` fleet at this host::
+
+    python tools/shard_worker.py --host 0.0.0.0 --port 7421
+
+With ``--port 0`` an ephemeral port is bound and announced as a
+``PORT <n>`` line on stdout (flushed) — launchers spawning workers as
+subprocesses read it from the first line (see
+``examples/multi_host_round.py``).
+
+One fresh worker serves each connection; a reconnecting client always
+reaches a blank worker, which its reset/full-resend recovery rail
+expects.  Thin wrapper over :func:`repro.core.transport.main`.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.transport import main  # noqa: E402
+
+if __name__ == "__main__":
+    raise SystemExit(main())
