@@ -322,7 +322,7 @@ def _run_shard_churn(
     shards: Optional[int], queue: int = 128, waves: int = 16,
     cores: int = 8, period_s: float = 4.0,
     plan_mode: str = "inline", transport="loopback",
-    wire_codec: str = "json", pre_run=None,
+    wire_codec: str = "json", commit_mode: str = "client", pre_run=None,
 ):
     """Steady-state churn over ``SHARD_POOLS`` independent pools, each
     smaller than its demand so a deep backlog persists: every wave
@@ -336,6 +336,8 @@ def _run_shard_churn(
     (``transport``: "loopback" = in-process workers behind the full
     encode/decode path, "process" = real worker OS processes, or a
     ``shard_idx -> ShardTransport`` factory for socket fleets).
+    ``commit_mode="worker"`` moves the commit phase worker-side too
+    (two-phase prepare/ack over fused ``plan_commit`` frames).
     ``pre_run(orch)`` runs before the clock starts — the chaos suite's
     hook for scheduling virtual-time worker kills."""
     from repro.core.simulator import EventLoop
@@ -348,7 +350,7 @@ def _run_shard_churn(
     orch = Orchestrator(
         managers, loop=loop, policy=ElasticScheduler(), incremental=True,
         shards=shards, plan_mode=plan_mode, transport=transport,
-        wire_codec=wire_codec,
+        wire_codec=wire_codec, commit_mode=commit_mode,
     )
     wave_no = [0]
     if pre_run is not None:
@@ -392,6 +394,7 @@ def _run_shard_churn(
         "trace": trace,
         "summary": orch.telemetry.shard_summary(),
         "wire": orch.telemetry.wire_summary(),
+        "commit_wall_s": orch.telemetry.commit_wall_s,
     }
 
 
@@ -480,6 +483,28 @@ REMOTE_WIRE_PIPELINED_RATIO = 3.0
 #: state size again instead of state *change*.
 REMOTE_MEMO_HIT_RATE_FLOOR = 0.80
 
+#: CI collapse-bound on the commit-offload ratio: the client-serial
+#: commit wall divided by what commit costs the round in worker-owned
+#: mode (max per-worker commit wall + whatever residual serial commit
+#: the client still pays on non-fused rounds).  Structurally this
+#: tracks the shard count (workers commit their partitions in parallel;
+#: the serial walk sums them), measured ~1.5x at full scale with 4
+#: shards over 8 pools — but at smoke scale the worker's post-commit
+#: fingerprint bill is a fixed cost the tiny walk cannot amortize, so
+#: the ratio hovers near 1.0-1.3x and a *win* floor would flake.  The
+#: smoke gate only refuses collapse (worker-owned commit grossly
+#: slower than the serial walk it replaces); the "commit actually left
+#: the client's critical path" proof is the residual share below.
+REMOTE_COMMIT_OFFLOAD_FLOOR = 0.9
+
+#: CI ceiling on the residual client-serial commit wall in worker-owned
+#: mode, as a share of the client-serial run's commit wall.  Fused
+#: rounds never touch the client's serial commit walk, so the residual
+#: is only what non-fused (single-partition / declined) rounds still
+#: pay — measured ~0.0 on the symmetric churn.  A climb means rounds
+#: quietly stopped fusing.
+REMOTE_COMMIT_RESIDUAL_SHARE = 0.2
+
 
 def run_remote(
     scale: float = 1.0, shards: int = 4, transport: str = "loopback",
@@ -503,7 +528,12 @@ def run_remote(
         shards, queue=queue, waves=waves, plan_mode="remote",
         transport=transport, wire_codec=wire_codec,
     )
+    worker = _run_shard_churn(
+        shards, queue=queue, waves=waves, plan_mode="remote",
+        transport=transport, wire_codec=wire_codec, commit_mode="worker",
+    )
     identical = serial["trace"] == remote["trace"]
+    worker_identical = serial["trace"] == worker["trace"]
     wire = remote["wire"] or {
         "rounds": 0.0, "encode_s": 0.0, "decode_s": 0.0,
         "worker_codec_s": 0.0, "transport_s": 0.0, "bytes": 0.0,
@@ -620,6 +650,66 @@ def run_remote(
             "derived": "1=remote-plan launch traces bit-identical to serial",
         },
     ]
+
+    # -- commit-phase split: client-serial vs worker-owned two-phase --
+    wwire = worker["wire"] or {}
+    wevents = max(1, worker["events"])
+    serial_commit_us = remote["commit_wall_s"] / events * 1e6
+    worker_commit_us = wwire.get("commit_critical_s", 0.0) / wevents * 1e6
+    residual_us = worker["commit_wall_s"] / wevents * 1e6
+    apply_us = wwire.get("commit_apply_s", 0.0) / wevents * 1e6
+    offload = serial_commit_us / max(1e-9, worker_commit_us + residual_us)
+    rows += [
+        {
+            "name": f"remote_churn_queue{queue}_commit_worker",
+            "us_per_call": worker["sched_us_per_event"],
+            "mean_act": worker["mean_act"],
+            "derived": (
+                f"critical-path model, commit_mode=worker;"
+                f"prepares={wwire.get('prepares', 0.0):.0f};"
+                f"acks={wwire.get('commit_acks', 0.0):.0f};"
+                f"aborts={wwire.get('commit_aborts', 0.0):.0f};"
+                f"inline={wwire.get('commit_inline_rounds', 0.0):.0f};"
+                f"resends={wwire.get('fallbacks', 0.0):.0f};"
+                f"diverged={wwire.get('commit_diverged', 0.0):.0f}"
+            ),
+        },
+        {
+            "name": f"remote_churn_queue{queue}_commit_traces_identical",
+            "us_per_call": 1.0 if worker_identical else 0.0,
+            "mean_act": "",
+            "derived": "1=worker-owned commit launch traces bit-identical to serial",
+        },
+        {
+            "name": f"remote_churn_queue{queue}_commit_serial_wall",
+            "us_per_call": serial_commit_us,
+            "mean_act": "",
+            "derived": (
+                "us/event the client pays walking every partition's commit"
+                " serially (client-serial commit mode, serialized model)"
+            ),
+        },
+        {
+            "name": f"remote_churn_queue{queue}_commit_worker_critical",
+            "us_per_call": worker_commit_us,
+            "mean_act": "",
+            "derived": (
+                "us/event of the worker-parallel commit critical path (max"
+                " per-worker commit wall, pipelined model);"
+                f"residual_serial_us={residual_us:.2f};"
+                f"client_apply_us={apply_us:.2f}"
+            ),
+        },
+        {
+            "name": f"remote_churn_queue{queue}_commit_offload_speedup",
+            "us_per_call": offload,
+            "mean_act": "",
+            "derived": (
+                "x_serial_commit_wall_over_worker_critical_plus_residual;"
+                f"floor={REMOTE_COMMIT_OFFLOAD_FLOOR}"
+            ),
+        },
+    ]
     return rows
 
 
@@ -635,7 +725,14 @@ def check_remote(rows: List[Dict[str, object]]) -> None:
     REMOTE_BYTES_PER_ROUND_BASELINE; (e) the client encode-memo hit
     rate stays above REMOTE_MEMO_HIT_RATE_FLOOR; (f) steady-state runs
     take zero full-content fallbacks (recovery is for faults, not for a
-    protocol that forgets its own state)."""
+    protocol that forgets its own state); (g) the commit-mode matrix:
+    worker-owned commit's launch trace is bit-identical to serial, its
+    steady-state run takes zero fallbacks and zero aborts, the two-phase
+    rail was really exercised (prepares > 0), the commit-offload ratio
+    has not collapsed (REMOTE_COMMIT_OFFLOAD_FLOOR), and the residual
+    client-serial commit wall stays a sliver of the serial walk
+    (REMOTE_COMMIT_RESIDUAL_SHARE — commit left the client's critical
+    path)."""
     by_name = {str(r["name"]): r for r in rows}
     identical_row = by_name["remote_churn_queue128_traces_identical"]
     identical = float(identical_row["us_per_call"])  # type: ignore[arg-type]
@@ -699,6 +796,66 @@ def check_remote(rows: List[Dict[str, object]]) -> None:
         raise SystemExit(
             f"{fallbacks:.0f} full-content fallback(s) in a steady-state run "
             "(cache budgets or mirror determinism regressed)"
+        )
+
+    # -- commit-mode matrix gates (worker-owned vs client-serial) --
+    commit_flag = float(
+        by_name["remote_churn_queue128_commit_traces_identical"]["us_per_call"]  # type: ignore[arg-type]
+    )
+    wk_derived = str(by_name["remote_churn_queue128_commit_worker"]["derived"])
+
+    def _field(key: str) -> float:
+        return float(wk_derived.split(f"{key}=")[1].split(";")[0])
+
+    prepares = _field("prepares")
+    resends = _field("resends")
+    aborts = _field("aborts")
+    diverged = _field("diverged")
+    offload = float(
+        by_name["remote_churn_queue128_commit_offload_speedup"]["us_per_call"]  # type: ignore[arg-type]
+    )
+    serial_wall_us = float(
+        by_name["remote_churn_queue128_commit_serial_wall"]["us_per_call"]  # type: ignore[arg-type]
+    )
+    crit_derived = str(
+        by_name["remote_churn_queue128_commit_worker_critical"]["derived"]
+    )
+    residual_us = float(crit_derived.split("residual_serial_us=")[1].split(";")[0])
+    print(
+        f"# commit check: traces_identical={commit_flag:.0f} "
+        f"prepares={prepares:.0f} resends={resends:.0f} aborts={aborts:.0f} "
+        f"offload={offload:.2f}x residual={residual_us:.2f}us"
+    )
+    if commit_flag != 1.0:
+        raise SystemExit("worker-owned commit launch trace diverged from serial")
+    if prepares <= 0:
+        raise SystemExit(
+            "worker-owned commit never sent a prepare (two-phase rail idle "
+            "— every round fell back to client-serial commit)"
+        )
+    if resends > 0:
+        raise SystemExit(
+            f"{resends:.0f} full-content fallback(s) in the steady-state "
+            "worker-owned commit run"
+        )
+    if aborts > 0 or diverged > 0:
+        raise SystemExit(
+            f"steady-state worker-owned commit took {aborts:.0f} abort(s) / "
+            f"{diverged:.0f} divergence(s) — conflict-free churn must "
+            "prepare-and-confirm cleanly"
+        )
+    if offload < REMOTE_COMMIT_OFFLOAD_FLOOR:
+        raise SystemExit(
+            f"commit-offload ratio {offload:.2f}x collapsed below "
+            f"{REMOTE_COMMIT_OFFLOAD_FLOOR}x — worker-owned commit costs "
+            "grossly more than the serial walk it replaces"
+        )
+    if residual_us > REMOTE_COMMIT_RESIDUAL_SHARE * serial_wall_us:
+        raise SystemExit(
+            f"residual client-serial commit wall {residual_us:.2f}us/event "
+            f"exceeds {REMOTE_COMMIT_RESIDUAL_SHARE:.0%} of the serial "
+            f"commit wall {serial_wall_us:.2f}us/event — rounds stopped "
+            "fusing their commits"
         )
 
 
@@ -900,6 +1057,205 @@ def check_chaos(rows: List[Dict[str, object]]) -> None:
             "amnesia storm surfaced as transport losses — the stale-ref rail "
             "and the loss rail blurred together"
         )
+
+
+# ---------------------------------------------------------------------------
+# Nightly-scale chaos (`--suite chaos --scale large`): 8 real worker OS
+# processes, O(100k) actions, periodic worker-process kill/respawn — in
+# BOTH commit modes.  Non-blocking (scheduled/manual workflow), so the
+# 2-4-worker CI-scale gates above stay fast.
+# ---------------------------------------------------------------------------
+
+#: 784 waves x 128 actions/wave ~= 100k actions (the ROADMAP scale
+#: target for the storm harness).
+CHAOS_LARGE_WAVES = 784
+CHAOS_LARGE_WORKERS = 8
+
+#: One worker-process kill/respawn every this many virtual seconds
+#: (round-robin over the fleet) — ~85 full process deaths per run.
+CHAOS_LARGE_KILL_PERIOD_S = 37.0
+
+
+def _spawn_worker_proc(port: int = 0):
+    """One real shard-worker OS process (``tools/shard_worker.py``);
+    returns ``(proc, port)`` once the endpoint is listening (the
+    entrypoint prints ``PORT <n>`` when bound)."""
+    import os
+    import subprocess
+    import sys
+    from pathlib import Path
+
+    root = Path(__file__).resolve().parent.parent
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [str(root / "src")]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else [])
+    )
+    proc = subprocess.Popen(
+        [sys.executable, str(root / "tools" / "shard_worker.py"),
+         "--port", str(port)],
+        stdout=subprocess.PIPE, env=env, text=True,
+    )
+    line = (proc.stdout.readline() or "").strip()
+    if not line.startswith("PORT "):
+        proc.kill()
+        raise RuntimeError(f"shard worker failed to start: {line!r}")
+    return proc, int(line.split()[1])
+
+
+def run_chaos_large(
+    waves: int = CHAOS_LARGE_WAVES, workers: int = CHAOS_LARGE_WORKERS,
+) -> List[Dict[str, object]]:
+    """The storm at fleet scale: the queue-128 churn over ``workers``
+    real worker OS processes, with a worker process hard-killed and
+    respawned on its port every ``CHAOS_LARGE_KILL_PERIOD_S`` virtual
+    seconds (round-robin), run once under client-serial commit and once
+    under worker-owned two-phase commit.  A killed process takes its
+    entire resident state — plan caches, intern tables, authoritative
+    manager replicas and their leases — so every respawn exercises the
+    loss rail AND the blank-worker re-grant rail at full depth.  Both
+    storms' launch traces must stay bit-identical to the serial loop."""
+    from repro.core.transport import socket_fleet
+
+    queue = 128
+    horizon = waves * 4.0
+    serial = _run_shard_churn(None, queue=queue, waves=waves)
+    expected = serial["events"]
+
+    def storm(commit_mode: str):
+        procs: List[object] = []
+        ports: List[int] = []
+        try:
+            for _ in range(workers):
+                p, port = _spawn_worker_proc()
+                procs.append(p)
+                ports.append(port)
+            kill_times = []
+            t = 5.0
+            while t < horizon:
+                kill_times.append(t)
+                t += CHAOS_LARGE_KILL_PERIOD_S
+            counter = [0]
+
+            def _kill_next() -> None:
+                idx = counter[0] % workers
+                counter[0] += 1
+                procs[idx].kill()
+                procs[idx].wait()
+                try:
+                    procs[idx].stdout.close()
+                except OSError:
+                    pass
+                procs[idx], _ = _spawn_worker_proc(ports[idx])
+
+            def pre(orch: Orchestrator) -> None:
+                for kt in kill_times:
+                    orch.loop.call_after(kt, _kill_next)
+
+            run = _run_shard_churn(
+                workers, queue=queue, waves=waves, plan_mode="remote",
+                transport=socket_fleet([("127.0.0.1", pt) for pt in ports]),
+                commit_mode=commit_mode, pre_run=pre,
+            )
+            return run, len(kill_times)
+        finally:
+            for p in procs:
+                try:
+                    p.kill()
+                    p.wait()
+                    p.stdout.close()
+                except OSError:
+                    pass
+
+    client, kills = storm("client")
+    owned, _ = storm("worker")
+    cwire = client["wire"] or {}
+    owire = owned["wire"] or {}
+    rows: List[Dict[str, object]] = [
+        {
+            "name": "chaos_large_client_traces_identical",
+            "us_per_call": 1.0 if client["trace"] == serial["trace"] else 0.0,
+            "mean_act": client["mean_act"],
+            "derived": (
+                f"workers={workers};kills={kills};events={client['events']};"
+                f"expected={expected};"
+                "client-serial commit over real worker processes"
+            ),
+        },
+        {
+            "name": "chaos_large_worker_traces_identical",
+            "us_per_call": 1.0 if owned["trace"] == serial["trace"] else 0.0,
+            "mean_act": owned["mean_act"],
+            "derived": (
+                f"workers={workers};kills={kills};events={owned['events']};"
+                f"expected={expected};"
+                f"prepares={owire.get('prepares', 0.0):.0f};"
+                f"regrants={owire.get('lease_regrants', 0.0):.0f};"
+                f"adoptions={owire.get('lease_adoptions', 0.0):.0f};"
+                "worker-owned two-phase commit over real worker processes"
+            ),
+        },
+        {
+            "name": "chaos_large_worker_losses",
+            "us_per_call": (
+                cwire.get("worker_losses", 0.0)
+                + owire.get("worker_losses", 0.0)
+            ),
+            "mean_act": "",
+            "derived": (
+                f"client_losses={cwire.get('worker_losses', 0.0):.0f};"
+                f"owned_losses={owire.get('worker_losses', 0.0):.0f};"
+                f"reconnects={cwire.get('reconnects', 0.0) + owire.get('reconnects', 0.0):.0f};"
+                "process deaths absorbed across both storms"
+            ),
+        },
+        {
+            "name": "chaos_large_sched_us_worker_commit",
+            "us_per_call": owned["sched_us_per_event"],
+            "mean_act": "",
+            "derived": (
+                f"critical-path model under the storm;"
+                f"serial={serial['sched_us_per_event']:.1f}us/event;"
+                f"client_commit={client['sched_us_per_event']:.1f}us/event"
+            ),
+        },
+    ]
+    return rows
+
+
+def check_chaos_large(rows: List[Dict[str, object]]) -> None:
+    """Nightly gates: both storms' traces bit-identical to serial at
+    O(100k)-action scale; the storms really killed worker processes;
+    the two-phase rail carried real prepare traffic; the run covered
+    the full workload (no silently truncated horizon)."""
+    by_name = {str(r["name"]): r for r in rows}
+
+    def _field(row: str, key: str) -> float:
+        return float(str(by_name[row]["derived"]).split(f"{key}=")[1].split(";")[0])
+
+    for flag_name in (
+        "chaos_large_client_traces_identical",
+        "chaos_large_worker_traces_identical",
+    ):
+        if float(by_name[flag_name]["us_per_call"]) != 1.0:  # type: ignore[arg-type]
+            raise SystemExit(f"{flag_name}: launch trace diverged from serial")
+        events = _field(flag_name, "events")
+        expected = _field(flag_name, "expected")
+        if events < expected:
+            raise SystemExit(
+                f"{flag_name}: run covered {events:.0f}/{expected:.0f} events"
+            )
+    losses = float(by_name["chaos_large_worker_losses"]["us_per_call"])  # type: ignore[arg-type]
+    prepares = _field("chaos_large_worker_traces_identical", "prepares")
+    kills = _field("chaos_large_worker_traces_identical", "kills")
+    print(
+        f"# chaos-large check: traces identical; kills={kills:.0f}/storm "
+        f"losses={losses:.0f} prepares={prepares:.0f}"
+    )
+    if losses <= 0:
+        raise SystemExit("large storm recorded no worker losses (vacuous)")
+    if prepares <= 0:
+        raise SystemExit("large storm never exercised the two-phase rail")
 
 
 # ---------------------------------------------------------------------------
@@ -1277,8 +1633,22 @@ def main(
     shards: int = 4,
     transport: str = "loopback",
 ) -> None:
+    if scale == "large" and suite != "chaos":
+        raise SystemExit("--scale large is only meaningful with --suite chaos")
     if json_path is None:
-        json_path = _SUITE_JSON[suite]
+        json_path = (
+            "BENCH_chaos_large.json" if scale == "large"
+            else _SUITE_JSON[suite]
+        )
+    if suite == "chaos" and scale == "large":
+        large_rows = run_chaos_large()
+        emit(large_rows,
+             "nightly-scale chaos: 8 worker processes, O(100k) actions")
+        if json_path:
+            write_json(large_rows, json_path)
+        if check:
+            check_chaos_large(large_rows)
+        return
     if suite == "remote":
         remote_rows = run_remote(scale, shards=shards, transport=transport)
         remote_rows += run_rebalance(scale)
@@ -1328,8 +1698,16 @@ def main(
 if __name__ == "__main__":
     import argparse
 
+    def _scale_arg(v: str):
+        # float multiplier, or the literal "large": the chaos suite's
+        # nightly scale (8 worker processes, O(100k) actions)
+        return v if v == "large" else float(v)
+
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--scale", type=_scale_arg, default=1.0,
+                    help="workload multiplier, or 'large' with --suite "
+                         "chaos for the nightly 8-process O(100k)-action "
+                         "storm (writes BENCH_chaos_large.json)")
     ap.add_argument("--json", default=None,
                     help="output path for machine-readable results ('' = skip; "
                          "default: BENCH_scheduler.json for the latency suite, "
@@ -1363,7 +1741,9 @@ if __name__ == "__main__":
     args = ap.parse_args()
     if args.json is None:
         # per-suite defaults keep any suite from overwriting another
-        # suite's tracked baseline
-        args.json = _SUITE_JSON[args.suite]
+        # suite's tracked baseline (the nightly large storm writes its
+        # own file — it has no committed CI-scale baseline to protect)
+        args.json = ("BENCH_chaos_large.json" if args.scale == "large"
+                     else _SUITE_JSON[args.suite])
     main(args.scale, args.json, args.check, args.suite, args.shards,
          args.transport)

@@ -14,6 +14,22 @@ scheduling algorithm".  The scheduler only ever calls:
   per-allocation system overhead (cgroup update, service restore, ...);
 * ``trajectory_start / trajectory_end`` — lifetime hooks (the CPU
   manager pins trajectory memory while cores are action-scoped).
+
+**Authoritative state vs replicas.**  A manager instance is either the
+*authoritative* copy — the one whose ``try_allocate`` decides a launch
+— or a *replica* derived from it through the snapshot surface.  Under
+the default client-serial commit engine the orchestrator's managers
+are authoritative and every snapshot (in-process plan isolation or a
+wire ``snapshot_state``) is a plan-phase throwaway.  Under worker-owned
+commit (``commit_mode="worker"``) authority moves with the ownership
+lease: the shard worker's resident replica commits, and the
+orchestrator's manager becomes the *verified replay* copy — it applies
+the worker's committed outcomes and must reproduce the worker's
+post-commit snapshot fingerprint exactly.  Nothing in the contract
+changes per role; what makes the handoff sound is that the snapshot
+codecs round-trip the full commit-relevant state (asserted in
+``tests/test_wire.py``) and that every mutation happens through the
+same methods on whichever copy is authoritative.
 """
 
 from __future__ import annotations

@@ -89,7 +89,16 @@ from repro.core.scheduler import (
     ScheduleResult,
     candidate_window,
 )
-from repro.core.shards import PartitionPlan, RoundExecutor, plan_partition
+from repro.core.shards import (
+    PartitionPlan,
+    RoundExecutor,
+    classify_after_commit,
+    commit_decision,
+    duration_of,
+    plan_partition,
+    quota_clamp,
+    quota_reservations,
+)
 from repro.core.simulator import EventLoop, Future
 from repro.core.telemetry import ActionRecord, Telemetry
 
@@ -150,6 +159,62 @@ class SchedulingPolicy(Protocol):
     ) -> ScheduleResult: ...
 
 
+class CommitEngine:
+    """Commit-phase seam for sharded rounds: the client-serial default.
+
+    The plan phase is already pluggable (inline / threads / remote
+    workers — :class:`~repro.core.shards.RoundExecutor`); this class is
+    the same seam for the COMMIT phase.  The base implementation is the
+    original client-serial walk, kept bit-identical: every plan's
+    intents are validated-and-launched against the live local managers
+    in global sorted partition order on the orchestrator thread.
+
+    ``commit_mode="worker"`` swaps in
+    :class:`~repro.core.remote.WorkerCommitEngine`: remote workers hold
+    the *authoritative* manager replicas for the rtypes they own (under
+    epoch-stamped ownership leases) and commit becomes a two-phase
+    prepare → intent/ack → commit|abort exchange over the wire, with
+    conflicts resolved worker-side on the same shared commit core
+    (:func:`repro.core.shards.commit_decision`).  Any round the worker
+    engine cannot own outright (cross-owner resource footprints, lost
+    workers) falls back to this serial walk — the always-correct rail.
+    """
+
+    mode = "client"
+
+    def __init__(self, orch: "Orchestrator") -> None:
+        self.orch = orch
+
+    def fused_round(self, keys: Sequence[str]) -> Optional[bool]:
+        """Offer the engine a whole fixpoint pass (plan AND commit) for
+        the dirty ``keys``.  Returns None to decline — the orchestrator
+        then runs the ordinary plan_round + :meth:`commit_round` split —
+        or the pass's any-launch-failed flag when the engine handled it
+        end-to-end (the worker-owned fused ``plan_commit`` path)."""
+        return None
+
+    def commit_round(self, plans: Sequence[PartitionPlan]) -> int:
+        """Commit one pass's plans (already in global sorted partition
+        order); returns the number of refused launches (conflicts)."""
+        orch = self.orch
+        conflicts = 0
+        for plan in plans:
+            conflicts += orch._commit_partition(plan)
+        return conflicts
+
+    def fence(self, rtypes: Optional[Sequence[str]] = None) -> int:
+        """Fence ownership state covering ``rtypes`` (None = all) before
+        a handoff (``migrate_task``/``rebalance``): any in-flight or
+        unconfirmed prepared intents touching them are deterministically
+        aborted and their leases revoked (epoch bump), so a later ack
+        from the old owner can never land.  Returns the number of
+        aborted intents; the serial engine holds no leases — a no-op."""
+        return 0
+
+    def close(self) -> None:
+        """Release engine-held protocol state (idempotent)."""
+
+
 class Orchestrator:
     """Event-driven control plane: queues, rounds, lifecycle, migration,
     telemetry.
@@ -176,6 +241,8 @@ class Orchestrator:
         plan_mode: str = "inline",
         transport="loopback",
         wire_codec: str = "json",
+        commit_mode: str = "client",
+        commit_max_passes: int = 8,
     ) -> None:
         self.loop = loop or EventLoop()
         self.history = DurationHistory()
@@ -241,6 +308,33 @@ class Orchestrator:
             if shards is not None
             else None
         )
+        # Commit-phase seam: "client" (default) keeps the serial
+        # validated commit against live local managers, bit-identical to
+        # the pre-engine code.  "worker" (requires plan_mode="remote")
+        # moves authoritative manager replicas out to the shard workers
+        # under epoch-stamped ownership leases — commit becomes a
+        # two-phase prepare/ack exchange over the wire, and dependent
+        # fixpoint passes batch into one fused plan_commit frame
+        # (bounded by commit_max_passes; 1 = one pass per wire round,
+        # the sequential control arm).  Launch traces are identical in
+        # both modes; ineligible or degraded rounds fall back to the
+        # client-serial walk.
+        if commit_mode not in ("client", "worker"):
+            raise ValueError(f"unknown commit_mode {commit_mode!r}")
+        self.commit_mode = commit_mode
+        self.commit_max_passes = int(commit_max_passes)
+        if commit_mode == "worker":
+            if self._executor is None or self._executor._remote is None:
+                raise ValueError(
+                    "commit_mode='worker' requires shards=N with plan_mode='remote'"
+                )
+            from repro.core.remote import WorkerCommitEngine
+
+            self._commit_engine: CommitEngine = WorkerCommitEngine(
+                self, self._executor._remote
+            )
+        else:
+            self._commit_engine = CommitEngine(self)
         self.stats: Dict[str, int] = {
             "rounds": 0,
             "partition_runs": 0,
@@ -307,6 +401,7 @@ class Orchestrator:
     def close(self) -> None:
         """Release out-of-process resources (remote shard workers).
         Idempotent; a no-op for in-process plan modes."""
+        self._commit_engine.close()
         if self._executor is not None:
             self._executor.close()
 
@@ -385,6 +480,10 @@ class Orchestrator:
                     f"{part!r}, not {dst!r} — {src!r}/{dst!r} are not replicas "
                     f"for its cost vector {sorted(a.cost)}"
                 )
+        # ownership handoff fence: abort any in-flight/unconfirmed
+        # worker-side commit intents touching either partition's rtype
+        # before queue state moves (no-op for the client-serial engine)
+        self._commit_engine.fence((src, dst))
         t0 = time.perf_counter()
         shard = src_q.detach_task(task_id)
         if shard is None:
@@ -670,7 +769,16 @@ class Orchestrator:
         Decision latency charged per plan/commit pass is the critical
         path ``max(per-shard plan CPU) + commit wall`` — what a fleet of
         per-shard workers pays; the real in-process plan wall clock is
-        recorded separately (``Telemetry.plan_wall_s``)."""
+        recorded separately (``Telemetry.plan_wall_s``).
+
+        The commit walk itself sits behind the :class:`CommitEngine`
+        seam: the default engine is the client-serial loop this
+        docstring describes; the worker-owned engine may take a whole
+        pass (plan AND commit fused into one wire exchange per owner
+        worker) via ``fused_round`` — its charged commit critical path
+        is then ``max(per-worker commit wall)``, with the client's
+        mirror-apply wall recorded separately
+        (``Telemetry.commit_apply_s``) — never conflated."""
         any_failed = False
         while True:
             keys = sorted(k for k in self._dirty if self._queues.get(k))
@@ -686,15 +794,19 @@ class Orchestrator:
                 self.telemetry.sched_wall_s += time.perf_counter() - t0
                 continue
             self.stats["sharded_rounds"] += 1
+            handled = self._commit_engine.fused_round(keys)
+            if handled is not None:
+                any_failed |= handled
+                continue
             plans, critical = self._executor.plan_round(keys)
             t0 = time.perf_counter()
-            conflicts = 0
-            for plan in plans:
-                conflicts += self._commit_partition(plan)
+            conflicts = self._commit_engine.commit_round(plans)
             if conflicts:
                 any_failed = True
                 self.telemetry.commit_conflicts += conflicts
-            self.telemetry.sched_wall_s += critical + (time.perf_counter() - t0)
+            commit_wall = time.perf_counter() - t0
+            self.telemetry.commit_wall_s += commit_wall
+            self.telemetry.sched_wall_s += critical + commit_wall
 
     def _run_partition(self, part: str) -> bool:
         """One serial policy pass over a partition (plan against LIVE
@@ -755,51 +867,30 @@ class Orchestrator:
         for decision in plan.result.decisions:
             if not self._launch(decision, overhead, quota_pending):
                 failed += 1
-        # cleanliness: a partition may only go clean in states that are
-        # no-ops until the next event.  Deliberate deferrals (eviction,
-        # quota holds) and refused allocations are time/state-dependent —
-        # they stay on the watch list and re-run every round.  Otherwise
-        # the policy launched its whole window; the partition is clean
-        # exactly when the remaining head is inadmissible at min units
-        # *now* (checked against live manager state; quota-clock changes
-        # are covered by the refill wake), else it re-enters the dirty
-        # set so this round's fixpoint loop reschedules it.
+        # cleanliness classification is the shared core's
+        # classify_after_commit (see its contract); the worker-owned
+        # commit engine runs the same function over its replicas, which
+        # is what keeps worker-computed fixpoint passes identical to the
+        # serial loop's.  Quota-clock changes are covered by the refill
+        # wake; "dirty" re-enters this round's fixpoint loop.
         self._watch.discard(part)
-        if queue and (plan.result.evicted or failed or plan.held):
+        cls = classify_after_commit(
+            queue, plan.result.evicted, failed, plan.held, self.managers
+        )
+        if cls == "watch":
             self._watch.add(part)
-        elif queue:
-            head = queue.head()
-            if head is not None and candidate_window([head], self.managers, 1):
-                self._dirty.add(part)
+        elif cls == "dirty":
+            self._dirty.add(part)
         return failed
 
     def _quota_reservations(
         self, decisions: Sequence[Decision]
     ) -> Optional[Dict[Tuple[str, str], int]]:
-        """Min-unit budget reservations per (quota'd task, rtype) over a
-        commit batch.  Admission (:func:`repro.core.shards.apply_quota`)
-        guaranteed every
-        admitted action its *min* units within the task's budget; an
-        elastic grant scaled beyond min must therefore be clamped
-        against the budget MINUS the min-unit reservations of the
-        batch's not-yet-launched sibling actions — otherwise the first
-        scalable launch eats the whole budget and the siblings' min-unit
-        progress rail pushes the task past its cap mid-flight (the
-        ROADMAP's "exact quota for scalable scale-up" item)."""
-        fs = self.fair_share
-        if fs is None or not fs.quota:
-            return None
-        pending: Dict[Tuple[str, str], int] = {}
-        for d in decisions:
-            if math.isinf(fs.quota_of(d.action.task_id)):
-                continue
-            for rtype in d.units:
-                req = d.action.cost.get(rtype)
-                if req is None or rtype not in self.managers:
-                    continue
-                key = (d.action.task_id, rtype)
-                pending[key] = pending.get(key, 0) + req.min_units
-        return pending or None
+        """Thin wrapper over the shared commit core's
+        :func:`repro.core.shards.quota_reservations` (see its contract —
+        the ROADMAP's "exact quota for scalable scale-up" item), bound
+        to the live managers + this orchestrator's fair-share policy."""
+        return quota_reservations(decisions, self.managers, self.fair_share)
 
     def _quota_clamp(
         self,
@@ -808,29 +899,10 @@ class Orchestrator:
         units: int,
         pending: Optional[Dict[Tuple[str, str], int]] = None,
     ) -> int:
-        """Cap an elastic grant against the task's remaining quota budget
-        on ``rtype``: snap down to the largest feasible unit count within
-        the budget — net of the min-unit reservations still ``pending``
-        for the task's other actions in this commit batch — but never
-        below min units (the progress rail — admission already decided
-        this action may run)."""
-        fs = self.fair_share
-        if fs is None:
-            return units
-        q = fs.quota_of(action.task_id)
-        if math.isinf(q):
-            return units
-        manager = self.managers.get(rtype)
-        req = action.cost.get(rtype)
-        if manager is None or req is None or units <= req.min_units:
-            return units
-        allowed = q * manager.capacity - manager.task_usage().get(action.task_id, 0)
-        if pending:
-            allowed -= pending.get((action.task_id, rtype), 0)
-        if units <= allowed:
-            return units
-        return max(
-            (u for u in req.units if u <= allowed), default=req.min_units
+        """Thin wrapper over the shared commit core's
+        :func:`repro.core.shards.quota_clamp`, bound to live state."""
+        return quota_clamp(
+            action, rtype, units, self.managers, self.fair_share, pending
         )
 
     def _post_round(self, any_failed: bool) -> None:
@@ -883,43 +955,16 @@ class Orchestrator:
         quota_pending: Optional[Dict[Tuple[str, str], int]] = None,
     ) -> bool:
         action = decision.action
-        if quota_pending is not None:
-            # this action's own min-unit reservation no longer binds its
-            # siblings' clamp once it reaches the front of the batch —
-            # released BEFORE the withdrawn-action early-out below, or a
-            # withdrawn sibling's reservation would over-clamp the rest
-            # of the batch against budget nobody is going to use
-            for rtype in decision.units:
-                key = (action.task_id, rtype)
-                req = action.cost.get(rtype)
-                if req is not None and key in quota_pending:
-                    quota_pending[key] = max(0, quota_pending[key] - req.min_units)
-        if action.state is not ActionState.QUEUED:
-            return False  # withdrawn between arrange and launch
-        # elastic grants are capped against the task's quota budget up
-        # front so the charged duration matches the actual allocation
-        units = {
-            rtype: self._quota_clamp(action, rtype, u, quota_pending)
-            for rtype, u in decision.units.items()
-        }
-        allocs: List[Allocation] = []
-        for rtype in sorted(units):
-            manager = self.managers.get(rtype)
-            if manager is None:
-                continue
-            alloc = manager.try_allocate(action, units[rtype])
-            if alloc is None:
-                # rollback a partial acquisition (or a sharded commit
-                # whose plan no longer fits live state): the action
-                # never started, so consumable state (quota tokens) is
-                # refunded — distinct from a mid-execution failure
-                for a in allocs:
-                    self.managers[a.rtype].release_unlaunched(action, a)
-                return False
-            allocs.append(alloc)
-
-        for a in allocs:  # multi-tenant share accounting
-            self.managers[a.rtype].note_allocated(action.task_id, a.units)
+        # the manager-mutating middle (reservation release, quota clamp,
+        # sorted try_allocate with rollback, share accounting) is the
+        # shared commit core — one implementation with the worker-owned
+        # commit engine's replica-side commit
+        granted = commit_decision(
+            decision, self.managers, self.fair_share, quota_pending
+        )
+        if granted is None:
+            return False
+        units, allocs = granted
         self._dequeue(action, served=True)
         self._executing[action.uid] = action
         self._allocs[action.uid] = allocs
@@ -937,12 +982,7 @@ class Orchestrator:
         return True
 
     def _duration_of(self, action: Action, key_units: Optional[int]) -> float:
-        if action.duration_sampler is not None:
-            return action.duration_sampler(key_units or 1)
-        d = action.get_dur(key_units) if key_units is not None else action.get_dur()
-        if math.isnan(d):
-            d = self.history.estimate(action)
-        return d
+        return duration_of(action, key_units, self.history)
 
     def _complete(self, action: Action, duration: float) -> None:
         self._completion_ev.pop(action.uid, None)

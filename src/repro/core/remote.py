@@ -101,8 +101,16 @@ import weakref
 from typing import TYPE_CHECKING, Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core import wire
-from repro.core.action import Action
-from repro.core.shards import PartitionPlan, SnapshotMap, plan_partition
+from repro.core.action import Action, ActionState
+from repro.core.shards import (
+    PartitionPlan,
+    SnapshotMap,
+    classify_after_commit,
+    commit_decision,
+    duration_of,
+    plan_partition,
+    quota_reservations,
+)
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from repro.core.orchestrator import Orchestrator
@@ -118,7 +126,7 @@ CACHE_BUDGET_BYTES = 8 << 20
 #: worker's request with full content (cleared fingerprint/intern
 #: state).  Anything else is a real protocol failure and raises.
 RECOVERABLE_CODES = frozenset(
-    {"stale_ref", "stale_base", "delta_mismatch", "stale_intern"}
+    {"stale_ref", "stale_base", "delta_mismatch", "stale_intern", "stale_epoch"}
 )
 
 #: Ceiling on the round-based reconnect backoff after worker loss: a
@@ -143,6 +151,24 @@ class ProtocolStateError(wire.WireError):
 # ---------------------------------------------------------------------------
 # the worker side
 # ---------------------------------------------------------------------------
+
+
+class _WaitingView:
+    """Truthiness + ``head()`` over a remaining-waiting list — the queue
+    shape :func:`repro.core.shards.classify_after_commit` expects,
+    without a live PartitionQueue (the worker only ever sees the wire's
+    already-service-ordered lists)."""
+
+    __slots__ = ("_acts",)
+
+    def __init__(self, acts: Sequence[Action]) -> None:
+        self._acts = acts
+
+    def __bool__(self) -> bool:
+        return bool(self._acts)
+
+    def head(self) -> Optional[Action]:
+        return self._acts[0] if self._acts else None
 
 
 class RemoteShardWorker:
@@ -200,6 +226,19 @@ class RemoteShardWorker:
         # payload it produces; carrying it forward keeps the aggregate
         # wire bill honest without double-serializing)
         self._carry_dump_s = 0.0
+        # worker-owned commit: rtype -> ownership-lease epoch.  A
+        # ``plan_commit`` asserting an epoch this table does not hold is
+        # refused with a typed ``stale_epoch`` error BEFORE any replica
+        # mutation — a restarted worker (amnesia) can therefore never
+        # double-launch on stale state.
+        self._leases: Dict[str, int] = {}
+        # pre-round replica states of the last UNCONFIRMED plan_commit:
+        # rtype -> (fingerprint, full snapshot envelope).  Dropped on
+        # confirm (the client verified and adopted the outcome);
+        # restored on an explicit ``commit_decide`` abort or implicitly
+        # when the next frame arrives without a confirm (the client
+        # never acked — deterministic abort, never a half-applied round)
+        self._stash: Optional[Dict[str, Tuple[str, Dict[str, Any]]]] = None
 
     @staticmethod
     def _fresh_stats() -> Dict[str, float]:
@@ -435,7 +474,12 @@ class RemoteShardWorker:
 
     def _handle(self, payload: Any, parse_s: float = 0.0) -> Dict[str, Any]:
         """Dispatch one decoded frame by kind: ``plan_request`` (one
-        plan round), ``plan_batch`` (several plan requests processed in
+        plan round), ``plan_commit`` (a fused plan+commit round against
+        the leased authoritative replicas — the two-phase commit's
+        *prepare*, answered by the ``plan_commit_response`` ack),
+        ``commit_decide`` (the explicit commit/abort verdict for an
+        unconfirmed prepared round, also the fence/revocation vehicle),
+        ``plan_batch`` (several plan/plan_commit requests processed in
         arrival order against the evolving cache state — one frame, one
         framing overhead), or ``drain`` (flush the carried response-dump
         cost so a run's LAST response encode is billed before the
@@ -446,17 +490,32 @@ class RemoteShardWorker:
             codec_s = parse_s + self._carry_dump_s
             self._carry_dump_s = 0.0
             return wire.envelope("drain_response", {"codec_s": codec_s})
+        if kind == "commit_decide":
+            return self._commit_decide(payload)
         if kind == "plan_batch":
             batch = wire.expect(payload, "plan_batch")
             resps = [
-                self._plan(r, parse_s if i == 0 else 0.0)
+                (
+                    self._plan_commit(r, parse_s if i == 0 else 0.0)
+                    if isinstance(r, dict) and r.get("kind") == "plan_commit"
+                    else self._plan(r, parse_s if i == 0 else 0.0)
+                )
                 for i, r in enumerate(batch.get("reqs", []))
             ]
             return wire.envelope("plan_batch_response", {"resps": resps})
+        if kind == "plan_commit":
+            return self._plan_commit(payload, parse_s)
         return self._plan(payload, parse_s)
 
-    def _plan(self, payload: Any, parse_s: float = 0.0) -> Dict[str, Any]:
-        req = wire.expect(payload, "plan_request")
+    def _decode_plan_request(self, req: Dict[str, Any]) -> Dict[str, Any]:
+        """The decode preamble shared by ``plan_request`` and
+        ``plan_commit``: sync policy/fairness/history, reconstruct
+        snapshots and refresh the resident replicas, resolve every
+        interned action list atomically.  Returns a context dict with
+        the *plan view* managers (``plan_mutates`` families copied), the
+        resident authoritative replicas as ``(fp, full, mgr)`` triples,
+        the resolved waiting/executing lists, and the preamble's codec
+        wall — the caller adds its own encode cost on top."""
         self._stats = self._fresh_stats()
         t_codec = time.perf_counter()
 
@@ -514,10 +573,12 @@ class RemoteShardWorker:
         # across this request's partitions — matching the one-decode-
         # per-request semantics the rebuild path had.
         managers: Dict[str, Any] = {}
+        resident: Dict[str, Tuple[str, Dict[str, Any], Any]] = {}
         for rtype, snap in req.get("snapshots", {}).items():
             rt = str(rtype)
             fp, full = self._snapshot(rt, snap)
             mgr = self._manager(rt, fp, full)
+            resident[rt] = (fp, full, mgr)
             if type(mgr).plan_mutates:
                 t_reset = time.perf_counter()
                 mgr = mgr.snapshot()
@@ -566,32 +627,45 @@ class RemoteShardWorker:
                 self._part_cache.pop(part, None)
             else:
                 self._part_cache[part] = commit
-        codec_s = time.perf_counter() - t_codec
+        return {
+            "managers": managers,
+            "resident": resident,
+            "waiting_by_part": waiting_by_part,
+            "executing": executing,
+            "now": float(req.get("now", 0.0)),
+            "incremental": bool(req.get("incremental", True)),
+            "shard": int(req.get("shard", 0)),
+            "codec_s": time.perf_counter() - t_codec,
+        }
 
-        now = float(req.get("now", 0.0))
-        incremental = bool(req.get("incremental", True))
-        shard = int(req.get("shard", 0))
+    def _plan(self, payload: Any, parse_s: float = 0.0) -> Dict[str, Any]:
+        req = wire.expect(payload, "plan_request")
+        ctx = self._decode_plan_request(req)
+        managers = ctx["managers"]
+        shard = ctx["shard"]
 
         t_plan = time.perf_counter()
         plans = [
             plan_partition(
                 part,
                 waiting,
-                executing,
+                ctx["executing"],
                 managers,
                 self._policy,
                 self._fair_share,
-                now,
-                incremental,
+                ctx["now"],
+                ctx["incremental"],
                 shard=shard,
             )
-            for part, waiting in waiting_by_part.items()
+            for part, waiting in ctx["waiting_by_part"].items()
         ]
         plan_s = time.perf_counter() - t_plan
 
         t_enc = time.perf_counter()
         plan_payloads = [wire.encode_plan(p) for p in plans]
-        codec_s += parse_s + self._carry_dump_s + (time.perf_counter() - t_enc)
+        codec_s = ctx["codec_s"] + parse_s + self._carry_dump_s + (
+            time.perf_counter() - t_enc
+        )
         self._carry_dump_s = 0.0
         body = {
             "shard": shard,
@@ -601,6 +675,233 @@ class RemoteShardWorker:
             "cache": self._stats,
         }
         return wire.envelope("plan_response", body)
+
+    # -- worker-owned two-phase commit ---------------------------------
+    def _restore_stash(self) -> int:
+        """Abort the unconfirmed prepared round: rebuild every touched
+        replica from its stashed pre-round snapshot (the existing
+        decode rail — byte-identical state, no half-applied commits
+        survive).  Returns the number of replicas restored."""
+        stash, self._stash = self._stash, None
+        if not stash:
+            return 0
+        for rt, (fp, full) in stash.items():
+            self._resident[rt] = (fp, wire.decode_snapshot(full))
+            self._snap_cache.put(rt, (fp, full), wire.payload_nbytes(full))
+        return len(stash)
+
+    def _commit_decide(self, payload: Any) -> Dict[str, Any]:
+        """The coordinator's explicit verdict on the unconfirmed
+        prepared round: ``commit=True`` finalizes it (drop the stash),
+        ``commit=False`` deterministically aborts it (restore the
+        pre-round replica states).  ``revoke`` lists rtypes whose
+        ownership lease is withdrawn (handoff fence / adoption after a
+        presumed loss) — a later ``plan_commit`` asserting the revoked
+        epoch gets a typed ``stale_epoch`` refusal."""
+        req = wire.expect(payload, "commit_decide")
+        restored = 0
+        if bool(req.get("commit", False)):
+            self._stash = None
+        else:
+            restored = self._restore_stash()
+        for rt in req.get("revoke", []):
+            self._leases.pop(str(rt), None)
+        return wire.envelope(
+            "commit_decide_response",
+            {"restored": restored, "leases": len(self._leases)},
+        )
+
+    def _plan_commit(self, payload: Any, parse_s: float = 0.0) -> Dict[str, Any]:
+        """One fused plan+commit round — the two-phase exchange's
+        *prepare*.  The worker validates its ownership leases (epoch
+        assertions fail typed BEFORE any mutation), stashes the
+        pre-round replica states, then runs up to ``max_passes``
+        dependent fixpoint passes entirely locally: plan the dirty
+        partitions (same plan core), commit each pass's intents against
+        the **authoritative resident replicas** in global sorted
+        partition order through the same shared commit core the
+        client-serial engine uses (:func:`repro.core.shards.
+        commit_decision`), re-dirty via the shared classification, and
+        feed the next pass.  Conflicts are resolved worker-side: a
+        refused intent rolls back through ``release_unlaunched`` and
+        its partition stays queued — exactly the client-serial rail.
+        The response is the *ack*: per-pass plans + committed outcomes
+        plus the post-commit replica fingerprints the coordinator
+        verifies its replay against."""
+        req = wire.expect(payload, "plan_commit")
+        commit_req = req.get("commit") or {}
+
+        # 1) settle the previous round's stash: an explicit confirm
+        # finalizes it; any new frame without one means the coordinator
+        # never adopted that round — deterministic implicit abort.
+        if commit_req.get("confirm"):
+            self._stash = None
+        elif self._stash is not None:
+            self._restore_stash()
+
+        # 2) ownership leases — validated before ANY replica mutation,
+        # so a stale-epoch worker (restart amnesia, fenced handoff) can
+        # never double-launch: it refuses typed and the coordinator
+        # re-grants.
+        stale: List[str] = []
+        for node in commit_req.get("leases", []):
+            rt, epoch, fresh, _fp = wire.decode_lease(node)
+            if fresh:
+                self._leases[rt] = epoch
+            elif self._leases.get(rt) != epoch:
+                stale.append(rt)
+        if stale:
+            raise ProtocolStateError(
+                "stale_epoch",
+                f"{len(stale)} ownership lease(s) stale or not held",
+                rtypes=sorted(stale),
+            )
+
+        # 3) shared decode preamble (same rails as plan_request)
+        ctx = self._decode_plan_request(req)
+        resident = ctx["resident"]
+        now = ctx["now"]
+        shard = ctx["shard"]
+        t_codec_extra = 0.0
+
+        # 4) stash pre-round state for the abort rail
+        self._stash = {rt: (fp, full) for rt, (fp, full, _m) in resident.items()}
+        replicas = {rt: m for rt, (_fp, _full, m) in resident.items()}
+
+        max_passes = max(1, int(commit_req.get("max_passes", 1)))
+        tick = float(commit_req.get("tick", 0.0005))
+        history = getattr(self._policy, "history", None)
+        waiting = {p: list(acts) for p, acts in ctx["waiting_by_part"].items()}
+        exec_view = list(ctx["executing"])
+
+        passes_out: List[Dict[str, Any]] = []
+        plan_s_total = 0.0
+        commit_s_total = 0.0
+        # pass 1 plans every partition the frame carried (empty ones
+        # included — the coordinator's replay needs their plans for the
+        # same watch-list bookkeeping the client-serial path performs);
+        # later passes re-plan only the re-dirtied set
+        keys = sorted(waiting)
+        for _pass in range(max_passes):
+            if not keys:
+                break
+            t_plan = time.perf_counter()
+            plan_view: Dict[str, Any] = {}
+            for rt, m in replicas.items():
+                plan_view[rt] = m.snapshot() if type(m).plan_mutates else m
+            plans = [
+                plan_partition(
+                    part,
+                    waiting[part],
+                    exec_view,
+                    plan_view,
+                    self._policy,
+                    self._fair_share,
+                    now,
+                    ctx["incremental"],
+                    shard=shard,
+                )
+                for part in keys
+            ]
+            plan_s_total += time.perf_counter() - t_plan
+
+            t_commit = time.perf_counter()
+            outcomes: List[Dict[str, Any]] = []
+            next_keys: List[str] = []
+            for plan in plans:  # keys sorted -> global sorted commit order
+                part = plan.part
+                acts = waiting.get(part, [])
+                launched_rows: List[Tuple[int, Dict[str, int]]] = []
+                failed = 0
+                if plan.planned and acts and plan.result is not None:
+                    quota_pending = quota_reservations(
+                        plan.result.decisions, replicas, self._fair_share
+                    )
+                    launched_uids = set()
+                    for decision in plan.result.decisions:
+                        granted = commit_decision(
+                            decision, replicas, self._fair_share, quota_pending
+                        )
+                        if granted is None:
+                            failed += 1
+                            continue
+                        units, allocs = granted
+                        a = decision.action
+                        overhead = tick + sum(al.overhead for al in allocs)
+                        key_units = units.get(a.key_resource or "", None)
+                        dur = duration_of(a, key_units, history)
+                        # the launched action joins the next pass's
+                        # executing view as a CLONE — interned Actions
+                        # are shared across rounds and must never be
+                        # mutated worker-side
+                        exec_view.append(
+                            wire.patch_action(
+                                a,
+                                {
+                                    "state": ActionState.RUNNING.value,
+                                    "start_time": now,
+                                    "finish_time": now + overhead + dur,
+                                    "sys_overhead": overhead,
+                                },
+                            )
+                        )
+                        launched_uids.add(a.uid)
+                        launched_rows.append((a.uid, units))
+                    if launched_uids:
+                        waiting[part] = acts = [
+                            x for x in acts if x.uid not in launched_uids
+                        ]
+                evicted = 0 if plan.result is None else plan.result.evicted
+                cls = classify_after_commit(
+                    _WaitingView(acts), evicted, failed, plan.held, replicas
+                )
+                if cls == "dirty":
+                    next_keys.append(part)
+                outcomes.append(
+                    wire.encode_commit_outcome(part, launched_rows, failed, plan.held)
+                )
+            commit_s_total += time.perf_counter() - t_commit
+
+            t_enc = time.perf_counter()
+            passes_out.append(
+                {
+                    "plans": [wire.encode_plan(p) for p in plans],
+                    "outcomes": outcomes,
+                }
+            )
+            t_codec_extra += time.perf_counter() - t_enc
+            keys = next_keys
+
+        # 5) post-commit fingerprints: the resident replicas now embody
+        # the committed state; re-key them (and the delta bases) so the
+        # next round's refs/deltas match WITHOUT re-shipping the state —
+        # the whole point of worker-owned commit.  The fp computation is
+        # worker commit cost and is billed as such.
+        t_fp = time.perf_counter()
+        fps: Dict[str, str] = {}
+        for rt, m in replicas.items():
+            full = wire.encode_snapshot(m)
+            fp = wire.fingerprint(full)
+            self._resident[rt] = (fp, m)
+            self._snap_cache.put(rt, (fp, full), wire.payload_nbytes(full))
+            fps[rt] = fp
+        commit_s_total += time.perf_counter() - t_fp
+
+        codec_s = (
+            ctx["codec_s"] + parse_s + self._carry_dump_s + t_codec_extra
+        )
+        self._carry_dump_s = 0.0
+        body = {
+            "shard": shard,
+            "passes": passes_out,
+            "more": bool(keys),
+            "fps": fps,
+            "plan_s": plan_s_total,
+            "commit_s": commit_s_total,
+            "codec_s": codec_s,
+            "cache": self._stats,
+        }
+        return wire.envelope("plan_commit_response", body)
 
 
 # ---------------------------------------------------------------------------
@@ -1085,13 +1386,18 @@ class RemoteRoundClient:
 
     def _encode_action_cached(self, a: Action) -> _ActEnc:
         """The cached wire identity of one action, re-keyed only when a
-        mutable field changed since the cached round.  Immutable fields
-        (cost, elasticity, ids) never re-key; the scalar metadata slice
-        does, because planning reads it.  A re-key computes the *field
-        diff* against the previous version — the payload a patch-define
-        ships — and defers the full envelope until some worker needs
-        one; counting: an unchanged key is a memo hit, a re-key or a
-        first sighting is a miss."""
+        mutable field changed since the cached round.  Truly immutable
+        fields (elasticity, ids) never re-key; the scalar metadata
+        slice does, because planning reads it — and so does the cost
+        *targeting* (rtype set + key_resource), because ``migrate_task``
+        retargets those in place and a stale-cost reference would plan
+        a migrated action against its pre-handoff pool.  A re-key
+        computes the *field diff* against the previous version — the
+        payload a patch-define ships — and defers the full envelope
+        until some worker needs one; a retarget re-key forces a full
+        define instead (the patch schema does not carry cost).
+        Counting: an unchanged key is a memo hit, a re-key or a first
+        sighting is a miss."""
         meta = a.metadata
         mkey: tuple = ()
         if meta:
@@ -1111,6 +1417,7 @@ class RemoteRoundClient:
             _nk(a.finish_time),
             a.sys_overhead,
             mkey,
+            (a.key_resource, tuple(sorted(a.cost))),
         )
         hit = self._act_cache.get(a.uid)
         if hit is not None and hit.key == key:
@@ -1137,6 +1444,10 @@ class RemoteRoundClient:
                     patch[field] = getattr(a, field)
             if old[6] != mkey:
                 patch["metadata"] = wire._wire_metadata(meta)
+            if old[7] != key[7]:
+                # a migration retargeted the cost vector: the patch
+                # schema has no cost field, so ship a full define
+                patch = None
         # identity hashes the uid plus the mutable-field key: immutable
         # fields can never differ for a uid, so this is exactly as
         # collision-free as hashing the whole payload at a fraction of
@@ -1249,6 +1560,158 @@ class RemoteRoundClient:
         t_round = time.perf_counter()
 
         # ---- encode phase (client-side serialization cost) ------------
+        ctx = self._encode_round(groups)
+        plans: List[PartitionPlan] = ctx["plans"]
+        by_uid: Dict[int, Action] = ctx["by_uid"]
+        shard_parts = ctx["shard_parts"]
+        executing_enc = ctx["executing_enc"]
+        exec_rsets = ctx["exec_rsets"]
+        seen_uids = ctx["seen_uids"]
+        shared = ctx["shared"]
+        encode_s = ctx["encode_s"]
+        nbytes = 0
+
+        # ---- pipelined dispatch (encode shard i+1 while i is in
+        # flight) -------------------------------------------------------
+        # each request is submitted the moment its frame exists, so a
+        # process-backed worker parses and plans shard i while the
+        # client is still encoding shard i+1 — only the HEAD request's
+        # encode is inherently serial with worker compute.  encode_s
+        # stays the pure-encode sum and transport_s the submit+recv
+        # wall sum, so the components remain comparable with the
+        # serialized model; the overlap-aware critical path is reported
+        # separately (overlap_s).
+        requests: List[Tuple[int, Any, Any]] = []
+        # workers lost this round (transport failure at any point) —
+        # their partitions fall back to inline planning below
+        lost: List[Tuple[int, Any]] = []
+        transport_s = 0.0
+        e_head = 0.0
+        for shard_idx, parts_enc, rtypes in shard_parts:
+            if self._skip_down_worker(shard_idx):
+                lost.append((shard_idx, parts_enc))
+                continue
+            t0 = time.perf_counter()
+            exec_sub = self._exec_subset(ctx, rtypes)
+            blob = wire.encode_frame(
+                self._request(
+                    shard_idx, parts_enc, rtypes, exec_sub, shared,
+                    reset_interns=shard_idx in self._need_intern_reset,
+                ),
+                self.codec,
+            )
+            t1 = time.perf_counter()
+            encode_s += t1 - t0
+            if not requests:
+                e_head = t1 - t0
+            nbytes += len(blob)
+            try:
+                self._transport(shard_idx).submit(blob)
+            except wire.TransportError:
+                transport_s += time.perf_counter() - t1
+                self._note_worker_loss(shard_idx)
+                lost.append((shard_idx, parts_enc))
+                continue
+            transport_s += time.perf_counter() - t1
+            requests.append((shard_idx, (parts_enc, exec_sub), rtypes))
+        # drop encode-cache entries for actions that left the system —
+        # everything alive was just seen, so this is exact (runs while
+        # the workers compute, off any per-request path)
+        encode_s += self._prune_caches(seen_uids)
+
+        # ---- gather (in submit order) ---------------------------------
+        responses: List[Tuple[int, Any, Any, bytes]] = []
+        for shard_idx, rctx, rtypes in requests:
+            t0 = time.perf_counter()
+            try:
+                blob = self._transport(shard_idx).recv()
+            except wire.TransportError:
+                transport_s += time.perf_counter() - t0
+                self._note_worker_loss(shard_idx)
+                lost.append((shard_idx, rctx[0]))
+                continue
+            transport_s += time.perf_counter() - t0
+            responses.append((shard_idx, rctx, rtypes, blob))
+
+        # ---- decode phase (client-side cost; worker codec separate) ---
+        t_dec = time.perf_counter()
+        critical = 0.0
+        decode_s = 0.0
+        worker_codec_s = 0.0
+        max_codec = 0.0
+        for shard_idx, rctx, rtypes, blob in responses:
+            nbytes += len(blob)
+            payload = wire.decode_frame(blob)
+            if isinstance(payload, dict) and payload.get("kind") == "error":
+                parts_enc, exec_sub = rctx
+                try:
+                    payload, extra = self._recover(
+                        shard_idx, payload, parts_enc, rtypes, exec_sub, shared
+                    )
+                except wire.TransportError:
+                    self._note_worker_loss(shard_idx)
+                    lost.append((shard_idx, parts_enc))
+                    continue
+                nbytes += extra
+            resp = wire.expect(payload, "plan_response")
+            plan_s = float(resp.get("plan_s", 0.0))
+            codec_s = float(resp.get("codec_s", 0.0))
+            worker_codec_s += codec_s
+            max_codec = max(max_codec, codec_s)
+            cache = resp.get("cache")
+            if cache:
+                telemetry.note_worker_cache(cache)
+            shard_plans = [wire.decode_plan(p, by_uid) for p in resp["plans"]]
+            critical = max(critical, plan_s)
+            telemetry.note_shard_round(shard_idx, len(shard_plans), plan_s)
+            plans.extend(shard_plans)
+            self._note_worker_ok(shard_idx)
+        decode_s += time.perf_counter() - t_dec
+
+        # ---- loss fallback: plan lost workers' partitions inline ------
+        # (same plan core over fresh snapshots — identical plans, so the
+        # launch trace cannot diverge; the local plan cost is charged to
+        # the round's critical path, where it actually ran)
+        for shard_idx, parts_enc in lost:
+            shard_plans, plan_s = self._plan_inline(shard_idx, parts_enc)
+            critical = max(critical, plan_s)
+            plans.extend(shard_plans)
+
+        telemetry.plan_critical_s += critical
+        telemetry.plan_wall_s += time.perf_counter() - t_round
+        # overlap-aware wire critical path of this round: only the head
+        # request's encode is serial with worker compute, the slowest
+        # worker's codec bill gates the last response, and the client
+        # decode tail is serial again.  Frames fired at the SAME
+        # scheduling instant (multi-pass rounds coalesced by the round
+        # engine) merge into the previous accounting round.
+        overlap_s = e_head + max_codec + decode_s
+        new_round = self._last_now is None or orch.now != self._last_now
+        self._last_now = orch.now
+        telemetry.note_wire_round(
+            encode_s,
+            transport_s,
+            decode_s,
+            nbytes,
+            worker_codec_s,
+            overlap_s=overlap_s,
+            frames=len(requests),
+            new_round=new_round,
+        )
+        telemetry.note_wire_memo(self._memo_hits, self._memo_misses)
+        self._memo_hits = 0
+        self._memo_misses = 0
+        return plans, critical
+
+    def _encode_round(self, groups: Sequence[Sequence[str]]) -> Dict[str, Any]:
+        """The round's encode phase, shared by the plan-only path
+        (:meth:`plan_round`) and the worker-owned fused plan+commit path
+        (:class:`WorkerCommitEngine`): memo-encode the executing set and
+        every non-empty partition queue, group them per shard, and
+        encode the shard-independent payloads once.  Returns the round
+        context — empty partitions come back as ``planned=False`` plans
+        in ``plans`` (resolved client-side, off the wire)."""
+        orch = self.orch
         t_enc = time.perf_counter()
         plans: List[PartitionPlan] = []
         by_uid: Dict[int, Action] = {}
@@ -1344,157 +1807,46 @@ class RemoteRoundClient:
         # fingerprinted ONCE per round and shared across every worker's
         # request — only the per-worker ref/delta/full decision differs
         shared = self._encode_shared(union_rtypes)
-        # each worker receives only the executing actions whose cost
-        # touches its shard's resource types — planning consults the
-        # in-flight set strictly through per-rtype filters, so the
-        # subset plans identically while the fan-out (and the define
-        # traffic behind it) shrinks by the shard count
-        encode_s = time.perf_counter() - t_enc
+        return {
+            "plans": plans,
+            "by_uid": by_uid,
+            "shard_parts": shard_parts,
+            "executing_enc": executing_enc,
+            "exec_rsets": exec_rsets,
+            "seen_uids": seen_uids,
+            "shared": shared,
+            "encode_s": time.perf_counter() - t_enc,
+        }
 
-        # ---- pipelined dispatch (encode shard i+1 while i is in
-        # flight) -------------------------------------------------------
-        # each request is submitted the moment its frame exists, so a
-        # process-backed worker parses and plans shard i while the
-        # client is still encoding shard i+1 — only the HEAD request's
-        # encode is inherently serial with worker compute.  encode_s
-        # stays the pure-encode sum and transport_s the submit+recv
-        # wall sum, so the components remain comparable with the
-        # serialized model; the overlap-aware critical path is reported
-        # separately (overlap_s).
-        requests: List[Tuple[int, Any, Any]] = []
-        # workers lost this round (transport failure at any point) —
-        # their partitions fall back to inline planning below
-        lost: List[Tuple[int, Any]] = []
-        transport_s = 0.0
-        e_head = 0.0
-        for shard_idx, parts_enc, rtypes in shard_parts:
-            if self._skip_down_worker(shard_idx):
-                lost.append((shard_idx, parts_enc))
-                continue
-            t0 = time.perf_counter()
-            sub_enc = [
-                e
-                for rs, e in zip(exec_rsets, executing_enc)
-                if not rtypes.isdisjoint(rs)
-            ]
-            sub_fps = [e.fp for e in sub_enc]
-            exec_sub = (sub_enc, sub_fps, wire.list_fingerprint(sub_fps))
-            blob = wire.encode_frame(
-                self._request(
-                    shard_idx, parts_enc, rtypes, exec_sub, shared,
-                    reset_interns=shard_idx in self._need_intern_reset,
-                ),
-                self.codec,
-            )
-            t1 = time.perf_counter()
-            encode_s += t1 - t0
-            if not requests:
-                e_head = t1 - t0
-            nbytes += len(blob)
-            try:
-                self._transport(shard_idx).submit(blob)
-            except wire.TransportError:
-                transport_s += time.perf_counter() - t1
-                self._note_worker_loss(shard_idx)
-                lost.append((shard_idx, parts_enc))
-                continue
-            transport_s += time.perf_counter() - t1
-            requests.append((shard_idx, (parts_enc, exec_sub), rtypes))
-        # drop encode-cache entries for actions that left the system —
-        # everything alive was just seen, so this is exact (runs while
-        # the workers compute, off any per-request path)
+    @staticmethod
+    def _exec_subset(ctx: Dict[str, Any], rtypes: set) -> Tuple[list, List[str], str]:
+        """One worker's executing-set view: only the in-flight actions
+        whose cost touches the shard's resource types — planning
+        consults the in-flight set strictly through per-rtype filters,
+        so the subset plans identically while the fan-out (and the
+        define traffic behind it) shrinks by the shard count."""
+        sub_enc = [
+            e
+            for rs, e in zip(ctx["exec_rsets"], ctx["executing_enc"])
+            if not rtypes.isdisjoint(rs)
+        ]
+        sub_fps = [e.fp for e in sub_enc]
+        return (sub_enc, sub_fps, wire.list_fingerprint(sub_fps))
+
+    def _prune_caches(self, seen_uids: set) -> float:
+        """Drop encode-cache entries for actions that left the system —
+        everything alive was just seen, so this is exact (runs while the
+        workers compute, off any per-request path).  Returns the wall
+        spent, billed to the round's encode phase."""
         t0 = time.perf_counter()
+        rsets = self._act_rsets
         if len(self._act_cache) > len(seen_uids):
             for uid in [u for u in self._act_cache if u not in seen_uids]:
                 del self._act_cache[uid]
         if len(rsets) > len(seen_uids):
             for uid in [u for u in rsets if u not in seen_uids]:
                 del rsets[uid]
-        encode_s += time.perf_counter() - t0
-
-        # ---- gather (in submit order) ---------------------------------
-        responses: List[Tuple[int, Any, Any, bytes]] = []
-        for shard_idx, ctx, rtypes in requests:
-            t0 = time.perf_counter()
-            try:
-                blob = self._transport(shard_idx).recv()
-            except wire.TransportError:
-                transport_s += time.perf_counter() - t0
-                self._note_worker_loss(shard_idx)
-                lost.append((shard_idx, ctx[0]))
-                continue
-            transport_s += time.perf_counter() - t0
-            responses.append((shard_idx, ctx, rtypes, blob))
-
-        # ---- decode phase (client-side cost; worker codec separate) ---
-        t_dec = time.perf_counter()
-        critical = 0.0
-        decode_s = 0.0
-        worker_codec_s = 0.0
-        max_codec = 0.0
-        for shard_idx, ctx, rtypes, blob in responses:
-            nbytes += len(blob)
-            payload = wire.decode_frame(blob)
-            if isinstance(payload, dict) and payload.get("kind") == "error":
-                parts_enc, exec_sub = ctx
-                try:
-                    payload, extra = self._recover(
-                        shard_idx, payload, parts_enc, rtypes, exec_sub, shared
-                    )
-                except wire.TransportError:
-                    self._note_worker_loss(shard_idx)
-                    lost.append((shard_idx, parts_enc))
-                    continue
-                nbytes += extra
-            resp = wire.expect(payload, "plan_response")
-            plan_s = float(resp.get("plan_s", 0.0))
-            codec_s = float(resp.get("codec_s", 0.0))
-            worker_codec_s += codec_s
-            max_codec = max(max_codec, codec_s)
-            cache = resp.get("cache")
-            if cache:
-                telemetry.note_worker_cache(cache)
-            shard_plans = [wire.decode_plan(p, by_uid) for p in resp["plans"]]
-            critical = max(critical, plan_s)
-            telemetry.note_shard_round(shard_idx, len(shard_plans), plan_s)
-            plans.extend(shard_plans)
-            self._note_worker_ok(shard_idx)
-        decode_s += time.perf_counter() - t_dec
-
-        # ---- loss fallback: plan lost workers' partitions inline ------
-        # (same plan core over fresh snapshots — identical plans, so the
-        # launch trace cannot diverge; the local plan cost is charged to
-        # the round's critical path, where it actually ran)
-        for shard_idx, parts_enc in lost:
-            shard_plans, plan_s = self._plan_inline(shard_idx, parts_enc)
-            critical = max(critical, plan_s)
-            plans.extend(shard_plans)
-
-        telemetry.plan_critical_s += critical
-        telemetry.plan_wall_s += time.perf_counter() - t_round
-        # overlap-aware wire critical path of this round: only the head
-        # request's encode is serial with worker compute, the slowest
-        # worker's codec bill gates the last response, and the client
-        # decode tail is serial again.  Frames fired at the SAME
-        # scheduling instant (multi-pass rounds coalesced by the round
-        # engine) merge into the previous accounting round.
-        overlap_s = e_head + max_codec + decode_s
-        new_round = self._last_now is None or orch.now != self._last_now
-        self._last_now = orch.now
-        telemetry.note_wire_round(
-            encode_s,
-            transport_s,
-            decode_s,
-            nbytes,
-            worker_codec_s,
-            overlap_s=overlap_s,
-            frames=len(requests),
-            new_round=new_round,
-        )
-        telemetry.note_wire_memo(self._memo_hits, self._memo_misses)
-        self._memo_hits = 0
-        self._memo_misses = 0
-        return plans, critical
+        return time.perf_counter() - t0
 
     # ------------------------------------------------------------------
     def _recover(
@@ -1686,3 +2038,619 @@ class RemoteRoundClient:
         if reset_interns:
             body["reset_interns"] = True
         return wire.envelope("plan_request", body)
+
+
+# ---------------------------------------------------------------------------
+# the worker-owned commit engine (coordinator side)
+# ---------------------------------------------------------------------------
+
+# module-level on purpose: remote -> orchestrator -> shards completes
+# without a cycle (neither orchestrator nor shards imports this module
+# at module level; the orchestrator constructs the engine lazily)
+from repro.core.orchestrator import SCHED_TICK_S, CommitEngine  # noqa: E402
+
+
+class WorkerCommitEngine(CommitEngine):
+    """Two-phase worker-owned commit: each remote worker holds the
+    *authoritative* manager replicas for the resource types it owns
+    under epoch-stamped ownership leases, and a whole fixpoint pass —
+    plan AND commit, up to ``commit_max_passes`` dependent passes — runs
+    in one fused ``plan_commit`` exchange per owner worker.
+
+    The exchange is prepare → intent/ack → commit|abort:
+
+    * **prepare** — the ordinary plan request, promoted to a
+      ``plan_commit`` frame carrying the round's ownership leases, the
+      pass budget, and the previous round's confirm.  The worker
+      validates every lease epoch *before* touching a replica (a
+      restarted worker's amnesia surfaces as a typed ``stale_epoch``,
+      never a double-launch), stashes the pre-round replica states, and
+      commits its passes locally on the shared commit core.
+    * **ack** — the response: per-pass plans + committed outcomes + the
+      post-commit replica fingerprints.  The coordinator *replays* the
+      plans through the unchanged client-serial walk
+      (``Orchestrator._commit_partition``) in global sorted partition
+      order — the launch trace is identical to client-serial **by
+      construction**, because it is produced by the same code over the
+      same plans — then verifies its post-commit state against the
+      worker's fingerprints and cross-checks launched uids against the
+      reported outcomes.
+    * **commit|abort** — a verified round's confirm rides the next
+      fused frame (or an explicit ``commit_decide``); any divergence,
+      fence, or un-adopted trailing pass aborts the worker's stash back
+      to its pre-round state — the coordinator's replay remains the
+      authority, so a worker abort costs wire state, never trace
+      damage.
+
+    Rounds the engine cannot own outright decline to the client-serial
+    walk (counted in ``commit_inline_rounds``): a partition whose commit
+    footprint spans owners, a worker in its loss backoff window, or
+    real-latency charging (worker plan walls are not the client's).
+    Worker loss mid-prepare rides the ordinary loss rail plus lease
+    *adoption*: the coordinator bumps the orphaned epochs and commits
+    the partitions inline from fallback plans — zero lost launches, and
+    a zombie's late ack can never land."""
+
+    mode = "worker"
+
+    def __init__(self, orch: "Orchestrator", client: RemoteRoundClient) -> None:
+        super().__init__(orch)
+        self.client = client
+        # rtype -> current ownership epoch; bumped on every revocation,
+        # regrant, or adoption, so exactly one holder is ever current
+        self._epochs: Dict[str, int] = {}
+        # shard -> {rtype: epoch} that worker currently holds
+        self._granted: Dict[int, Dict[str, int]] = {}
+        # shards with a verified-but-unconfirmed prepared round; the
+        # confirm rides the next fused frame or a commit_decide flush
+        self._pending_confirm: set = set()
+        # shard -> leased rtypes of the round currently in flight (the
+        # open prepare window a reentrant fence targets)
+        self._inflight: Dict[int, frozenset] = {}
+        self._fence_aborts: set = set()
+        self._deferred_revokes: set = set()
+        self._round_open = False
+        # part -> (queue.version, footprint rtypes, any duration sampler)
+        self._foot_cache: Dict[str, Tuple[int, frozenset, bool]] = {}
+        # static ownership map: managed rtypes striped over shards in
+        # sorted order — deterministic and derivable by every participant
+        self._owner_idx: Dict[str, int] = {
+            rt: i for i, rt in enumerate(sorted(orch.managers))
+        }
+
+    # -- eligibility ----------------------------------------------------
+    def _footprint(self, part: str) -> Tuple[frozenset, bool]:
+        """The rtypes committing ``part`` can touch — every queued
+        action's managed cost rtypes plus the partition's own manager —
+        and whether any queued action carries a host-local duration
+        sampler.  Version-gated on the partition queue, so idle
+        partitions cost O(1) per round."""
+        orch = self.orch
+        queue = orch._queues.get(part)
+        if not queue:
+            return frozenset(), False
+        hit = self._foot_cache.get(part)
+        if hit is not None and hit[0] == queue.version:
+            return hit[1], hit[2]
+        managed = orch.managers
+        foot = set()
+        sampler = False
+        for a in queue.ordered():
+            if a.duration_sampler is not None:
+                sampler = True
+            for r in a.cost:
+                if r in managed:
+                    foot.add(r)
+        if part in managed:
+            foot.add(part)
+        entry = (queue.version, frozenset(foot), sampler)
+        self._foot_cache[part] = entry
+        return entry[1], entry[2]
+
+    def _decline(self) -> None:
+        """Fall back to the ordinary plan_round + client-serial commit
+        for this round.  The stash protocol is settled first: a plain
+        plan_request never consumes a confirm, and the NEXT fused
+        frame's implicit abort must never restore a round the
+        coordinator already adopted."""
+        self._flush_confirms()
+        self.orch.telemetry.commit_inline_rounds += 1
+        return None
+
+    def fused_round(self, keys: Sequence[str]) -> Optional[bool]:
+        orch = self.orch
+        client = self.client
+        n = int(orch.shards or 1)
+        if orch.charge_real_sched_latency:
+            # per-partition plan walls measured on the worker are not
+            # the client-serial walls this mode charges — decline
+            return self._decline()
+        # group each dirty partition under the single worker owning its
+        # whole commit footprint; a cross-owner footprint makes the
+        # round ineligible (the client-serial walk is the correct rail)
+        groups: List[List[str]] = [[] for _ in range(n)]
+        lease_rts: List[set] = [set() for _ in range(n)]
+        sampler = False
+        owner_idx = self._owner_idx
+        for part in keys:
+            foot, has_sampler = self._footprint(part)
+            sampler = sampler or has_sampler
+            owners = {owner_idx[rt] % n for rt in foot}
+            if len(owners) > 1:
+                return self._decline()
+            owner = owners.pop() if owners else 0
+            groups[owner].append(part)
+            lease_rts[owner] |= foot
+        # a worker inside its loss-backoff window cannot hold
+        # authoritative state this round; the serial walk adopts
+        for shard in range(n):
+            if groups[shard]:
+                state = client._down.get(shard)
+                if state is not None and state[1] > 0:
+                    return self._decline()
+        passes_cap = max(1, int(orch.commit_max_passes))
+        if sampler or orch.history is not getattr(orch.policy, "history", None):
+            # host-local samplers never cross the wire, and a detached
+            # history table would price pass>=2 plans off a different
+            # estimate — one pass per wire round is still exact (commit
+            # itself never consults durations)
+            passes_cap = 1
+        self._round_open = True
+        try:
+            return self._fused(groups, lease_rts, passes_cap)
+        finally:
+            self._round_open = False
+            self._inflight.clear()
+            self._fence_aborts.clear()
+            if self._deferred_revokes:
+                rts, self._deferred_revokes = self._deferred_revokes, set()
+                self.fence(sorted(rts))
+
+    # -- the fused round ------------------------------------------------
+    def _arm(
+        self, req: Dict[str, Any], shard: int, rts: set, passes_cap: int
+    ) -> None:
+        """Promote one worker's encoded plan request into the fused
+        ``plan_commit`` frame: ownership leases for the rtypes this
+        round touches (fresh grants where the worker does not hold the
+        current epoch), the fixpoint pass budget, the virtual scheduling
+        tick launch overhead charges, and the previous prepared round's
+        confirm when one is pending."""
+        telemetry = self.orch.telemetry
+        granted = self._granted.setdefault(shard, {})
+        leases = []
+        for rt in sorted(rts):
+            epoch = self._epochs.setdefault(rt, 0)
+            if granted.get(rt) == epoch:
+                leases.append(wire.encode_lease(rt, epoch))
+            else:
+                granted[rt] = epoch
+                telemetry.wire_lease_grants += 1
+                leases.append(wire.encode_lease(rt, epoch, fresh=True))
+        req["kind"] = "plan_commit"
+        commit: Dict[str, Any] = {
+            "leases": leases,
+            "max_passes": passes_cap,
+            "tick": SCHED_TICK_S,
+        }
+        if shard in self._pending_confirm:
+            commit["confirm"] = True
+            self._pending_confirm.discard(shard)
+        req["commit"] = commit
+
+    def _lose(self, shard: int) -> None:
+        """Transport loss on a preparing/prepared worker: the ordinary
+        loss rail plus ownership *adoption* — every lease the worker
+        held is revoked by epoch bump (a zombie's late ack can never
+        land) and the round's partitions fall back to inline plans
+        committed by the coordinator: orphaned intents are adopted,
+        never lost."""
+        self.client._note_worker_loss(shard)
+        self._pending_confirm.discard(shard)
+        self._inflight.pop(shard, None)
+        granted = self._granted.pop(shard, None)
+        if granted:
+            for rt in granted:
+                self._epochs[rt] = self._epochs.get(rt, 0) + 1
+            self.orch.telemetry.wire_lease_adoptions += len(granted)
+
+    def _abort_worker(self, shard: int) -> None:
+        """Explicitly abort a worker's unconfirmed prepared round
+        (restores its pre-round replicas) and revoke every lease it
+        holds.  Loss during the abort just rides the adoption rail."""
+        client = self.client
+        self.orch.telemetry.wire_commit_aborts += 1
+        granted = self._granted.pop(shard, {})
+        for rt in granted:
+            self._epochs[rt] = self._epochs.get(rt, 0) + 1
+        self._pending_confirm.discard(shard)
+        body = {"commit": False, "revoke": sorted(granted)}
+        try:
+            t = client._transport(shard)
+            t.submit(
+                wire.encode_frame(wire.envelope("commit_decide", body), client.codec)
+            )
+            wire.expect(wire.decode_frame(t.recv()), "commit_decide_response")
+        except (wire.TransportError, wire.WireError):
+            client._note_worker_loss(shard)
+
+    def _recover_fused(
+        self,
+        shard: int,
+        error: Dict[str, Any],
+        parts_enc: Any,
+        rtypes: set,
+        exec_sub: Any,
+        shared: Dict[str, Any],
+        rts: set,
+        passes_cap: int,
+    ) -> Tuple[Any, int]:
+        """One full-content retry of a fused frame after a recoverable
+        typed error.  ``stale_epoch`` is the ownership rail's answer to
+        amnesia (restarted worker, fenced handoff): the coordinator
+        re-grants every lease fresh at the current epoch alongside the
+        full state re-send — the worker never plans or commits on stale
+        ownership.  A second failure is a real protocol error."""
+        code = error.get("code")
+        if code not in RECOVERABLE_CODES:
+            raise RuntimeError(
+                f"remote shard worker {shard} failed: {error.get('error')}"
+            )
+        telemetry = self.orch.telemetry
+        client = self.client
+        if code == "stale_epoch":
+            telemetry.wire_lease_regrants += len(error.get("rtypes") or ()) or 1
+        else:
+            telemetry.wire_fallbacks += 1
+        client._reset_worker(shard)
+        self._granted.pop(shard, None)  # everything re-grants fresh
+        req = client._request(
+            shard, parts_enc, rtypes, exec_sub, shared, reset_interns=True
+        )
+        self._arm(req, shard, rts, passes_cap)
+        blob = wire.encode_frame(req, client.codec)
+        t = client._transport(shard)
+        t.submit(blob)
+        resp = t.recv()
+        payload = wire.decode_frame(resp)
+        if isinstance(payload, dict) and payload.get("kind") == "error":
+            raise RuntimeError(
+                f"remote shard worker {shard} failed after full re-send: "
+                f"{payload.get('error')}"
+            )
+        return payload, len(blob) + len(resp)
+
+    def _fused(
+        self,
+        groups: List[List[str]],
+        lease_rts: List[set],
+        passes_cap: int,
+    ) -> bool:
+        orch = self.orch
+        client = self.client
+        telemetry = orch.telemetry
+        client._ensure_slots(len(groups))
+        for shard in range(len(groups)):
+            if groups[shard]:
+                client._transport(shard)  # startup outside the accounting
+        t_round = time.perf_counter()
+
+        # ---- encode + pipelined dispatch (same rails as plan_round) ---
+        ctx = client._encode_round(groups)
+        shared = ctx["shared"]
+        by_uid = ctx["by_uid"]
+        encode_s = ctx["encode_s"]
+        nbytes = 0
+        requests: List[Tuple[int, Any, Any, set]] = []
+        lost: List[Tuple[int, Any]] = []
+        transport_s = 0.0
+        e_head = 0.0
+        for shard, parts_enc, rtypes in ctx["shard_parts"]:
+            t0 = time.perf_counter()
+            exec_sub = client._exec_subset(ctx, rtypes)
+            req = client._request(
+                shard, parts_enc, rtypes, exec_sub, shared,
+                reset_interns=shard in client._need_intern_reset,
+            )
+            self._arm(req, shard, lease_rts[shard], passes_cap)
+            blob = wire.encode_frame(req, client.codec)
+            t1 = time.perf_counter()
+            encode_s += t1 - t0
+            if not requests:
+                e_head = t1 - t0
+            nbytes += len(blob)
+            try:
+                client._transport(shard).submit(blob)
+            except wire.TransportError:
+                transport_s += time.perf_counter() - t1
+                self._lose(shard)
+                lost.append((shard, parts_enc))
+                continue
+            transport_s += time.perf_counter() - t1
+            self._inflight[shard] = frozenset(lease_rts[shard])
+            requests.append((shard, parts_enc, exec_sub, rtypes))
+        encode_s += client._prune_caches(ctx["seen_uids"])
+
+        # ---- gather (in submit order) ---------------------------------
+        responses = []
+        for shard, parts_enc, exec_sub, rtypes in requests:
+            t0 = time.perf_counter()
+            try:
+                blob = client._transport(shard).recv()
+            except wire.TransportError:
+                transport_s += time.perf_counter() - t0
+                self._lose(shard)
+                lost.append((shard, parts_enc))
+                continue
+            transport_s += time.perf_counter() - t0
+            responses.append((shard, parts_enc, exec_sub, rtypes, blob))
+
+        # ---- decode ---------------------------------------------------
+        t_dec = time.perf_counter()
+        acks: List[Tuple[int, List[List[PartitionPlan]], Dict[str, Any]]] = []
+        decode_s = 0.0
+        worker_codec_s = 0.0
+        max_codec = 0.0
+        max_plan = 0.0
+        max_commit = 0.0
+        for shard, parts_enc, exec_sub, rtypes, blob in responses:
+            nbytes += len(blob)
+            payload = wire.decode_frame(blob)
+            if isinstance(payload, dict) and payload.get("kind") == "error":
+                try:
+                    payload, extra = self._recover_fused(
+                        shard, payload, parts_enc, rtypes, exec_sub, shared,
+                        lease_rts[shard], passes_cap,
+                    )
+                except wire.TransportError:
+                    self._lose(shard)
+                    lost.append((shard, parts_enc))
+                    continue
+                nbytes += extra
+            resp = wire.expect(payload, "plan_commit_response")
+            codec_s = float(resp.get("codec_s", 0.0))
+            worker_codec_s += codec_s
+            max_codec = max(max_codec, codec_s)
+            plan_s = float(resp.get("plan_s", 0.0))
+            max_plan = max(max_plan, plan_s)
+            max_commit = max(max_commit, float(resp.get("commit_s", 0.0)))
+            cache = resp.get("cache")
+            if cache:
+                telemetry.note_worker_cache(cache)
+            passes = [
+                [wire.decode_plan(p, by_uid) for p in pas.get("plans", [])]
+                for pas in resp.get("passes", [])
+            ]
+            telemetry.note_shard_round(
+                shard, len(passes[0]) if passes else 0, plan_s
+            )
+            client._note_worker_ok(shard)
+            acks.append((shard, passes, resp))
+        decode_s += time.perf_counter() - t_dec
+        telemetry.plan_wall_s += time.perf_counter() - t_round
+
+        # ---- loss/fence fallback plans --------------------------------
+        # a lost worker's partitions are planned inline and committed by
+        # the coordinator below — identical plans from the same core, so
+        # adoption of orphaned intents cannot bend the trace.  A FENCED
+        # shard's partitions are NOT adopted at all (a handoff moved
+        # state under them); they re-dirty and replan next round.
+        fallback_plans: List[PartitionPlan] = []
+        fallback_parts: set = set()
+        for shard, parts_enc in lost:
+            if shard in self._fence_aborts:
+                orch._dirty.update(e[0] for e in parts_enc)
+                continue
+            shard_plans, plan_s = client._plan_inline(shard, parts_enc)
+            max_plan = max(max_plan, plan_s)
+            fallback_plans.extend(shard_plans)
+            fallback_parts.update(p.part for p in shard_plans)
+
+        # ---- adopt: replay the committed passes through the unchanged
+        # client-serial walk, pass by pass in global sorted partition
+        # order — the same plans through the same commit core in the
+        # same order IS the client-serial trace ------------------------
+        t_apply = time.perf_counter()
+        conflicts = 0
+        adopted = 0
+        diverged = False
+        while True:
+            k = adopted
+            pass_plans: List[PartitionPlan] = []
+            expected_uids: set = set()
+            for shard, passes, resp in acks:
+                if shard in self._fence_aborts or k >= len(passes):
+                    continue
+                pass_plans.extend(passes[k])
+                for out in resp["passes"][k].get("outcomes", []):
+                    _, rows, _, _ = wire.decode_commit_outcome(out)
+                    expected_uids.update(uid for uid, _ in rows)
+            if k == 0:
+                pass_plans.extend(ctx["plans"])
+                pass_plans.extend(fallback_plans)
+            if not pass_plans:
+                break
+            if k > 0:
+                # a dependent pass is adopted only when the re-dirtied
+                # set the workers planned against matches live state
+                # exactly; any residue (fallbacks, divergence) stops
+                # adoption — the leftover dirty set replans next round
+                expected = sorted({p.part for p in pass_plans})
+                dirty_now = sorted(
+                    x for x in orch._dirty if orch._queues.get(x)
+                )
+                if expected != dirty_now:
+                    break
+                orch._dirty.clear()
+            pass_plans.sort(key=lambda p: p.part)
+            before = set(orch._executing)
+            for plan in pass_plans:
+                conflicts += orch._commit_partition(plan)
+            adopted += 1
+            launched = set(orch._executing) - before
+            missing = expected_uids - launched
+            extra = {
+                uid
+                for uid in launched - expected_uids
+                if orch._partition_of(orch._executing[uid])
+                not in fallback_parts
+            }
+            if missing or extra:
+                # a worker's committed outcome does not match the
+                # authoritative replay (e.g. an action withdrawn between
+                # prepare and adopt): stop adopting — the replay stands,
+                # the diverged stashes abort below
+                telemetry.wire_commit_diverged += 1
+                diverged = True
+                break
+
+        # ---- verify + settle ------------------------------------------
+        for shard, passes, resp in acks:
+            if shard in self._fence_aborts:
+                self._abort_worker(shard)
+                orch._dirty.update(groups[shard])
+                continue
+            if diverged or len(passes) > adopted:
+                # un-adopted trailing passes (or a diverged outcome):
+                # the worker's replicas ran ahead of the adopted state —
+                # restore them to pre-round; the snapshot rail re-syncs
+                self._abort_worker(shard)
+                continue
+            fps = resp.get("fps") or {}
+            post: Dict[str, Tuple[str, Dict[str, Any]]] = {}
+            match = True
+            for rt, want in fps.items():
+                snap = wire.encode_snapshot(orch.managers[rt])
+                afp = wire.fingerprint(snap)
+                post[rt] = (afp, snap)
+                if afp != want:
+                    match = False
+            if not match:
+                telemetry.wire_commit_diverged += 1
+                self._abort_worker(shard)
+                continue
+            # verified: the worker's post-commit replicas ARE next
+            # round's state — pre-warm the delta bases so the committed
+            # state is never re-shipped (the wire leaves the commit
+            # path), and hold the confirm for the next fused frame
+            sent = client._sent[shard]["snaps"]
+            for rt, (afp, snap) in post.items():
+                client._prev_snaps[rt] = (afp, snap)
+                sent[rt] = afp
+            self._pending_confirm.add(shard)
+        self._inflight.clear()
+        apply_s = time.perf_counter() - t_apply
+
+        # ---- accounting (mirrors plan_round's wire rails) -------------
+        overlap_s = e_head + max_codec + decode_s
+        new_round = client._last_now is None or orch.now != client._last_now
+        client._last_now = orch.now
+        telemetry.note_wire_round(
+            encode_s,
+            transport_s,
+            decode_s,
+            nbytes,
+            worker_codec_s,
+            overlap_s=overlap_s,
+            frames=len(requests),
+            new_round=new_round,
+        )
+        telemetry.note_wire_memo(client._memo_hits, client._memo_misses)
+        client._memo_hits = 0
+        client._memo_misses = 0
+        telemetry.plan_critical_s += max_plan
+        telemetry.note_commit_round(
+            max_commit, apply_s, prepares=len(requests), acks=len(acks)
+        )
+        # the modeled decision latency of a fused round: the slowest
+        # worker's plan + commit — the client's replay/verify is mirror
+        # maintenance off the decision path (commit_apply_s), which is
+        # exactly the resource-efficiency claim this engine exists for
+        telemetry.sched_wall_s += max_plan + max_commit
+        if conflicts:
+            telemetry.commit_conflicts += conflicts
+        return conflicts > 0
+
+    # -- protocol settlement --------------------------------------------
+    def _flush_confirms(self) -> None:
+        """Finalize every verified-but-unconfirmed prepared round with
+        an explicit ``commit_decide``: plain plan_request frames never
+        settle a stash, and the next fused frame's implicit abort must
+        never restore a round the coordinator already adopted."""
+        client = self.client
+        for shard in sorted(self._pending_confirm):
+            try:
+                t = client._transport(shard)
+                t.submit(
+                    wire.encode_frame(
+                        wire.envelope("commit_decide", {"commit": True}),
+                        client.codec,
+                    )
+                )
+                wire.expect(wire.decode_frame(t.recv()), "commit_decide_response")
+            except (wire.TransportError, wire.WireError):
+                self._pending_confirm.discard(shard)
+                self._lose(shard)
+        self._pending_confirm.clear()
+
+    def fence(self, rtypes: Optional[Sequence[str]] = None) -> int:
+        """Fence ownership covering ``rtypes`` (None = all) before a
+        handoff (``migrate_task``/``rebalance``): any open prepare
+        window touching them is deterministically aborted — its ack is
+        never adopted and the worker restores its pre-round replicas —
+        pending verified rounds are finalized (the coordinator already
+        applied them), and the covered leases are revoked by epoch bump
+        so a stale holder can never ack again.  Returns the number of
+        fenced in-flight intents."""
+        rset = None if rtypes is None else set(rtypes)
+        fenced = 0
+        for shard, leased in self._inflight.items():
+            if shard in self._fence_aborts:
+                continue
+            if rset is None or not rset.isdisjoint(leased):
+                self._fence_aborts.add(shard)
+                fenced += 1
+        self.orch.telemetry.wire_fenced_intents += fenced
+        if self._round_open:
+            # reentrant call (a handoff fired from inside the round's
+            # own gather): no wire traffic here — interleaved frames
+            # would desynchronize the FIFO transports.  The round's
+            # finale aborts the fenced shards; the revokes run after.
+            if rset is not None:
+                self._deferred_revokes |= rset
+            else:
+                for granted in self._granted.values():
+                    self._deferred_revokes |= set(granted)
+            return fenced
+        client = self.client
+        for shard in sorted(self._granted):
+            granted = self._granted[shard]
+            revoke = sorted(rt for rt in granted if rset is None or rt in rset)
+            pending = shard in self._pending_confirm
+            if not revoke and not pending:
+                continue
+            for rt in revoke:
+                del granted[rt]
+                self._epochs[rt] = self._epochs.get(rt, 0) + 1
+            self._pending_confirm.discard(shard)
+            body: Dict[str, Any] = {"commit": bool(pending), "revoke": revoke}
+            try:
+                t = client._transport(shard)
+                t.submit(
+                    wire.encode_frame(
+                        wire.envelope("commit_decide", body), client.codec
+                    )
+                )
+                wire.expect(wire.decode_frame(t.recv()), "commit_decide_response")
+            except (wire.TransportError, wire.WireError):
+                client._note_worker_loss(shard)
+        return fenced
+
+    def close(self) -> None:
+        """Settle the protocol (confirm flushes) and drop all ownership
+        state; idempotent."""
+        self._flush_confirms()
+        self._granted.clear()
+        self._inflight.clear()
+        self._epochs.clear()
+        self._foot_cache.clear()

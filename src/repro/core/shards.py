@@ -79,9 +79,10 @@ from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
 from typing import TYPE_CHECKING, Dict, List, Mapping, Optional, Sequence, Tuple
 
-from repro.core.action import Action
+from repro.core.action import Action, ActionState
 from repro.core.fairqueue import FairSharePolicy
-from repro.core.scheduler import ScheduleResult, candidate_window
+from repro.core.managers.base import Allocation
+from repro.core.scheduler import Decision, ScheduleResult, candidate_window
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard (typing only)
     from repro.core.orchestrator import Orchestrator
@@ -194,6 +195,168 @@ def plan_partition(
         result = policy.schedule(waiting, executing, managers, now)
     wall = time.perf_counter() - t0
     return PartitionPlan(part, result=result, held=held, wall_s=wall, shard=shard)
+
+
+# ---------------------------------------------------------------------------
+# The commit core — the manager-mutating middle of a launch, shared
+# verbatim by the client-serial commit engine (Orchestrator._launch) and
+# the worker-owned commit engine (a RemoteShardWorker committing a
+# round's intents against the authoritative replicas it holds a lease
+# on — repro.core.remote).  Like the plan core above, keeping these free
+# functions over explicit inputs is what makes worker-side commits
+# bit-identical to client-serial ones: one implementation, zero drift.
+# ---------------------------------------------------------------------------
+
+
+def quota_reservations(
+    decisions: Sequence[Decision],
+    managers: Mapping[str, object],
+    fair_share: Optional[FairSharePolicy],
+) -> Optional[Dict[Tuple[str, str], int]]:
+    """Min-unit budget reservations per (quota'd task, rtype) over a
+    commit batch.  Admission (:func:`apply_quota`) guaranteed every
+    admitted action its *min* units within the task's budget; an elastic
+    grant scaled beyond min must therefore be clamped against the budget
+    MINUS the min-unit reservations of the batch's not-yet-launched
+    sibling actions — otherwise the first scalable launch eats the whole
+    budget and the siblings' min-unit progress rail pushes the task past
+    its cap mid-flight."""
+    if fair_share is None or not fair_share.quota:
+        return None
+    pending: Dict[Tuple[str, str], int] = {}
+    for d in decisions:
+        if math.isinf(fair_share.quota_of(d.action.task_id)):
+            continue
+        for rtype in d.units:
+            req = d.action.cost.get(rtype)
+            if req is None or rtype not in managers:
+                continue
+            key = (d.action.task_id, rtype)
+            pending[key] = pending.get(key, 0) + req.min_units
+    return pending or None
+
+
+def quota_clamp(
+    action: Action,
+    rtype: str,
+    units: int,
+    managers: Mapping[str, object],
+    fair_share: Optional[FairSharePolicy],
+    pending: Optional[Dict[Tuple[str, str], int]] = None,
+) -> int:
+    """Cap an elastic grant against the task's remaining quota budget on
+    ``rtype``: snap down to the largest feasible unit count within the
+    budget — net of the min-unit reservations still ``pending`` for the
+    task's other actions in this commit batch — but never below min
+    units (the progress rail — admission already decided this action may
+    run)."""
+    if fair_share is None:
+        return units
+    q = fair_share.quota_of(action.task_id)
+    if math.isinf(q):
+        return units
+    manager = managers.get(rtype)
+    req = action.cost.get(rtype)
+    if manager is None or req is None or units <= req.min_units:
+        return units
+    allowed = q * manager.capacity - manager.task_usage().get(action.task_id, 0)
+    if pending:
+        allowed -= pending.get((action.task_id, rtype), 0)
+    if units <= allowed:
+        return units
+    return max((u for u in req.units if u <= allowed), default=req.min_units)
+
+
+def commit_decision(
+    decision: Decision,
+    managers: Mapping[str, object],
+    fair_share: Optional[FairSharePolicy],
+    quota_pending: Optional[Dict[Tuple[str, str], int]] = None,
+) -> Optional[Tuple[Dict[str, int], List[Allocation]]]:
+    """Acquire one decision's allocation vector against ``managers``
+    (live managers client-side, leased authoritative replicas
+    worker-side): release the action's own min-unit reservations from
+    the batch's pending map, clamp elastic grants against quota, then
+    ``try_allocate`` each rtype in sorted order with full rollback
+    through ``release_unlaunched`` on refusal (so consumable state —
+    quota tokens — is refunded: the action never started).  Returns the
+    granted ``(units, allocations)`` or None when the launch is refused
+    (a commit-phase conflict or a withdrawn action) — the manager state
+    is then exactly as it was, minus the reservation release."""
+    action = decision.action
+    if quota_pending is not None:
+        # this action's own min-unit reservation no longer binds its
+        # siblings' clamp once it reaches the front of the batch —
+        # released BEFORE the withdrawn-action early-out below, or a
+        # withdrawn sibling's reservation would over-clamp the rest of
+        # the batch against budget nobody is going to use
+        for rtype in decision.units:
+            key = (action.task_id, rtype)
+            req = action.cost.get(rtype)
+            if req is not None and key in quota_pending:
+                quota_pending[key] = max(0, quota_pending[key] - req.min_units)
+    if action.state is not ActionState.QUEUED:
+        return None  # withdrawn between arrange and launch
+    # elastic grants are capped against the task's quota budget up front
+    # so the charged duration matches the actual allocation
+    units = {
+        rtype: quota_clamp(action, rtype, u, managers, fair_share, quota_pending)
+        for rtype, u in decision.units.items()
+    }
+    allocs: List[Allocation] = []
+    for rtype in sorted(units):
+        manager = managers.get(rtype)
+        if manager is None:
+            continue
+        alloc = manager.try_allocate(action, units[rtype])
+        if alloc is None:
+            # rollback a partial acquisition (or a commit whose plan no
+            # longer fits the committing state)
+            for a in allocs:
+                managers[a.rtype].release_unlaunched(action, a)
+            return None
+        allocs.append(alloc)
+    for a in allocs:  # multi-tenant share accounting
+        managers[a.rtype].note_allocated(action.task_id, a.units)
+    return units, allocs
+
+
+def classify_after_commit(
+    queue, evicted: int, failed: int, held: int, managers: Mapping[str, object]
+) -> Optional[str]:
+    """Post-commit partition classification, shared by both commit
+    engines.  A partition may only go clean in states that are no-ops
+    until the next event: deliberate deferrals (eviction, quota holds)
+    and refused allocations are time/state-dependent — they stay on the
+    ``"watch"`` list and re-run every round.  Otherwise the policy
+    launched its whole window; the partition is clean exactly when the
+    remaining head is inadmissible at min units *now* against the
+    committing managers, else it is ``"dirty"`` and re-enters this
+    round's fixpoint loop.  ``queue`` is anything with truthiness + a
+    ``head()`` peek (a PartitionQueue client-side, a remaining-waiting
+    view worker-side)."""
+    if not queue:
+        return None
+    if evicted or failed or held:
+        return "watch"
+    head = queue.head()
+    if head is not None and candidate_window([head], managers, 1):
+        return "dirty"
+    return None
+
+
+def duration_of(action: Action, key_units: Optional[int], history) -> float:
+    """An action's charged execution duration at its granted key-resource
+    units: the host-local sampler when present (never crosses the wire —
+    worker-owned multi-pass commit is gated off when any queued action
+    carries one), else the unit-scaled elasticity table, else the
+    name-keyed history estimate."""
+    if action.duration_sampler is not None:
+        return action.duration_sampler(key_units or 1)
+    d = action.get_dur(key_units) if key_units is not None else action.get_dur()
+    if math.isnan(d):
+        d = history.estimate(action)
+    return d
 
 
 class SnapshotMap:

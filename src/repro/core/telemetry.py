@@ -115,6 +115,39 @@ class Telemetry:
     # responses (intern/snapshot/resident-state hit counters plus
     # rebuild-vs-reset wall time); keys documented in remote.py
     wire_worker_cache: Dict[str, float] = field(default_factory=dict)
+    # -- two-phase worker-owned commit (repro.core.remote) -------------------
+    # the commit wall is split three ways so the critical-path model
+    # stays honest: commit_wall_s is the CLIENT-side serial commit wall
+    # (the client-serial engine's whole bill; in worker mode the
+    # client's mirror replay lands in commit_apply_s instead),
+    # commit_critical_s is the modeled worker-parallel commit critical
+    # path (per fused round, the max worker-reported commit wall — what
+    # the owning workers actually measured committing authoritatively),
+    # and commit_apply_s is the client's mirror-apply + fingerprint-
+    # verify wall (DES bookkeeping, never charged to decision latency).
+    commit_wall_s: float = 0.0
+    commit_critical_s: float = 0.0
+    commit_apply_s: float = 0.0
+    # two-phase frame counters: prepares dispatched (fused plan_commit
+    # frames), acks verified clean, aborts decided (divergence, fence,
+    # or mismatched fixpoint passes)
+    wire_prepares: int = 0
+    wire_commit_acks: int = 0
+    wire_commit_aborts: int = 0
+    # ownership-lease lifecycle: grants (first issue to a worker),
+    # regrants (stale_epoch answered with a re-grant + full state),
+    # adoptions (orphaned leases taken back inline after worker loss
+    # mid-prepare), and fenced intents (handoff aborted an open window)
+    wire_lease_grants: int = 0
+    wire_lease_regrants: int = 0
+    wire_lease_adoptions: int = 0
+    wire_fenced_intents: int = 0
+    # rounds the worker-owned engine declined (cross-owner footprints,
+    # down workers, samplers) and committed client-serial instead
+    commit_inline_rounds: int = 0
+    # worker-committed state that failed client fingerprint verification
+    # (the divergence rail: abort + regrant; client state stands)
+    wire_commit_diverged: int = 0
     # -- sub-queue migration (Orchestrator.migrate_task/rebalance) -----------
     migrations: int = 0  # detach->merge moves between partition replicas
     migrated_actions: int = 0
@@ -177,8 +210,32 @@ class Telemetry:
         for k, v in stats.items():
             acc[k] = acc.get(k, 0.0) + float(v)
 
+    def note_commit_round(
+        self, worker_commit_s: float, apply_s: float, prepares: int, acks: int
+    ) -> None:
+        """One fused worker-owned commit round's accounting: the modeled
+        worker-parallel commit critical path (max worker commit wall),
+        the client mirror-apply/verify wall, and the frame counts."""
+        self.commit_critical_s += worker_commit_s
+        self.commit_apply_s += apply_s
+        self.wire_prepares += prepares
+        self.wire_commit_acks += acks
+
     def reset_wire(self) -> None:
-        """Zero every wire counter (bench warm-up discards)."""
+        """Zero every wire + commit-phase counter (bench warm-up
+        discards)."""
+        self.commit_wall_s = 0.0
+        self.commit_critical_s = 0.0
+        self.commit_apply_s = 0.0
+        self.wire_prepares = 0
+        self.wire_commit_acks = 0
+        self.wire_commit_aborts = 0
+        self.wire_lease_grants = 0
+        self.wire_lease_regrants = 0
+        self.wire_lease_adoptions = 0
+        self.wire_fenced_intents = 0
+        self.commit_inline_rounds = 0
+        self.wire_commit_diverged = 0
         self.wire_encode_s = 0.0
         self.wire_decode_s = 0.0
         self.wire_worker_codec_s = 0.0
@@ -219,6 +276,18 @@ class Telemetry:
         consulted = self.wire_memo_hits + self.wire_memo_misses
         if consulted:
             out["memo_hit_rate"] = self.wire_memo_hits / consulted
+        if self.wire_prepares or self.wire_lease_grants:
+            out["prepares"] = float(self.wire_prepares)
+            out["commit_acks"] = float(self.wire_commit_acks)
+            out["commit_aborts"] = float(self.wire_commit_aborts)
+            out["lease_grants"] = float(self.wire_lease_grants)
+            out["lease_regrants"] = float(self.wire_lease_regrants)
+            out["lease_adoptions"] = float(self.wire_lease_adoptions)
+            out["fenced_intents"] = float(self.wire_fenced_intents)
+            out["commit_inline_rounds"] = float(self.commit_inline_rounds)
+            out["commit_diverged"] = float(self.wire_commit_diverged)
+            out["commit_critical_s"] = self.commit_critical_s
+            out["commit_apply_s"] = self.commit_apply_s
         for k, v in sorted(self.wire_worker_cache.items()):
             out[f"worker_{k}"] = float(v)
         return out

@@ -27,6 +27,12 @@ machine:
   will reach next.  In-process (for tests and the chaos suite: kill /
   restart without port churn) or standalone via
   ``python -m repro.core.transport`` / ``tools/shard_worker.py``.
+  The served worker speaks the *whole* frame surface — plan rounds,
+  batched rounds, drain, and the worker-owned two-phase commit frames
+  (``plan_commit`` / ``commit_decide``): a socket fleet can run
+  ``commit_mode="worker"`` with no transport-level opt-in, and a
+  fresh-per-connection worker holds no leases, which is exactly the
+  state the coordinator's fresh-grant / ``stale_epoch`` rail expects.
 * :func:`socket_fleet` — a transport factory mapping shard index →
   address, the shape :class:`~repro.core.remote.RemoteRoundClient`
   accepts for multi-host fleets.

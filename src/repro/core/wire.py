@@ -806,6 +806,80 @@ def decode_plan(payload: Mapping[str, Any], by_uid: Mapping[int, Action]) -> "An
 
 
 # ---------------------------------------------------------------------------
+# worker-owned commit: ownership leases + commit outcomes (additive v1)
+# ---------------------------------------------------------------------------
+
+
+def encode_lease(
+    rtype: str, epoch: int, fresh: bool = False, fp: Optional[str] = None
+) -> Dict[str, Any]:
+    """One epoch-stamped ownership lease over a resource type.
+
+    A lease names the worker that may commit against the authoritative
+    replica of ``rtype``.  ``epoch`` increments on every ownership
+    change (grant, revocation, fence, adoption after a worker loss) —
+    a worker presented with an epoch it does not hold must refuse with
+    a typed ``stale_epoch`` error before mutating anything.  ``fresh``
+    marks a (re-)grant: the worker adopts the epoch instead of
+    asserting it (the authoritative state travels in the same frame
+    through the ordinary snapshot rail).  ``fp`` optionally pins the
+    snapshot fingerprint the replica must match under this lease."""
+    body: Dict[str, Any] = {"rtype": str(rtype), "epoch": int(epoch)}
+    if fresh:
+        body["fresh"] = True
+    if fp is not None:
+        body["fp"] = fp
+    return body
+
+
+def decode_lease(payload: Mapping[str, Any]) -> Tuple[str, int, bool, Optional[str]]:
+    """Inverse of :func:`encode_lease` →  (rtype, epoch, fresh, fp)."""
+    return (
+        str(_field(payload, "lease", "rtype")),
+        int(_field(payload, "lease", "epoch")),
+        bool(payload.get("fresh", False)),
+        payload.get("fp"),
+    )
+
+
+def encode_commit_outcome(
+    part: str,
+    launched: Sequence[Tuple[int, Mapping[str, int]]],
+    failed: int,
+    held: int,
+) -> Dict[str, Any]:
+    """One partition's committed outcome inside a ``plan_commit_response``
+    pass: which intents launched (uid + the granted unit vector — the
+    grant may differ from the planned decision after the quota clamp),
+    how many were refused by the committing replicas (conflicts), and
+    how many the quota gate held."""
+    return {
+        "part": str(part),
+        "launched": [[int(uid), {r: int(u) for r, u in units.items()}]
+                     for uid, units in launched],
+        "failed": int(failed),
+        "held": int(held),
+    }
+
+
+def decode_commit_outcome(
+    payload: Mapping[str, Any],
+) -> Tuple[str, List[Tuple[int, Dict[str, int]]], int, int]:
+    """Inverse of :func:`encode_commit_outcome` →
+    (part, launched, failed, held)."""
+    launched = [
+        (int(uid), {str(r): int(u) for r, u in units.items()})
+        for uid, units in payload.get("launched", [])
+    ]
+    return (
+        str(_field(payload, "commit_outcome", "part")),
+        launched,
+        int(payload.get("failed", 0)),
+        int(payload.get("held", 0)),
+    )
+
+
+# ---------------------------------------------------------------------------
 # sub-queue migration: TaskShard
 # ---------------------------------------------------------------------------
 

@@ -654,3 +654,186 @@ class TestAutoPlanMode:
         ex = auto._executor
         assert ex.plan_cost_ewma is not None and ex.plan_cost_ewma > 0
         assert math.isfinite(ex.plan_cost_ewma)
+
+
+# ---------------------------------------------------------------------------
+# worker-owned two-phase commit (the fused plan_commit rail)
+# ---------------------------------------------------------------------------
+
+
+class TestWorkerCommit:
+    """The worker-owned commit engine's acceptance rails: launch traces
+    bit-identical to serial and to client-serial remote across seeds,
+    dependent-pass batching equivalent to sequential passes, conflicts
+    resolved worker-side on the authoritative replicas, cross-owner
+    footprints declined to the client-serial walk — and the commit
+    phase really off the wire (zero steady-state fallbacks)."""
+
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3, 4, 5, 6, 7])
+    def test_worker_commit_bit_identical_to_serial(self, seed):
+        _, serial = _run_mode(seed, shards=None)
+        orch, worker = _run_mode(
+            seed, shards=4, plan_mode="remote", commit_mode="worker"
+        )
+        assert worker == serial, f"seed {seed}: worker-owned commit diverged"
+        s = orch.telemetry.wire_summary()
+        if orch.stats["sharded_rounds"]:
+            # the fused rail really carried the rounds, and steady state
+            # needed no recovery: no fallbacks, no declines, no aborts
+            assert s.get("prepares", 0) > 0
+            assert s.get("fallbacks", 0) == 0
+            assert s.get("commit_inline_rounds", 0) == 0
+            assert s.get("commit_diverged", 0) == 0
+            assert s.get("commit_aborts", 0) == 0
+            # every managed rtype was granted exactly once
+            assert s.get("lease_grants", 0) == len(orch.managers)
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_batched_passes_equal_sequential(self, seed):
+        """A fused round carrying up to 8 dependent fixpoint passes
+        must launch exactly what one-pass-per-wire-round launches (and
+        serial): the pass boundary is an optimization, never semantics."""
+        _, serial = _run_mode(seed, shards=None)
+        _, batched = _run_mode(seed, shards=4, plan_mode="remote",
+                               commit_mode="worker", commit_max_passes=8)
+        _, sequential = _run_mode(seed, shards=4, plan_mode="remote",
+                                  commit_mode="worker", commit_max_passes=1)
+        assert batched == serial
+        assert sequential == serial
+
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_worker_commit_fairness_equivalence(self, seed):
+        tasks = ("heavy", "light")
+        _, serial = _run_mode(seed, tasks=tasks, shards=None, fair=True)
+        _, worker = _run_mode(seed, tasks=tasks, shards=4, plan_mode="remote",
+                              commit_mode="worker", fair=True)
+        assert worker == serial
+
+    def test_commit_phase_accounting(self):
+        """Fused rounds charge the modeled fleet critical path (max
+        worker plan + max worker commit) to sched_wall_s; the client's
+        replay is mirror maintenance recorded separately in
+        commit_apply_s; commit_wall_s (the client-serial commit wall)
+        stays untouched — the wire left the commit path."""
+        orch, _ = _run_mode(3, shards=4, plan_mode="remote",
+                            commit_mode="worker")
+        t = orch.telemetry
+        if not t.wire_prepares:
+            pytest.skip("workload produced no fused rounds")
+        assert t.commit_critical_s >= 0.0
+        assert t.commit_apply_s > 0.0
+        assert t.wire_commit_acks == t.wire_prepares
+        assert t.commit_wall_s == 0.0
+
+    def test_worker_mode_requires_remote_plan(self):
+        with pytest.raises(ValueError, match="commit_mode"):
+            _make_system(4, commit_mode="worker")  # plan_mode defaults inline
+        with pytest.raises(ValueError, match="commit_mode"):
+            _make_system(None, plan_mode="remote", commit_mode="worker")
+
+    def test_real_worker_processes_bit_identical(self):
+        _, serial = _run_mode(2, shards=None)
+        orch = _make_system(2, plan_mode="remote", transport="process",
+                            commit_mode="worker")
+        _submit_workload(orch, 2)
+        orch.run()
+        assert _trace(orch) == serial
+        orch.close()
+
+
+class TestWorkerCommitConflicts(TestRemoteConflicts):
+    def test_conflict_resolved_on_authoritative_replicas(self):
+        """Both contending partitions live in ONE owner's domain
+        (shards=1): the worker's local passes hit the shared-pool
+        conflict, roll the loser back through release_unlaunched on its
+        own replicas, and converge — the client replay sees the same
+        held/retry rail, so the trace matches client-serial remote."""
+        a = self._conflict_system(shards=1, plan_mode="remote")
+        b = self._conflict_system(shards=1, plan_mode="remote",
+                                  commit_mode="worker")
+        self._submit_contenders(a)
+        self._submit_contenders(b)
+        a.run()
+        b.run()
+        assert _trace(a) == _trace(b)
+        assert b.telemetry.commit_conflicts > 0
+        assert b.telemetry.wire_prepares > 0
+        records = [r for r in b.telemetry.records if not r.failed]
+        assert len({r.trajectory_id for r in records}) == 6
+        assert b.queue_depth() == 0 and b.in_flight() == 0
+        for m in b.managers.values():
+            m.check_occupancy()
+        a.close()
+        b.close()
+
+    def test_cross_owner_footprint_declines_to_client_serial(self):
+        """With shards=2 the contenders' commit footprints span owners
+        (each part touches its own pool AND the shared pool): the
+        engine must decline those rounds to the client-serial walk —
+        counted, and trace-identical to client-serial remote."""
+        a = self._conflict_system(shards=2, plan_mode="remote")
+        b = self._conflict_system(shards=2, plan_mode="remote",
+                                  commit_mode="worker")
+        self._submit_contenders(a)
+        self._submit_contenders(b)
+        a.run()
+        b.run()
+        assert _trace(a) == _trace(b)
+        assert b.telemetry.commit_inline_rounds > 0
+        assert b.telemetry.wire_prepares == 0
+        b.close()
+        a.close()
+
+
+class TestPlanBatchCarriesCommit:
+    def test_plan_batch_mixes_plan_and_plan_commit(self):
+        """A plan_batch frame may carry plan_commit requests next to
+        plain plan requests — each processed in arrival order, each
+        answered by its own response kind inside plan_batch_response."""
+        from repro.core.action import ActionState
+        from repro.core.scheduler import ElasticScheduler
+
+        m = ResourceManager("r", 8)
+        act = Action(name="w", cost={"r": fixed("r", 2)}, trajectory_id="t0",
+                     base_duration=1.0)
+        act.state = ActionState.QUEUED  # as a submitted action arrives
+
+        def body(commit):
+            b = {
+                "shard": 0,
+                "now": 0.0,
+                "incremental": True,
+                "policy": wire.encode_policy(ElasticScheduler()),
+                "fair_share": None,
+                "history": {"avg": {}},
+                "snapshots": {"r": wire.encode_snapshot(m)},
+                "executing": [],
+                "partitions": [
+                    {"part": "r", "waiting": [wire.encode_action(act)]}
+                ],
+            }
+            if commit:
+                b["commit"] = {
+                    "leases": [wire.encode_lease("r", 0, fresh=True)],
+                    "max_passes": 4,
+                    "tick": 0.0005,
+                }
+            return b
+
+        worker = RemoteShardWorker()
+        batch = wire.envelope("plan_batch", {"reqs": [
+            wire.envelope("plan_commit", body(commit=True)),
+            wire.envelope("plan_request", body(commit=False)),
+        ]})
+        resp = wire.loads(worker.handle(wire.dumps(batch)))
+        assert resp["kind"] == "plan_batch_response"
+        kinds = [r["kind"] for r in resp["resps"]]
+        assert kinds == ["plan_commit_response", "plan_response"]
+        fused = resp["resps"][0]
+        # the fused round really committed: one pass, one launch outcome
+        assert fused["passes"], "no committed passes in the ack"
+        part, rows, failed, held = wire.decode_commit_outcome(
+            fused["passes"][0]["outcomes"][0]
+        )
+        assert part == "r" and len(rows) == 1 and not failed and not held
+        assert fused["fps"]["r"] != wire.fingerprint(wire.encode_snapshot(m))

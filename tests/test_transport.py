@@ -80,8 +80,8 @@ def _run_serial(seed, tasks=("heavy", "light"), n=60):
     return trace
 
 
-def _run_socket(seed, transport, tasks=("heavy", "light"), n=60, kills=()):
-    orch = _make_system(shards=4, plan_mode="remote", transport=transport)
+def _run_socket(seed, transport, tasks=("heavy", "light"), n=60, kills=(), **kw):
+    orch = _make_system(shards=4, plan_mode="remote", transport=transport, **kw)
     _submit_workload(orch, seed=seed, tasks=list(tasks), n=n)
     for t, fn in kills:
         orch.loop.call_after(t, fn)
@@ -568,3 +568,89 @@ class TestChaosStorm:
             fac = chaos_fleet(lambda i: SocketTransport(srv.addr), schedules)
             trace, _summary = _run_socket(seed, fac, n=80)
         assert trace == serial
+
+
+# ---------------------------------------------------------------------------
+# worker-owned commit under fire: leases + two-phase over real sockets
+# ---------------------------------------------------------------------------
+
+_wc_storm_summaries = {}
+
+
+class TestWorkerCommitStorm:
+    """The two-phase worker-owned commit under the same kill/restart
+    storms: authoritative replicas die mid-protocol, orphaned leases
+    are adopted, fresh workers refuse stale epochs — and every launch
+    trace stays bit-identical to serial."""
+
+    @pytest.mark.parametrize("seed", STORM_SEEDS)
+    def test_kill_storm_worker_commit_trace_identical(self, seed):
+        serial = _run_serial(seed)
+        with WorkerServer() as srv:
+            kills = [(t, srv.kill_connections) for t in KILL_TIMES]
+            trace, summary = _run_socket(
+                seed, socket_fleet([srv.addr]), kills=kills,
+                commit_mode="worker",
+            )
+        assert trace == serial
+        uids = [(r[0], r[1], r[2]) for r in trace]
+        assert len(uids) == len(set(uids)) == len(serial)
+        _wc_storm_summaries[seed] = summary
+
+    def test_storm_exercised_the_ownership_rails(self):
+        """Across the seeds the storm really hit the two-phase rails:
+        prepares happened, workers died holding leases (adoptions or
+        regrants recovered them), and no round ever diverged."""
+        assert len(_wc_storm_summaries) == len(STORM_SEEDS)
+        agg = {}
+        for s in _wc_storm_summaries.values():
+            for k, v in s.items():
+                agg[k] = agg.get(k, 0.0) + v
+        assert agg.get("prepares", 0) > 0
+        assert agg.get("worker_losses", 0) >= 1
+        # every storm recovery rode a typed rail: adoption (loss) or
+        # regrant (restarted worker refused a stale epoch)
+        assert agg.get("lease_adoptions", 0) + agg.get("lease_regrants", 0) >= 1
+        assert agg.get("commit_diverged", 0) == 0
+
+    def test_clean_worker_commit_round_matches_serial(self):
+        """Steady state over a real socket: fused rounds carry the
+        commits, zero fallbacks, zero aborts, zero losses."""
+        serial = _run_serial(99)
+        with WorkerServer() as srv:
+            trace, summary = _run_socket(
+                99, socket_fleet([srv.addr]), commit_mode="worker"
+            )
+        assert trace == serial
+        assert summary["worker_losses"] == 0
+        assert summary.get("fallbacks", 0) == 0
+        assert summary.get("prepares", 0) > 0
+        assert summary.get("commit_aborts", 0) == 0
+
+    def test_amnesia_storm_rides_the_stale_epoch_rail(self):
+        """Silent worker replacement while leases are held: the blank
+        worker must refuse the epoch assertion typed (stale_epoch ->
+        regrant + full re-send), never launch doubled state."""
+        serial = _run_serial(11, n=80)
+        with WorkerServer() as srv:
+            fac = chaos_fleet(
+                lambda i: SocketTransport(srv.addr),
+                {0: {2: "amnesia", 5: "amnesia"}, 1: {3: "amnesia"},
+                 2: {1: "amnesia"}},
+            )
+            trace, summary = _run_socket(11, fac, n=80, commit_mode="worker")
+        assert trace == serial
+        assert summary["worker_losses"] == 0
+        assert (
+            summary.get("lease_regrants", 0) + summary.get("fallbacks", 0) >= 1
+        )
+
+    def test_dead_fleet_declines_to_inline(self):
+        """Every worker unreachable: no worker can hold authoritative
+        state, every round falls back, the run still completes with the
+        serial trace."""
+        serial = _run_serial(17)
+        fac = socket_fleet([("127.0.0.1", _free_port())], connect_timeout=0.5)
+        trace, summary = _run_socket(17, fac, commit_mode="worker")
+        assert trace == serial
+        assert summary["worker_losses"] >= 1

@@ -514,3 +514,86 @@ class TestDocumentedPatchDefine:
         assert patched is not base
         assert wire.fingerprint(wire.encode_action(patched)) == node["idef"]
         assert patched.state.value == "running" and patched.attempts == 1
+
+
+class TestDocumentedCommitExample:
+    """The two-phase commit section's worked payloads must replay
+    through a real worker: the documented commit block fused onto the
+    documented plan-request yields exactly the documented
+    plan_commit_response (modulo measured timings), and the documented
+    commit_decide abort restores the stash and revokes the lease."""
+
+    REQUIRED = {
+        "commit-block",
+        "plan-commit-response",
+        "commit-decide",
+        "commit-decide-response",
+    }
+
+    def test_doc_has_commit_examples(self):
+        examples = _doc_examples()
+        assert self.REQUIRED <= set(examples), sorted(examples)
+
+    @staticmethod
+    def _fused_prepare(examples):
+        return {
+            **examples["plan-request"],
+            "kind": "plan_commit",
+            "commit": examples["commit-block"],
+        }
+
+    def test_documented_lease_round_trips(self):
+        node = _doc_examples()["commit-block"]["leases"][0]
+        assert wire.decode_lease(node) == ("pool0", 0, True, None)
+        assert wire.encode_lease("pool0", 0, fresh=True) == node
+
+    def test_documented_outcome_round_trips(self):
+        node = _doc_examples()["plan-commit-response"]["passes"][0]["outcomes"][0]
+        part, launched, failed, held = wire.decode_commit_outcome(node)
+        assert (part, failed, held) == ("pool0", 0, 0)
+        assert wire.encode_commit_outcome(part, launched, failed, held) == node
+
+    def test_documented_prepare_replays_through_a_real_worker(self):
+        from repro.core.remote import RemoteShardWorker
+
+        examples = _doc_examples()
+        worker = RemoteShardWorker()
+        resp = wire.loads(worker.handle(wire.dumps(self._fused_prepare(examples))))
+        assert resp["kind"] == "plan_commit_response", resp
+        documented = examples["plan-commit-response"]
+        # measured timings (and the cache stats block) are not schema
+        for d in (resp, documented):
+            for key in ("plan_s", "commit_s", "codec_s", "cache"):
+                d.pop(key, None)
+        for got, want in zip(
+            resp["passes"], documented["passes"], strict=True
+        ):
+            for gp, wp in zip(got["plans"], want["plans"], strict=True):
+                gp, wp = dict(gp), dict(wp)
+                gp.pop("wall_s"), wp.pop("wall_s")
+                assert gp == wp
+            assert got["outcomes"] == want["outcomes"]
+        # everything else — shard, more, and the post-commit replica
+        # fingerprints — must match the doc byte for byte
+        resp.pop("passes"), documented.pop("passes")
+        assert resp == documented
+
+    def test_documented_decide_aborts_and_revokes(self):
+        from repro.core.remote import RemoteShardWorker
+
+        examples = _doc_examples()
+        worker = RemoteShardWorker()
+        wire.loads(worker.handle(wire.dumps(self._fused_prepare(examples))))
+        resp = wire.loads(worker.handle(wire.dumps(examples["commit-decide"])))
+        assert resp == examples["commit-decide-response"]
+        # the revoked lease is gone: re-asserting epoch 0 (no fresh
+        # grant this time) is the documented stale_epoch refusal
+        stale = dict(self._fused_prepare(examples))
+        stale["commit"] = {
+            **examples["commit-block"],
+            "leases": [wire.encode_lease("pool0", 0)],
+        }
+        refusal = wire.loads(worker.handle(wire.dumps(stale)))
+        assert refusal["kind"] == "error"
+        assert refusal["code"] == "stale_epoch"
+        assert refusal["rtypes"] == ["pool0"]

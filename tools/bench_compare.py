@@ -20,6 +20,12 @@ suites into a fresh output directory and this tool diffs the two:
 Scenarios present on only one side are reported as warnings, never
 failures — renames and new rows land through the committed baseline in
 the same PR, and a gate that fails on additions would punish coverage.
+The exception is the **required-row manifest** (``REQUIRED_ROWS``): the
+load-bearing rows of each suite — trace-identity flags, the wire bill,
+the commit-phase split — are declared per file, and a run that drops
+one of them is a hard failure, not a warning.  A bench refactor that
+silently stops emitting the row a gate depends on would otherwise pass
+the gate vacuously.
 
 Improvements are never failures (there is no "too fast").
 
@@ -40,6 +46,41 @@ DEFAULT_THRESHOLD = 0.25
 
 #: Latencies where both sides sit below this are jitter, not signal.
 DEFAULT_NOISE_FLOOR_US = 50.0
+
+#: Rows a suite must emit for its gate to mean anything.  A fresh run
+#: (or a baseline) missing one of these fails hard — every other
+#: missing row stays a warning so new coverage is never punished.
+REQUIRED_ROWS: Dict[str, frozenset] = {
+    "BENCH_scheduler.json": frozenset({
+        "schedule_depth2_queue128",
+        "churn_queue128_incremental",
+        "shard_churn_queue128_traces_identical",
+    }),
+    "BENCH_fairness.json": frozenset({
+        "fairness_share_maxerr",
+        "fairness_interference_speedup",
+    }),
+    "BENCH_shards.json": frozenset({
+        "shard_churn_queue128_shards4",
+        "shard_churn_queue128_traces_identical",
+    }),
+    "BENCH_remote.json": frozenset({
+        "remote_churn_queue128_shards4_loopback",
+        "remote_churn_queue128_traces_identical",
+        "remote_churn_queue128_wire_overhead",
+        "remote_churn_queue128_wire_overhead_pipelined",
+        # the commit-phase split: worker-owned mode must keep emitting
+        # its latency, identity, and critical-path rows
+        "remote_churn_queue128_commit_worker",
+        "remote_churn_queue128_commit_traces_identical",
+        "remote_churn_queue128_commit_serial_wall",
+        "remote_churn_queue128_commit_worker_critical",
+    }),
+    "BENCH_chaos.json": frozenset({
+        "chaos_kill_storm_traces_identical",
+        "chaos_amnesia_traces_identical",
+    }),
+}
 
 
 def load_scenarios(path: Path) -> Dict[str, dict]:
@@ -62,16 +103,31 @@ def compare_file(
     fresh: Dict[str, dict],
     threshold: float,
     noise_floor_us: float,
+    required: frozenset = frozenset(),
 ) -> Tuple[List[str], List[str]]:
     """(regressions, warnings) for one suite's scenario maps."""
     regressions: List[str] = []
     warnings: List[str] = []
-    for name in sorted(set(baseline) | set(fresh)):
+    for name in sorted(set(baseline) | set(fresh) | required):
         if name not in fresh:
-            warnings.append(f"scenario {name!r} missing from fresh run (removed?)")
+            if name in required:
+                regressions.append(
+                    f"required scenario {name!r} missing from fresh run"
+                )
+            else:
+                warnings.append(
+                    f"scenario {name!r} missing from fresh run (removed?)"
+                )
             continue
         if name not in baseline:
-            warnings.append(f"scenario {name!r} has no committed baseline (new?)")
+            if name in required:
+                regressions.append(
+                    f"required scenario {name!r} has no committed baseline"
+                )
+            else:
+                warnings.append(
+                    f"scenario {name!r} has no committed baseline (new?)"
+                )
             continue
         base, new = baseline[name], fresh[name]
 
@@ -140,6 +196,7 @@ def main(argv: Optional[Iterable[str]] = None) -> int:
         regressions, warnings = compare_file(
             load_scenarios(base_path), load_scenarios(fresh_path),
             args.threshold, args.noise_floor_us,
+            required=REQUIRED_ROWS.get(name, frozenset()),
         )
         compared += 1
         for w in warnings:

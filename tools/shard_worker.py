@@ -13,7 +13,11 @@ subprocesses read it from the first line (see
 
 One fresh worker serves each connection; a reconnecting client always
 reaches a blank worker, which its reset/full-resend recovery rail
-expects.  Thin wrapper over :func:`repro.core.transport.main`.
+expects — including under worker-owned commit (``plan_commit`` /
+``commit_decide`` frames are served too): a blank worker holds no
+ownership leases, so the coordinator re-grants fresh epochs and state
+rather than trusting a restarted replica.  Thin wrapper over
+:func:`repro.core.transport.main`.
 """
 
 import os
