@@ -37,6 +37,7 @@ import time
 from typing import Dict, List, Optional
 
 from benchmarks.common import emit
+from repro.core import scenarios
 from repro.core.action import Action, AmdahlElasticity, ResourceRequest, fixed
 from repro.core.cluster import CpuNodeSpec
 from repro.core.managers.base import ResourceManager
@@ -101,57 +102,14 @@ def run(scale: float = 1.0) -> List[Dict[str, object]]:
     return rows
 
 
-# The churn tool fleet: DeepSearch-style rate-limited services plus local
+# The churn workload (DeepSearch-style rate-limited services plus local
 # utilities — agentic workloads multiplex MANY resource types, which is
-# what per-type queue partitioning exploits.
-CHURN_APIS = (
-    "google_search",
-    "web_fetch",
-    "pdf_parse",
-    "embed",
-    "code_exec",
-    "translate",
-)
-
-
-def _churn_action(i: int) -> Action:
-    """Mixed agentic-RL action stream (the paper's MOPD+Search shape):
-    deep scalable cpu/gpu reward backlogs plus a high-frequency stream
-    of short rate-limited tool/api calls (DeepSearch)."""
-    kind = i % 8
-    if kind == 0:  # scalable cpu reward
-        return Action(
-            name="reward",
-            cost={"cpu": ResourceRequest("cpu", (1, 2, 4, 8))},
-            key_resource="cpu",
-            elasticity=AmdahlElasticity(0.05),
-            base_duration=5.0 + (i % 7),
-            trajectory_id=f"c{i}",
-        )
-    if kind == 1:  # rigid cpu tool call
-        return Action(
-            name="tool",
-            cost={"cpu": fixed("cpu", 1)},
-            base_duration=0.5 + 0.1 * (i % 5),
-            trajectory_id=f"c{i}",
-        )
-    if kind == 2:  # gpu reward-model scoring (scalable TP)
-        return Action(
-            name="rm:score",
-            cost={"gpu": ResourceRequest("gpu", (1, 2, 4))},
-            key_resource="gpu",
-            elasticity=AmdahlElasticity(0.15),
-            base_duration=1.0 + 0.25 * (i % 4),
-            service="rm0",
-            trajectory_id=f"c{i}",
-        )
-    api = CHURN_APIS[i % len(CHURN_APIS)]
-    return Action(
-        name=f"api:{api}",
-        cost={api: fixed(api, 1)},
-        base_duration=0.3 + 0.2 * (i % 3),
-        trajectory_id=f"c{i}",
-    )
+# what per-type queue partitioning exploits) is declared as a
+# ScenarioSpec in repro.core.scenarios (``churn_spec``).  The frozen
+# pre-factory Python generator it replaced is pinned in
+# tests/test_scenarios.py, where an equivalence test proves the spec
+# reproduces its traces bit-identically.
+CHURN_APIS = scenarios.CHURN_APIS
 
 
 class _SeedOrchestrator(Orchestrator):
@@ -176,20 +134,11 @@ def _run_churn(mode: str, queue: int, events: int):
     ``mode``: "seed" (global queue, full reschedule per event),
     "full" (partitioned queues, every partition rescheduled per event),
     or "incremental" (dirty tracking + caches)."""
-    from repro.core.cluster import ApiResourceSpec, GpuNodeSpec
-    from repro.core.managers.basic import BasicResourceManager
-    from repro.core.managers.gpu import GpuManager, ServiceSpec
     from repro.core.simulator import EventLoop
 
+    spec = scenarios.churn_spec(queue=queue, events=events)
     loop = EventLoop()
-    managers: Dict[str, object] = {
-        "cpu": CpuManager([CpuNodeSpec("n0", cores=32)]),
-        "gpu": GpuManager([GpuNodeSpec("g0")], [ServiceSpec("rm0", 40.0)]),
-    }
-    for api in CHURN_APIS:
-        managers[api] = BasicResourceManager(
-            ApiResourceSpec(api, mode="concurrency", max_concurrency=3), loop.clock
-        )
+    managers = scenarios.build_managers(spec, loop)
     cls = _SeedOrchestrator if mode == "seed" else Orchestrator
     orch = cls(
         managers,
@@ -197,31 +146,12 @@ def _run_churn(mode: str, queue: int, events: int):
         policy=ElasticScheduler(),
         incremental=(mode == "incremental"),
     )
-    counter = [queue]
-    done_since_wave = [0]
-    wave = max(8, queue // 4)
-
-    def refill(_fut) -> None:
-        # wave arrivals (paper §6: rollout batches land together): every
-        # ``wave`` completions trigger one same-timestamp submission
-        # burst, so the queue repeatedly sees freed capacity against deep
-        # backlog — the regime where a full reschedule rebuilds the
-        # whole window/DP and the incremental path reuses it.
-        done_since_wave[0] += 1
-        if done_since_wave[0] < wave or counter[0] >= queue + events:
-            return
-        done_since_wave[0] = 0
-        for _ in range(wave):
-            if counter[0] >= queue + events:
-                break
-            i = counter[0]
-            counter[0] += 1
-            fut = orch.submit(_churn_action(i))
-            fut.add_done_callback(refill)
-
-    for i in range(queue):
-        fut = orch.submit(_churn_action(i), delay=0.001 * i)
-        fut.add_done_callback(refill)
+    # closed-loop wave arrivals (paper §6: rollout batches land
+    # together): every ``wave`` completions trigger one same-timestamp
+    # submission burst, so the queue repeatedly sees freed capacity
+    # against deep backlog — the regime where a full reschedule rebuilds
+    # the whole window/DP and the incremental path reuses it.
+    scenarios.install_scenario(spec, orch)
     # warm-up: let the priming burst enqueue and the first launches land,
     # so the measurement covers only steady-state churn rounds.
     orch.run(until=0.001 * queue + 0.05)
@@ -300,24 +230,6 @@ def run_churn(scale: float = 1.0) -> List[Dict[str, object]]:
 SHARD_POOLS = 8
 
 
-def _fleet_action(pool: int, wave: int, i: int) -> Action:
-    rt = f"pool{pool}"
-    if i % 3 == 2:
-        return Action(
-            name="tool", cost={rt: fixed(rt, 1)},
-            base_duration=0.5 + 0.1 * (wave % 3),
-            trajectory_id=f"p{pool}-{wave}-{i}",
-        )
-    return Action(
-        name="reward",
-        cost={rt: ResourceRequest(rt, (1, 2, 4, 8))},
-        key_resource=rt,
-        elasticity=AmdahlElasticity(0.05),
-        base_duration=4.0 + 0.5 * ((wave + i) % 4),
-        trajectory_id=f"p{pool}-{wave}-{i}",
-    )
-
-
 def _run_shard_churn(
     shards: Optional[int], queue: int = 128, waves: int = 16,
     cores: int = 8, period_s: float = 4.0,
@@ -342,30 +254,20 @@ def _run_shard_churn(
     hook for scheduling virtual-time worker kills."""
     from repro.core.simulator import EventLoop
 
-    per_pool = max(1, queue // SHARD_POOLS)
+    spec = scenarios.fleet_churn_spec(
+        queue=queue, waves=waves, cores=cores, period_s=period_s,
+        pools=SHARD_POOLS,
+    )
     loop = EventLoop()
-    managers = {
-        f"pool{k}": ResourceManager(f"pool{k}", cores) for k in range(SHARD_POOLS)
-    }
+    managers = scenarios.build_managers(spec, loop)
     orch = Orchestrator(
         managers, loop=loop, policy=ElasticScheduler(), incremental=True,
         shards=shards, plan_mode=plan_mode, transport=transport,
         wire_codec=wire_codec, commit_mode=commit_mode,
     )
-    wave_no = [0]
     if pre_run is not None:
         pre_run(orch)
-
-    def submit_wave() -> None:
-        w = wave_no[0]
-        wave_no[0] += 1
-        for k in range(SHARD_POOLS):
-            for i in range(per_pool):
-                orch.submit(_fleet_action(k, w, i))
-        if w + 1 < waves:
-            orch.loop.call_after(period_s, submit_wave)
-
-    submit_wave()
+    scenarios.install_scenario(spec, orch)
     # warm-up: the first wave primes queues, caches, and pool state;
     # reset EVERY shard counter so the reported latency, wall, balance,
     # and conflict figures all cover the same post-warm-up window
@@ -886,25 +788,16 @@ def check_shards(rows: List[Dict[str, object]], shards: int = 4) -> None:
 #: after the warm-up window (the wire counters reset at ~4s) so every
 #: loss lands in the measured figures; the horizon filter in run_chaos
 #: keeps low --scale runs meaningful.
-CHAOS_KILL_TIMES = (5.0, 9.0, 13.0, 21.0, 29.0, 37.0)
-
-#: Packet-fault schedules (shard -> request index -> fault).  Indices
-#: start at 3 so no fault burns inside the warm-up window where the
-#: telemetry is reset.  The amnesia plan is separate: silent worker
-#: replacement exercises the stale-ref storm (typed protocol errors +
-#: full re-send), not the transport-loss rail, and the gate checks the
-#: two stay distinguishable.
-CHAOS_FAULT_PLAN = {
-    0: {3: "drop_recv", 7: "amnesia", 10: "truncate"},
-    1: {4: "drop_submit", 8: "amnesia"},
-    2: {5: "amnesia", 9: "drop_recv"},
-}
-CHAOS_AMNESIA_PLAN = {
-    0: {3: "amnesia", 6: "amnesia"},
-    1: {4: "amnesia"},
-    2: {5: "amnesia"},
-    3: {7: "amnesia"},
-}
+# The chaos fault schedules live in their ScenarioSpecs
+# (repro.core.scenarios.chaos_*_spec): kill times all land after the
+# warm-up window; the packet-fault indices start at 3 so no fault burns
+# inside the window where the telemetry is reset.  The amnesia plan is
+# separate: silent worker replacement exercises the stale-ref storm
+# (typed protocol errors + full re-send), not the transport-loss rail,
+# and the gate checks the two stay distinguishable.
+CHAOS_KILL_TIMES = scenarios.chaos_storm_spec().kill_times()
+CHAOS_FAULT_PLAN = scenarios.chaos_packet_spec().packet_plan()
+CHAOS_AMNESIA_PLAN = scenarios.chaos_amnesia_spec().packet_plan()
 
 
 def run_chaos(scale: float = 1.0, shards: int = 4) -> List[Dict[str, object]]:
@@ -1370,96 +1263,30 @@ def check_rebalance(rows: List[Dict[str, object]]) -> None:
 # ---------------------------------------------------------------------------
 
 #: Configured fair-share weights; targets are w_i / sum(w).
-FAIRNESS_WEIGHTS = {"heavy0": 2.0, "heavy1": 2.0, "light0": 1.0, "light1": 1.0}
+FAIRNESS_WEIGHTS = scenarios.FAIRNESS_WEIGHTS
 FAIRNESS_HORIZON_S = 90.0  # saturated measurement window (virtual seconds)
 
 
-def _tenant_action(task: str, i: int) -> Action:
-    """Mixed cpu/gpu tenant streams: heavy tasks burst long scalable
-    reward jobs (plus TP-scalable GPU scoring), light tasks stream short
-    rigid tool calls — the exact shape where cross-task FCFS starves the
-    light tenants behind a heavy wave."""
-    heavy = task.startswith("heavy")
-    i += 3 * (task.endswith("1"))  # de-phase the twin tenants' streams
-    if heavy and i % 6 == 5:
-        return Action(
-            name="rm:score",
-            cost={"gpu": ResourceRequest("gpu", (1, 2, 4))},
-            key_resource="gpu",
-            elasticity=AmdahlElasticity(0.15),
-            base_duration=1.0 + 0.2 * (i % 3),
-            service="rm0",
-            task_id=task,
-            trajectory_id=f"{task}-{i}",
-        )
-    if heavy:
-        return Action(
-            name="reward",
-            cost={"cpu": ResourceRequest("cpu", (2, 4, 8))},
-            key_resource="cpu",
-            elasticity=AmdahlElasticity(0.08),
-            base_duration=3.5 + 0.3 * (i % 4),
-            task_id=task,
-            trajectory_id=f"{task}-{i}",
-        )
-    if i % 8 == 7:
-        return Action(
-            name="rm:probe",
-            cost={"gpu": fixed("gpu", 1)},
-            base_duration=0.3,
-            service="rm0",
-            task_id=task,
-            trajectory_id=f"{task}-{i}",
-        )
-    return Action(
-        name="tool",
-        cost={"cpu": fixed("cpu", 1)},
-        base_duration=0.4 + 0.1 * (i % 3),
-        task_id=task,
-        trajectory_id=f"{task}-{i}",
-    )
+# The tenant mix (heavy tasks bursting long scalable reward jobs +
+# TP-scalable GPU scoring, light tasks streaming short rigid tool calls
+# — the exact shape where cross-task FCFS starves the light tenants
+# behind a heavy wave) is declared in ``scenarios.fairness_spec``; the
+# frozen pre-factory generator is pinned in tests/test_scenarios.py
+# with a trace-equivalence test.
 
 
 def _run_fairness(fair: bool, horizon: float, tasks=None):
     """Saturated multi-tenant churn: every task keeps a queued backlog
     through ``horizon`` via wave refills (each task's completions refill
     in same-timestamp bursts — the paper's rollout-batch arrival shape)."""
-    from repro.core.cluster import GpuNodeSpec
-    from repro.core.fairqueue import FairSharePolicy
-    from repro.core.managers.gpu import GpuManager, ServiceSpec
     from repro.core.simulator import EventLoop
 
-    tasks = list(tasks or FAIRNESS_WEIGHTS)
+    spec = scenarios.fairness_spec(horizon_s=horizon, tasks=tasks)
     loop = EventLoop()
-    managers = {
-        "cpu": CpuManager([CpuNodeSpec("n0", cores=16)]),
-        "gpu": GpuManager([GpuNodeSpec("g0")], [ServiceSpec("rm0", 40.0)]),
-    }
-    fs = FairSharePolicy(weights=dict(FAIRNESS_WEIGHTS)) if fair else None
+    managers = scenarios.build_managers(spec, loop)
+    fs = scenarios.build_fair_share(spec) if fair else None
     orch = Orchestrator(managers, loop=loop, policy=ElasticScheduler(), fair_share=fs)
-    wave = 6
-    counters = {t: 0 for t in tasks}
-    pending_wave = {t: 0 for t in tasks}
-
-    def submit(task: str, burst: int) -> None:
-        for _ in range(burst):
-            i = counters[task]
-            counters[task] += 1
-            fut = orch.submit(_tenant_action(task, i))
-            fut.add_done_callback(lambda _f, t=task: refill(t))
-
-    def refill(task: str) -> None:
-        # wave arrivals: every ``wave`` completions of a task trigger one
-        # same-timestamp burst of replacements, keeping its backlog deep.
-        if orch.now >= horizon:
-            return
-        pending_wave[task] += 1
-        if pending_wave[task] >= wave:
-            pending_wave[task] = 0
-            submit(task, wave)
-
-    for k, t in enumerate(tasks):
-        orch.loop.call_after(0.001 * k, lambda t=t: submit(t, 2 * wave))
+    scenarios.install_scenario(spec, orch)
     orch.run(until=horizon * 2)
     return orch
 
@@ -1562,6 +1389,262 @@ def check_fairness(rows: List[Dict[str, object]]) -> None:
         raise SystemExit("single-task fairness run diverged from the FCFS path")
 
 
+# ---------------------------------------------------------------------------
+# Generated suite: spec-driven scenarios from the scenario factory
+# (repro.core.scenarios), the differential replay rail, and the
+# wave-forming gate result
+# ---------------------------------------------------------------------------
+
+#: Wave-forming gate floors (CI).  Measured on the generated
+#: deep-congestion scenario (24-deep burst of near-linear scalable
+#: actions, DoP up to 32, against 48 cores): the gated config
+#: (``estimate_units="dp_avg"`` + ``eviction_search="exhaustive"`` +
+#: ``dop_floor=8``) wins ~1.21x mean ACT, while on the mid-congestion
+#: control (3-deep, absorbable near max DoP) it is exactly a no-op
+#: (1.000x) — the separation EXPERIMENTS.md's hand-written scenarios
+#: could not produce.  The DES is deterministic, so the floors sit just
+#: under the measured values.
+GEN_GATE_DEEP_FLOOR = 1.12
+GEN_GATE_MID_BAND = (0.95, 1.08)
+GEN_GATE_SEPARATION_FLOOR = 1.10
+
+#: Live-mode compression: the live smoke runs the virtual scenario at a
+#: quarter of its virtual timescale (real seconds of kernel work).
+GEN_LIVE_TIME_SCALE = 0.25
+
+
+def _run_spec_sim(spec, gated: bool = False, time_scale: float = 1.0,
+                  compiled=None):
+    """One DES run of a scenario spec on the generic spec-driven path
+    (managers, fair share, and the optionally-gated scheduler all built
+    from the spec)."""
+    from repro.core.simulator import EventLoop
+
+    compiled = compiled or scenarios.compile_scenario(
+        spec, time_scale=time_scale)
+    loop = EventLoop()
+    orch = Orchestrator(
+        scenarios.build_managers(spec, loop),
+        loop=loop,
+        policy=scenarios.build_policy(spec, gated=gated),
+        fair_share=scenarios.build_fair_share(spec),
+        incremental=True,
+    )
+    scenarios.install_scenario(compiled, orch)
+    horizon = spec.arrival.horizon_s
+    orch.run(until=horizon * 2 * time_scale if horizon else None)
+    return orch
+
+
+def _spec_rows(spec, prefix: str) -> List[Dict[str, object]]:
+    """Rows for one externally-supplied spec file (``--spec``): the
+    deterministic stream fingerprint, the run, and — when the spec
+    carries scheduler-knob overrides — the gated-vs-baseline ACT win."""
+    compiled = scenarios.compile_scenario(spec)
+    base = _run_spec_sim(spec, compiled=compiled)
+    acts = [r.finish - r.submit for r in base.telemetry.records]
+    acts.sort()
+    p99 = acts[int(0.99 * (len(acts) - 1))] if acts else 0.0
+    rows: List[Dict[str, object]] = [
+        {
+            "name": f"{prefix}_events",
+            "us_per_call": float(len(base.telemetry.records)),
+            "mean_act": base.telemetry.mean_act(),
+            "derived": (
+                f"fingerprint={compiled.fingerprint()[:12]};"
+                f"p99_act={p99:.3f};seed={spec.seed}"
+            ),
+        },
+    ]
+    if spec.policy:
+        gated = _run_spec_sim(spec, gated=True, compiled=compiled)
+        rows.append(
+            {
+                "name": f"{prefix}_gate_win",
+                "us_per_call": base.telemetry.mean_act()
+                / max(1e-9, gated.telemetry.mean_act()),
+                "mean_act": gated.telemetry.mean_act(),
+                "derived": f"policy={sorted(spec.policy)};"
+                           "x_baseline_act_over_gated",
+            }
+        )
+    return rows
+
+
+def run_generated(scale: float = 1.0, spec_path: Optional[str] = None,
+                  live: bool = False) -> List[Dict[str, object]]:
+    """Generated-suite rows.
+
+    Default set (the committed ``BENCH_generated.json`` baseline):
+
+    * ``generated_stream_bitidentical`` — the replay rail: every
+      registered scenario compiled twice produces byte-identical event
+      streams, and survives the wire-dict codec round trip;
+    * ``generated_fleet_us_per_event`` — decision latency on the
+      spec-driven fleet churn (the latency trend row);
+    * ``generated_gate_win_deep`` / ``_mid`` / ``_separation`` — the
+      wave-forming gate result on the generated deep-congestion
+      scenario vs its mid-congestion control;
+    * ``generated_heavy_tail`` / ``generated_diurnal`` — the
+      production-shaped open-loop scenarios (Pareto tool latencies,
+      sinusoid-modulated Poisson arrivals), reported informationally;
+    * ``generated_live_structural_identical`` (``--live``) — the same
+      compiled stream run in sim and in live mode (real JAX kernel
+      work on emulated XLA host devices), per-pool launch order
+      compared structurally, live timing reported in ``derived`` only.
+
+    ``--spec FILE`` appends rows for an externally-supplied scenario
+    file instead of requiring a new Python function."""
+    rows: List[Dict[str, object]] = []
+
+    # (a) the bit-identical replay rail, over every registered builder
+    stable = True
+    fp = ""
+    for name, builder in sorted(scenarios.SCENARIO_BUILDERS.items()):
+        spec = builder()
+        c1 = scenarios.compile_scenario(spec)
+        c2 = scenarios.compile_scenario(spec)
+        rt = scenarios.decode_scenario(scenarios.encode_scenario(spec))
+        c3 = scenarios.compile_scenario(rt)
+        if not (c1.stream_bytes() == c2.stream_bytes() == c3.stream_bytes()):
+            stable = False
+        if name == "deep_congestion":
+            fp = c1.fingerprint()[:12]
+    rows.append(
+        {
+            "name": "generated_stream_bitidentical",
+            "us_per_call": 1.0 if stable else 0.0,
+            "mean_act": "",
+            "derived": (
+                f"builders={len(scenarios.SCENARIO_BUILDERS)};"
+                f"deep_fingerprint={fp};"
+                "1=same spec+seed -> byte-identical stream, codec-stable"
+            ),
+        }
+    )
+
+    # (b) decision latency on the spec-driven fleet churn
+    waves = max(6, int(16 * scale))
+    fleet = _run_shard_churn(None, queue=128, waves=waves)
+    rows.append(
+        {
+            "name": "generated_fleet_us_per_event",
+            "us_per_call": fleet["sched_us_per_event"],
+            "mean_act": fleet["mean_act"],
+            "derived": f"spec=fleet_churn;queue=128;waves={waves};"
+                       f"events={fleet['events']}",
+        }
+    )
+
+    # (c) the wave-forming gate: deep vs mid congestion
+    wins = {}
+    for label, mk in (("deep", scenarios.deep_congestion_spec),
+                      ("mid", scenarios.mid_congestion_spec)):
+        spec = mk()
+        base = _run_spec_sim(spec)
+        gated = _run_spec_sim(spec, gated=True)
+        win = base.telemetry.mean_act() / max(1e-9, gated.telemetry.mean_act())
+        wins[label] = win
+        rows.append(
+            {
+                "name": f"generated_gate_win_{label}",
+                "us_per_call": win,
+                "mean_act": gated.telemetry.mean_act(),
+                "derived": (
+                    f"baseline_act={base.telemetry.mean_act():.2f};"
+                    f"gated_act={gated.telemetry.mean_act():.2f};"
+                    "x_baseline_act_over_gated"
+                ),
+            }
+        )
+    rows.append(
+        {
+            "name": "generated_gate_separation",
+            "us_per_call": wins["deep"] / max(1e-9, wins["mid"]),
+            "mean_act": "",
+            "derived": "x_deep_win_over_mid_win;"
+                       "the gate engages under deep congestion only",
+        }
+    )
+
+    # (d) production-shaped open-loop scenarios (informational rows)
+    for name, mk in (("heavy_tail", scenarios.heavy_tail_spec),
+                     ("diurnal", scenarios.diurnal_spec)):
+        rows += _spec_rows(mk(), f"generated_{name}")
+
+    # (e) the sim-vs-live differential rail
+    if live:
+        from repro.core.live import run_live_scenario
+
+        spec = scenarios.live_smoke_spec()
+        compiled = scenarios.compile_scenario(
+            spec, time_scale=GEN_LIVE_TIME_SCALE)
+        sim = _run_spec_sim(spec, compiled=compiled)
+        sim_trace = scenarios.structural_trace(sim.telemetry.records)
+        t0 = time.perf_counter()
+        live_orch = run_live_scenario(compiled)
+        wall = time.perf_counter() - t0
+        live_trace = scenarios.structural_trace(live_orch.telemetry.records)
+        acts = [r.finish - r.submit for r in live_orch.telemetry.records]
+        live_act = statistics.fmean(acts) if acts else 0.0
+        rows.append(
+            {
+                "name": "generated_live_structural_identical",
+                "us_per_call": 1.0 if sim_trace == live_trace else 0.0,
+                "mean_act": sim.telemetry.mean_act(),
+                "derived": (
+                    f"live_mean_act_s={live_act:.3f};live_wall_s={wall:.1f};"
+                    f"records={len(live_orch.telemetry.records)};"
+                    f"time_scale={GEN_LIVE_TIME_SCALE};"
+                    "1=per-pool launch order identical sim vs live "
+                    "(real kernel work; live timing never compared)"
+                ),
+            }
+        )
+
+    # (f) an externally-supplied spec file
+    if spec_path:
+        spec = scenarios.load_scenario(spec_path)
+        rows += _spec_rows(spec, f"generated_spec_{spec.name}")
+    return rows
+
+
+def check_generated(rows: List[Dict[str, object]],
+                    live: bool = False) -> None:
+    """CI scenario-smoke gates: the replay rail holds bit-identically,
+    the wave-forming gate wins under deep congestion, stays a no-op
+    under mid congestion, separates the two regimes — and, with
+    ``--live``, the live run's launch order matches the sim's."""
+    by_name = {r["name"]: float(r["us_per_call"]) for r in rows}  # type: ignore[arg-type]
+    deep = by_name["generated_gate_win_deep"]
+    mid = by_name["generated_gate_win_mid"]
+    sep = by_name["generated_gate_separation"]
+    print(f"# generated check: bitidentical="
+          f"{by_name['generated_stream_bitidentical']:.0f} "
+          f"gate_deep={deep:.3f}x gate_mid={mid:.3f}x sep={sep:.3f}x")
+    if by_name["generated_stream_bitidentical"] != 1.0:
+        raise SystemExit("scenario compilation is not byte-deterministic")
+    if deep < GEN_GATE_DEEP_FLOOR:
+        raise SystemExit(
+            f"wave-forming gate win {deep:.3f}x under deep congestion "
+            f"(< {GEN_GATE_DEEP_FLOOR}x floor)")
+    lo, hi = GEN_GATE_MID_BAND
+    if not (lo <= mid <= hi):
+        raise SystemExit(
+            f"gate not a no-op under mid congestion: {mid:.3f}x outside "
+            f"[{lo}, {hi}]")
+    if sep < GEN_GATE_SEPARATION_FLOOR:
+        raise SystemExit(
+            f"deep/mid separation {sep:.3f}x < "
+            f"{GEN_GATE_SEPARATION_FLOOR}x floor")
+    if live:
+        flag = by_name.get("generated_live_structural_identical")
+        if flag != 1.0:
+            raise SystemExit(
+                "live-mode launch order diverged from the sim "
+                f"(flag={flag})")
+
+
 CHECK_SCENARIO = "schedule_depth2_queue128"
 
 
@@ -1576,11 +1659,14 @@ def write_json(rows: List[Dict[str, object]], path: str) -> None:
         # ns_per_op trend.
         # chaos_* rows are flags/counts and rebalance_* rows virtual-time
         # ACTs — none of them are wall-clock latencies either.
+        # generated_* rows are flags/ratios/virtual figures too, except
+        # the explicit us_per_event latency trend row.
         is_ratio = (
             "speedup" in name
             or name.startswith("fairness_")
             or name.startswith("chaos_")
             or name.startswith("rebalance_")
+            or (name.startswith("generated_") and "us_per" not in name)
             or name.endswith("_traces_identical")
         )
         scenarios[name] = {
@@ -1622,6 +1708,7 @@ _SUITE_JSON = {
     "shards": "BENCH_shards.json",
     "remote": "BENCH_remote.json",
     "chaos": "BENCH_chaos.json",
+    "generated": "BENCH_generated.json",
 }
 
 
@@ -1632,6 +1719,8 @@ def main(
     suite: str = "latency",
     shards: int = 4,
     transport: str = "loopback",
+    spec: Optional[str] = None,
+    live: bool = False,
 ) -> None:
     if scale == "large" and suite != "chaos":
         raise SystemExit("--scale large is only meaningful with --suite chaos")
@@ -1666,6 +1755,15 @@ def main(
             write_json(chaos_rows, json_path)
         if check:
             check_chaos(chaos_rows)
+        return
+    if suite == "generated":
+        gen_rows = run_generated(scale, spec_path=spec, live=live)
+        emit(gen_rows,
+             "generated scenarios: replay rail, wave-forming gate, live mode")
+        if json_path:
+            write_json(gen_rows, json_path)
+        if check:
+            check_generated(gen_rows, live=live)
         return
     if suite == "fairness":
         fairness_rows = run_fairness(scale)
@@ -1720,7 +1818,8 @@ if __name__ == "__main__":
                          "(shards), or the trace-identity / wire-exercised "
                          "gates (remote)")
     ap.add_argument("--suite",
-                    choices=("latency", "fairness", "shards", "remote", "chaos"),
+                    choices=("latency", "fairness", "shards", "remote",
+                             "chaos", "generated"),
                     default="latency",
                     help="latency = decision-latency scenarios (default); "
                          "fairness = multi-tenant weighted-share scenario; "
@@ -1729,7 +1828,20 @@ if __name__ == "__main__":
                          "(plus the asymmetric-fleet rebalance rows), with "
                          "serialization overhead reported separately; "
                          "chaos = socket-fleet churn under kill/restart "
-                         "storms and packet-level fault injection")
+                         "storms and packet-level fault injection; "
+                         "generated = spec-driven scenarios from the "
+                         "scenario factory (replay rail, wave-forming "
+                         "gate, optional --live kernel runs)")
+    ap.add_argument("--spec", default=None,
+                    help="generated suite: path to a scenario spec file "
+                         "(JSON envelope, see docs/scenarios.md) to bench "
+                         "in addition to the registered scenarios — a new "
+                         "workload is a spec file, not a Python function")
+    ap.add_argument("--live", action="store_true",
+                    help="generated suite: also run the live-mode smoke "
+                         "(real JAX kernel work on emulated XLA host "
+                         "devices under RealClock) and gate sim-vs-live "
+                         "launch-order equivalence")
     ap.add_argument("--shards", type=int, default=4,
                     help="shard count for the fleet-churn scenario (the "
                          "plan/commit engine's parallel planners)")
@@ -1745,5 +1857,11 @@ if __name__ == "__main__":
         # own file — it has no committed CI-scale baseline to protect)
         args.json = ("BENCH_chaos_large.json" if args.scale == "large"
                      else _SUITE_JSON[args.suite])
+    if args.live and args.suite == "generated":
+        # set the emulated-device flag before ANY jax import (the core
+        # import chain is jax-free, so this is still early enough here)
+        from repro.core.live import ensure_host_devices
+
+        ensure_host_devices(len(scenarios.live_smoke_spec().pools))
     main(args.scale, args.json, args.check, args.suite, args.shards,
-         args.transport)
+         args.transport, args.spec, args.live)

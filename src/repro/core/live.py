@@ -1,0 +1,303 @@
+"""Live mode: the scenario harness on real time and real work.
+
+The DES benches model an action as a duration; live mode *runs* it — a
+real payload (JAX kernel work from :mod:`repro.kernels.ops`) on a
+thread-pool worker, against :class:`~repro.core.simulator.RealClock`,
+over a fleet of emulated XLA host devices
+(``--xla_force_host_platform_device_count``, so CI exercises a
+multi-device fleet on plain CPU).
+
+The control plane is unchanged: :class:`LiveOrchestrator` overrides
+exactly one method (``_schedule_completion`` — the seam
+:class:`~repro.core.orchestrator.Orchestrator` exposes for this) so a
+launch dispatches the payload instead of arming a virtual timer, and
+completion happens when the work actually returns.  Everything else —
+queues, scheduler, managers, fairness, telemetry — is the same code the
+sim runs, which is what makes the **differential replay rail** honest:
+the same compiled :class:`~repro.core.scenarios.CompiledScenario` drives
+both modes, and the live run's launch trace must be *structurally*
+equivalent to the sim's (same per-pool launch order; real timing is
+reported separately, never compared — see
+:func:`repro.core.scenarios.structural_trace`).
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+import os
+import threading
+import time
+from collections import deque
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, Dict, List, Optional
+
+from repro.core.action import Action
+from repro.core.orchestrator import Orchestrator
+from repro.core.scenarios import ActionTemplate, CompiledScenario
+from repro.core.simulator import RealClock, _Event
+
+
+class LiveModeError(RuntimeError):
+    """Live-mode environment failure (devices unavailable, jax imported
+    too early to emulate the requested fleet, ...)."""
+
+
+def ensure_host_devices(n: int) -> list:
+    """Return ``n`` emulated XLA host devices, setting
+    ``--xla_force_host_platform_device_count`` if jax has not been
+    imported yet.  The bench CLI calls this before any jax import; a
+    caller who imported jax first (fixing the device count at 1) gets a
+    typed error, not a silently single-device run."""
+    import sys
+
+    flag = f"--xla_force_host_platform_device_count={n}"
+    if "jax" not in sys.modules:
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "--xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (flags + " " + flag).strip()
+    import jax
+
+    devices = jax.devices()
+    if len(devices) < n:
+        raise LiveModeError(
+            f"live mode needs {n} host devices, jax sees {len(devices)} "
+            f"(set XLA_FLAGS={flag} before the first jax import)"
+        )
+    return list(devices[:n])
+
+
+class LiveEventLoop:
+    """The event loop on wall time.
+
+    Same surface as :class:`~repro.core.simulator.EventLoop` (``call_at``
+    / ``call_after`` / ``cancel`` / ``run`` / ``pending`` / ``clock``),
+    but timers fire at real instants and worker threads hand completions
+    back with :meth:`post` (callbacks always execute on the loop thread,
+    so the orchestrator stays single-threaded exactly as in sim mode).
+    ``run`` drains until there are no timers, no posted callbacks, and
+    no retained in-flight work."""
+
+    def __init__(self) -> None:
+        self.clock = RealClock()
+        self._heap: List[_Event] = []
+        self._seq = itertools.count()
+        self._posted: deque = deque()
+        self._cond = threading.Condition()
+        self._inflight = 0
+
+    # -- scheduling (loop thread) --------------------------------------
+    def call_at(self, when: float, callback: Callable[[], None]) -> _Event:
+        # real time moved on while the caller computed `when`; a
+        # slightly-past deadline just means "as soon as possible"
+        ev = _Event(when=when, seq=next(self._seq), callback=callback)
+        with self._cond:
+            heapq.heappush(self._heap, ev)
+            self._cond.notify()
+        return ev
+
+    def call_after(self, delay: float, callback: Callable[[], None]) -> _Event:
+        return self.call_at(self.clock.now() + max(0.0, delay), callback)
+
+    def cancel(self, ev: _Event) -> None:
+        ev.cancelled = True
+
+    def pending(self) -> int:
+        with self._cond:
+            return sum(1 for e in self._heap if not e.cancelled)
+
+    # -- worker-thread handoff -----------------------------------------
+    def retain(self) -> None:
+        """Mark one unit of off-loop work in flight (keeps ``run`` from
+        exiting while a payload is still executing)."""
+        with self._cond:
+            self._inflight += 1
+
+    def release(self) -> None:
+        with self._cond:
+            self._inflight -= 1
+            self._cond.notify()
+
+    def post(self, callback: Callable[[], None]) -> None:
+        """Enqueue a callback from any thread; it runs on the loop
+        thread ahead of timer events."""
+        with self._cond:
+            self._posted.append(callback)
+            self._cond.notify()
+
+    # -- the loop -------------------------------------------------------
+    def run(self, until: Optional[float] = None,
+            max_events: int = 1_000_000) -> float:
+        n = 0
+        while True:
+            cb: Optional[Callable[[], None]] = None
+            with self._cond:
+                while True:
+                    now = self.clock.now()
+                    if until is not None and now >= until:
+                        return now
+                    if self._posted:
+                        cb = self._posted.popleft()
+                        break
+                    while self._heap and self._heap[0].cancelled:
+                        heapq.heappop(self._heap)
+                    if self._heap and self._heap[0].when <= now:
+                        cb = heapq.heappop(self._heap).callback
+                        break
+                    if not self._heap and self._inflight == 0:
+                        return now
+                    deadline = self._heap[0].when if self._heap else None
+                    timeout = (None if deadline is None
+                               else max(0.0, deadline - now))
+                    if until is not None:
+                        wall = max(0.0, until - now)
+                        timeout = wall if timeout is None else min(timeout, wall)
+                    self._cond.wait(timeout)
+            cb()
+            n += 1
+            if n >= max_events:
+                raise RuntimeError(f"event budget exceeded ({max_events})")
+
+
+class LiveOrchestrator(Orchestrator):
+    """The orchestrator on real work: launches dispatch the action's
+    payload (``action.fn``, or a real sleep of the modeled duration) to
+    a thread pool, and completion fires when the payload returns.  All
+    other lifecycle paths — withdraw, deadline/retry, telemetry — are
+    the inherited sim-mode code."""
+
+    def __init__(self, managers, *, loop: Optional[LiveEventLoop] = None,
+                 max_workers: int = 8, **kwargs) -> None:
+        super().__init__(managers, loop=loop or LiveEventLoop(), **kwargs)
+        self._pool = ThreadPoolExecutor(
+            max_workers=max_workers, thread_name_prefix="live-action")
+
+    def _schedule_completion(self, action: Action, duration: float,
+                             overhead: float) -> None:
+        # the modeled finish is only an estimate; the real one is
+        # stamped when the payload returns
+        action.finish_time = self.now + overhead + duration
+        loop = self.loop
+        loop.retain()
+
+        def work() -> None:
+            t0 = time.monotonic()
+            try:
+                if action.fn is not None:
+                    action.fn()
+                else:
+                    time.sleep(duration)
+            finally:
+                real_s = time.monotonic() - t0
+                loop.post(lambda: self._on_live_done(action, real_s))
+
+        self._pool.submit(work)
+
+    def _on_live_done(self, action: Action, real_s: float) -> None:
+        try:
+            if action.uid not in self._executing:
+                return  # withdrawn (timeout/cancel) while the work ran
+            action.finish_time = self.now
+            self._complete(action, real_s)
+        finally:
+            self.loop.release()
+
+    def close(self) -> None:
+        self._pool.shutdown(wait=True)
+        super().close()
+
+
+# ---------------------------------------------------------------------------
+# Kernel payloads: real JAX work per emulated device
+# ---------------------------------------------------------------------------
+
+
+def kernel_payload_factory(
+    devices: list, pool_device: Dict[str, int], *, rows: int = 64,
+    cols: int = 64,
+) -> Callable[[ActionTemplate], Callable[[], None]]:
+    """Payloads that spin a real Pallas kernel (``rmsnorm_op``,
+    interpret mode — CPU-safe) on the template's pool's device until
+    the template's (time-scaled) duration has elapsed.  Call
+    :func:`warm_devices` first: the first call per device pays that
+    device's jit compile, which would otherwise distort the run."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.ops import rmsnorm_op
+
+    def factory(template: ActionTemplate) -> Callable[[], None]:
+        dev = devices[pool_device.get(template.rtype, 0) % len(devices)]
+        target_s = template.base_duration
+
+        def fn() -> None:
+            x = jax.device_put(jnp.ones((rows, cols), jnp.float32), dev)
+            w = jax.device_put(jnp.ones((cols,), jnp.float32), dev)
+            t0 = time.monotonic()
+            out = None
+            while time.monotonic() - t0 < target_s:
+                out = rmsnorm_op(x, w, interpret=True)
+            if out is not None:
+                jax.block_until_ready(out)
+
+        return fn
+
+    return factory
+
+
+def warm_devices(devices: list, *, rows: int = 8, cols: int = 64) -> None:
+    """One kernel call per device before the timed run (per-device jit
+    specialization: each device's first call recompiles)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.ops import rmsnorm_op
+
+    for dev in devices:
+        x = jax.device_put(jnp.ones((rows, cols), jnp.float32), dev)
+        w = jax.device_put(jnp.ones((cols,), jnp.float32), dev)
+        jax.block_until_ready(rmsnorm_op(x, w, interpret=True))
+
+
+# ---------------------------------------------------------------------------
+# The live runner (what the bench + CI smoke call)
+# ---------------------------------------------------------------------------
+
+
+def run_live_scenario(
+    compiled: CompiledScenario,
+    *,
+    devices: Optional[list] = None,
+    max_workers: Optional[int] = None,
+    wall_limit_s: float = 300.0,
+    use_kernels: bool = True,
+):
+    """Run a compiled scenario in live mode; returns the orchestrator
+    (telemetry carries the real-time records).  ``use_kernels=False``
+    substitutes real sleeps for kernel work (same structural trace,
+    no jax dependency — the fallback when jax is unavailable)."""
+    from repro.core.scenarios import build_fair_share, build_managers, \
+        install_scenario
+    from repro.core.scheduler import ElasticScheduler
+
+    spec = compiled.spec
+    loop = LiveEventLoop()
+    managers = build_managers(spec, loop)
+    orch = LiveOrchestrator(
+        managers,
+        loop=loop,
+        policy=ElasticScheduler(),
+        fair_share=build_fair_share(spec),
+        incremental=True,
+        max_workers=max_workers or max(4, 2 * len(spec.pools)),
+    )
+    payload = None
+    if use_kernels:
+        devs = devices or ensure_host_devices(len(spec.pools))
+        warm_devices(devs)
+        pool_device = {p.name: i for i, p in enumerate(spec.pools)}
+        payload = kernel_payload_factory(devs, pool_device)
+    install_scenario(compiled, orch, payload=payload)
+    orch.run(until=wall_limit_s)
+    orch.close()
+    return orch

@@ -975,11 +975,24 @@ class Orchestrator:
 
         key_units = units.get(action.key_resource or "", None)
         duration = self._duration_of(action, key_units)
+        self._schedule_completion(action, duration, overhead)
+        return True
+
+    def _schedule_completion(
+        self, action: Action, duration: float, overhead: float
+    ) -> None:
+        """Arm the completion of a launched action.
+
+        The DES completes by clock: a single timer at the modeled finish
+        instant.  This is the live-mode seam — a live orchestrator
+        (:class:`repro.core.live.LiveOrchestrator`) overrides this one
+        method to run the action's real payload on a worker thread and
+        complete when the work actually returns, leaving every other
+        lifecycle path (withdraw, deadline, retry, telemetry) shared."""
         action.finish_time = self.now + overhead + duration
         self._completion_ev[action.uid] = self.loop.call_at(
             action.finish_time, lambda: self._complete(action, duration)
         )
-        return True
 
     def _duration_of(self, action: Action, key_units: Optional[int]) -> float:
         return duration_of(action, key_units, self.history)

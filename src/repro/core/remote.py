@@ -197,7 +197,14 @@ class RemoteShardWorker:
     table itself holds exactly one live manager per resource type —
     bounded by the managed fleet, not by history.)"""
 
-    def __init__(self, cache_budget: int = CACHE_BUDGET_BYTES) -> None:
+    def __init__(self, cache_budget: int = CACHE_BUDGET_BYTES,
+                 plan_delay_s: float = 0.0) -> None:
+        # straggler injection (scenario fault schedules): a positive
+        # delay is real wall time slept inside each partition's plan
+        # window, so the per-partition ``wall_s`` the worker reports —
+        # and hence the client's plan-cost EWMA that feeds the rebalance
+        # cadence — honestly reflects the slow worker.
+        self.plan_delay_s = plan_delay_s
         self._policy: Optional[Any] = None
         self._policy_fp: Optional[str] = None
         self._fair_share: Optional[Any] = None
@@ -645,8 +652,9 @@ class RemoteShardWorker:
         shard = ctx["shard"]
 
         t_plan = time.perf_counter()
-        plans = [
-            plan_partition(
+        plans = []
+        for part, waiting in ctx["waiting_by_part"].items():
+            p = plan_partition(
                 part,
                 waiting,
                 ctx["executing"],
@@ -657,8 +665,11 @@ class RemoteShardWorker:
                 ctx["incremental"],
                 shard=shard,
             )
-            for part, waiting in ctx["waiting_by_part"].items()
-        ]
+            if self.plan_delay_s > 0.0:
+                t_straggle = time.perf_counter()
+                time.sleep(self.plan_delay_s)
+                p.wall_s += time.perf_counter() - t_straggle
+            plans.append(p)
         plan_s = time.perf_counter() - t_plan
 
         t_enc = time.perf_counter()

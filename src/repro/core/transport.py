@@ -251,16 +251,18 @@ def socket_fleet(
 # ---------------------------------------------------------------------------
 
 
-def serve_connection(conn: socket.socket) -> None:
+def serve_connection(conn: socket.socket, plan_delay_s: float = 0.0) -> None:
     """Serve one connection with one fresh worker until EOF.
 
     The worker's entire cache state (intern table, snapshot bases,
     resident replicas) lives and dies with the connection — a
     reconnecting client always faces a blank worker, which its
-    reset/full-resend rail expects."""
+    reset/full-resend rail expects.  ``plan_delay_s`` marks the worker
+    a plan-phase straggler (scenario fault injection — see
+    :class:`repro.core.remote.RemoteShardWorker`)."""
     from repro.core.remote import RemoteShardWorker
 
-    worker = RemoteShardWorker()
+    worker = RemoteShardWorker(plan_delay_s=plan_delay_s)
     try:
         while True:
             try:
@@ -287,7 +289,12 @@ class WorkerServer:
     client's reconnect (no port churn, deterministic under the DES
     harness)."""
 
-    def __init__(self, host: str = "127.0.0.1", port: int = 0) -> None:
+    def __init__(self, host: str = "127.0.0.1", port: int = 0,
+                 plan_delay_s: float = 0.0) -> None:
+        # per-endpoint straggler injection: every worker served from
+        # this endpoint inflates its per-partition plan wall (the
+        # scenario fault schedule's remote-path straggler lever)
+        self.plan_delay_s = plan_delay_s
         srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         srv.bind((host, port))
@@ -323,7 +330,8 @@ class WorkerServer:
                 self._conns.append(conn)
                 self._conns = [c for c in self._conns if c.fileno() != -1]
             t = threading.Thread(
-                target=serve_connection, args=(conn,), daemon=True
+                target=serve_connection, args=(conn, self.plan_delay_s),
+                daemon=True,
             )
             t.start()
             self._threads.append(t)

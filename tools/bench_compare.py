@@ -80,6 +80,17 @@ REQUIRED_ROWS: Dict[str, frozenset] = {
         "chaos_kill_storm_traces_identical",
         "chaos_amnesia_traces_identical",
     }),
+    "BENCH_generated.json": frozenset({
+        # the differential replay rail and the wave-forming gate result
+        # (scenario-smoke runs the suite with --live, so the sim-vs-live
+        # structural-equivalence flag is load-bearing too)
+        "generated_stream_bitidentical",
+        "generated_gate_win_deep",
+        "generated_gate_win_mid",
+        "generated_gate_separation",
+        "generated_live_structural_identical",
+        "generated_fleet_us_per_event",
+    }),
 }
 
 
